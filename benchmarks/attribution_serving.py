@@ -1,0 +1,54 @@
+"""Serving-time attribution cost — the paper's 'real-time XAI' claim at the
+LM scale: decode throughput vs explanation-request latency, same weights."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.launch import steps as steps_lib
+from repro.models import transformer as tf
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    cfg = configs.get_smoke("qwen2-1.5b")
+    params = tf.init(jax.random.PRNGKey(0), cfg)
+    b, s = 4, 64
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    batch = {"tokens": prompts}
+    rows = []
+
+    cache = tf.init_cache(cfg, b, s + 16)
+    prefill = jax.jit(steps_lib.make_prefill_step(cfg))
+    us = _time(prefill, params, batch, cache)
+    rows.append(("serve/prefill_us", us, f"b{b}_s{s}"))
+
+    nxt, cache = prefill(params, batch, cache)
+    decode = jax.jit(steps_lib.make_decode_step(cfg))
+    pos = jnp.asarray(s, jnp.int32)
+    us_dec = _time(decode, params, cache, nxt, pos)
+    rows.append(("serve/decode_us_per_token", us_dec, f"b{b}"))
+
+    for method in ("saliency", "deconvnet", "guided"):
+        step = jax.jit(steps_lib.make_attribute_step(cfg, method))
+        us = _time(step, params, batch)
+        rows.append((f"serve/explain_{method}_us", us,
+                     f"vs_prefill={us / max(rows[0][1], 1):.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, derived in run():
+        print(f"{name},{val:.1f},{derived}")

@@ -1,0 +1,56 @@
+"""Paper Table IV — latency of FP (inference) vs FP+BP (attribution).
+
+The FPGA measured 43-67 ms end-to-end at 100 MHz with 50-72% FP+BP
+overhead.  Portable analogues measured here on the same Table III CNN:
+
+  * wall-clock of the jit'd FP vs FP+BP programs (CPU; relative overhead
+    is the comparable number, not absolute ms), and
+  * compiled-HLO FLOPs of both programs (machine-independent).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attribution
+from repro.launch import hlo
+from repro.models import cnn
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)            # warmup / compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run():
+    cfg = cnn.CNNConfig()
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3))
+    rows = []
+
+    fp = jax.jit(lambda v: cnn.apply(params, v, cfg))
+    fp_us = _time(fp, x)
+    fp_flops = hlo.analyze(fp.lower(x).compile().as_text()).get("flops", 0)
+    rows.append(("latency/fp_us", fp_us, f"hlo_flops={fp_flops:.3e}"))
+
+    for method in ("saliency", "deconvnet", "guided"):
+        fpbp = jax.jit(lambda v: attribution.attribute(
+            lambda u: cnn.apply(params, u, cfg, method=method), v))
+        us = _time(fpbp, x)
+        flops = hlo.analyze(fpbp.lower(x).compile().as_text()).get("flops", 0)
+        rows.append((f"latency/fp_bp_{method}_us", us,
+                     f"overhead={(us - fp_us) / fp_us * 100:.0f}%_paper_50-72%"
+                     f"_flops_ratio={flops / max(fp_flops, 1):.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, derived in run():
+        print(f"{name},{val:.1f},{derived}")

@@ -1,0 +1,65 @@
+"""Per-kernel microbenchmarks (paper §III compute blocks).
+
+On CPU the Pallas kernels run in interpret mode, so absolute numbers are
+meaningless for TPU — the reported *derived* quantities are the structural
+ones: VMEM working-set bytes per tile and MXU-aligned dot shapes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d import ref as conv_ref
+from repro.kernels.pool import ref as pool_ref
+from repro.kernels.relu_mask import ref as relu_ref
+from repro.kernels.vmm import ref as vmm_ref
+
+
+def _time(fn, *args, iters=50):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    # conv (paper conv3: 16x16x32 -> 64)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 16, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 32, 64)) * 0.1
+    us = _time(jax.jit(conv_ref.conv2d), x, w)
+    tile_bytes = (18 * 18 * 32 + 3 * 3 * 32 * 64 + 16 * 16 * 64) * 4
+    rows.append(("kernel/conv2d_ref_us", us,
+                 f"vmem_tile_kb={tile_bytes / 1e3:.0f}_mxu_dot=256x32x64"))
+    us = _time(jax.jit(conv_ref.conv2d_input_grad), x_g := jax.random.normal(
+        jax.random.PRNGKey(2), (1, 16, 16, 64)), w)
+    rows.append(("kernel/conv2d_bp_ref_us", us, "flipped_transpose_reuse"))
+
+    # vmm (paper FC1: 4096 -> 128)
+    xv = jax.random.normal(jax.random.PRNGKey(3), (1, 4096))
+    wv = jax.random.normal(jax.random.PRNGKey(4), (4096, 128)) * 0.02
+    us = _time(jax.jit(vmm_ref.vmm), xv, wv)
+    rows.append(("kernel/vmm_ref_us", us, "tiles=128x512x128_f32acc"))
+
+    # fused relu+mask
+    xr = jax.random.normal(jax.random.PRNGKey(5), (256, 1024))
+    us = _time(jax.jit(relu_ref.relu_fwd), xr)
+    rows.append(("kernel/relu_mask_ref_us", us,
+                 f"mask_bytes={256 * 1024 // 8}_vs_bf16_{256 * 1024 * 2}"))
+
+    # pool + 2-bit index
+    xp = jax.random.normal(jax.random.PRNGKey(6), (8, 32, 32, 64))
+    us = _time(jax.jit(pool_ref.maxpool_fwd), xp)
+    rows.append(("kernel/maxpool_idx_ref_us", us,
+                 f"idx_bytes={8 * 16 * 16 * 64 // 4}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, derived in run():
+        print(f"{name},{val:.1f},{derived}")

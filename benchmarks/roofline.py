@@ -1,0 +1,85 @@
+"""Roofline table renderer — reads the dry-run JSONL records (§Roofline).
+
+Usage:  python -m benchmarks.roofline [path ...]
+Emits one row per (arch x shape x mesh): the three terms, the bottleneck,
+MODEL_FLOPS/HLO ratio — the §Roofline deliverable, and the before/after
+source for §Perf.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+from typing import Dict, List
+
+
+def load(paths) -> List[Dict]:
+    recs = []
+    for path in paths:
+        with open(path) as f:
+            for line in f:
+                recs.append(json.loads(line))
+    return recs
+
+
+def dedupe(recs: List[Dict]) -> List[Dict]:
+    """Keep the LAST record per (arch, shape, mesh, kind, triangle_skip)."""
+    out = {}
+    for r in recs:
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+               r.get("kind"), r.get("triangle_skip"))
+        out[key] = r
+    return list(out.values())
+
+
+def table(recs: List[Dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} {'kind':9s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+           f"{'bound':>12s} {'useful':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs = sorted(recs, key=lambda r: (r.get("arch", ""),
+                                       order.get(r.get("shape"), 9),
+                                       r.get("mesh", "")))
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+                         f"{'skipped':9s} -- {r['reason'][:60]}")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+                         f"{'ERROR':9s} {r.get('error', '')[:70]}")
+            continue
+        t = dict(r["roofline"])
+        t.setdefault("bottleneck", max(
+            ("compute_s", "memory_s", "collective_s"), key=lambda k: t[k]))
+        t.setdefault("useful_flops_ratio", 0.0)
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r.get('kind', ''):9s} "
+            f"{t['compute_s']:10.4f} {t['memory_s']:10.4f} "
+            f"{t['collective_s']:10.4f} {t['bottleneck'][:-2]:>12s} "
+            f"{min(t['useful_flops_ratio'], 9.99):7.3f}")
+    return "\n".join(lines)
+
+
+def run():
+    paths = (sys.argv[1:] if len(sys.argv) > 1
+             else sorted(glob.glob("benchmarks/results/dryrun*.jsonl")))
+    recs = dedupe(load(paths))
+    print(table(recs))
+    ok = [r for r in recs if r.get("status") == "ok"]
+    rows = []
+    for r in ok:
+        t = dict(r["roofline"])
+        t.setdefault("bottleneck", max(
+            ("compute_s", "memory_s", "collective_s"), key=lambda k: t[k]))
+        dom = t[t["bottleneck"]]
+        frac = t["compute_s"] / max(dom, 1e-12)
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", dom,
+                     f"bound={t['bottleneck']}_fraction_of_roofline={frac:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+#
+#   memory_overhead      — paper Table II + §V (3.4 Mb -> 24.7 Kb, 137x)
+#   fp_bp_overhead       — paper Table IV (FP vs FP+BP latency, 50-72%)
+#   kernels              — paper §III compute blocks (conv/VMM/ReLU/pool)
+#   attribution_serving  — 'real-time XAI' at LM scale (decode vs explain)
+#   roofline             — §Roofline terms from the dry-run artifacts
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (attribution_serving, compression, fp_bp_overhead,
+                            kernels, memory_overhead, roofline)
+    suites = [
+        ("memory_overhead", memory_overhead.run),
+        ("fp_bp_overhead", fp_bp_overhead.run),
+        ("kernels", kernels.run),
+        ("attribution_serving", attribution_serving.run),
+        ("compression", compression.run),
+        ("roofline", roofline.run),
+    ]
+    failures = 0
+    for name, fn in suites:
+        try:
+            for row, val, derived in fn():
+                print(f"{row},{val:.3f},{derived}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name},nan,FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

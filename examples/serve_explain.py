@@ -1,0 +1,61 @@
+"""Serving + attribution across architectures — the paper's 'real-time XAI'
+as a service: generate tokens, then explain which prompt tokens (or image
+patches, for the VLM) drove the prediction, with all three methods.
+
+    PYTHONPATH=src python examples/serve_explain.py [--arch qwen2-1.5b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.launch import steps as steps_lib
+from repro.launch.serve import explain, generate
+from repro.models import transformer as tf
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch)
+    params = tf.init(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    t0 = time.time()
+    toks = generate(cfg, params, prompts, max_new=8)
+    print(f"[{args.arch}] generated {toks.shape[1]} tokens/request "
+          f"in {time.time() - t0:.2f}s")
+    print("  continuations:", np.asarray(toks).tolist())
+
+    for method in ("saliency", "deconvnet", "guided"):
+        t0 = time.time()
+        _, scores = explain(cfg, params, prompts, method=method)
+        top = np.argsort(-np.abs(np.asarray(scores)), axis=1)[:, :5]
+        print(f"[{method:9s}] {time.time() - t0:.2f}s; most-relevant prompt "
+              f"positions per request: {top.tolist()}")
+
+    # VLM bonus: image-patch heatmap
+    vcfg = configs.get_smoke("llava-next-mistral-7b")
+    vparams = tf.init(jax.random.PRNGKey(0), vcfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0,
+                                          vcfg.vocab),
+             "patches": jax.random.normal(jax.random.PRNGKey(3),
+                                          (1, vcfg.n_patches, vcfg.d_model))}
+    step = jax.jit(steps_lib.make_attribute_step(vcfg, "saliency"))
+    _, scores = step(vparams, batch)
+    patch_scores = np.abs(np.asarray(scores)[0, :vcfg.n_patches])
+    print(f"[vlm] patch relevance: top patches "
+          f"{np.argsort(-patch_scores)[:4].tolist()} "
+          f"(of {vcfg.n_patches}) — the paper's heatmap at VLM scale")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""End-to-end LM training driver: a ~100M-param dense transformer trained
+for a few hundred steps on the deterministic synthetic stream, with async
+checkpointing and crash-resume.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+
+from repro.data import TokenStream
+from repro.launch.train import train_loop
+from repro.models.config import ModelConfig
+
+# ~100M params: 2*V*d (untied) + L*(4d^2 + 3*d*dff) ~= 102M
+CFG_100M = ModelConfig(
+    name="examples-100m",
+    family="dense",
+    n_layers=10,
+    d_model=640,
+    n_heads=10, n_kv=5, head_dim=64,
+    d_ff=2560,
+    vocab=50_048,
+    tie_embeddings=False,
+    dtype="float32",          # CPU-friendly; bf16 on accelerators
+    remat="none",
+    act="silu",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    print(f"model: {CFG_100M.param_count() / 1e6:.0f}M params")
+    data = TokenStream(vocab=CFG_100M.vocab, seq_len=args.seq,
+                       global_batch=args.global_batch)
+    _, losses = train_loop(CFG_100M, data, steps=args.steps,
+                           ckpt_dir=args.ckpt, ckpt_every=100,
+                           log_every=20)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(random = ln(V) = {__import__('math').log(CFG_100M.vocab):.2f})")
+
+
+if __name__ == "__main__":
+    main()

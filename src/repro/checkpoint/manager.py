@@ -1,0 +1,164 @@
+"""Sharded, atomic, async checkpointing for fault-tolerant training.
+
+Layout:  <dir>/step_<N>/shard_<H>.npz   (+ DONE marker, + LATEST pointer)
+
+* atomic: writes go to ``step_<N>.tmp`` then ``os.rename`` (POSIX-atomic);
+  the DONE marker is written only after every shard landed, so a crash
+  mid-save can never produce a checkpoint that restores partially.
+* sharded: each host saves the pytree leaves it owns (on a real multi-host
+  pod: its addressable shards; in single-process simulation: everything as
+  shard 0).  Restore concatenates nothing — leaves are stored whole per
+  shard owner, matching the deterministic host-sharding of the data/params.
+* async: ``save_async`` snapshots to host RAM (device_get) synchronously —
+  a few hundred ms — and does disk IO on a worker thread, so the train loop
+  only blocks for the RAM snapshot (the standard async-checkpoint design).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "//"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return f"k:{p.key}"
+    if hasattr(p, "idx"):
+        return f"i:{p.idx}"
+    if hasattr(p, "name"):
+        return f"n:{p.name}"
+    return str(p)
+
+
+def save(directory: str, step: int, tree, shard_id: int = 0,
+         n_shards: int = 1) -> str:
+    """Blocking save. Returns the finalized checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + f".tmp{shard_id}"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, f"shard_{shard_id}.npz"), **flat)
+    with open(os.path.join(tmp, "META.json"), "w") as f:
+        json.dump({"step": step, "n_shards": n_shards}, f)
+    if os.path.isdir(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(final, "DONE"), "w") as f:
+        f.write("ok")
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(os.path.join(directory, "LATEST.tmp"),
+               os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    ptr = os.path.join(directory, "LATEST")
+    if os.path.exists(ptr):
+        with open(ptr) as f:
+            name = f.read().strip()
+        cand = os.path.join(directory, name)
+        if os.path.exists(os.path.join(cand, "DONE")):
+            return int(name.split("_")[1])
+    # fall back to scanning (LATEST pointer lost)
+    best = None
+    if os.path.isdir(directory):
+        for name in os.listdir(directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(directory, name, "DONE")):
+                s = int(m.group(1))
+                best = s if best is None else max(best, s)
+    return best
+
+
+def restore(directory: str, like, step: Optional[int] = None,
+            shard_id: int = 0) -> Tuple[int, Any]:
+    """Restore into the structure of ``like``. Returns (step, tree)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, "DONE")):
+        raise FileNotFoundError(f"checkpoint {path} incomplete (no DONE)")
+    data = np.load(os.path.join(path, f"shard_{shard_id}.npz"))
+    flat_like, tdef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kpath, leaf in flat_like:
+        key = _SEP.join(_path_str(p) for p in kpath)
+        arr = data[key]
+        leaves.append(arr.astype(leaf.dtype).reshape(leaf.shape)
+                      if hasattr(leaf, "dtype") else arr)
+    return step, jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+
+
+class CheckpointManager:
+    """Async manager with keep-last-N retention and restart discovery."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, tree):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save(self.directory, step, host_tree)
+                self._gc()
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save_blocking(self, step: int, tree):
+        self.wait()
+        save(self.directory, step, tree)
+        self._gc()
+
+    def restore_latest(self, like):
+        self.wait()
+        return restore(self.directory, like)
+
+    def latest_step(self):
+        return latest_step(self.directory)
+
+    def _gc(self):
+        steps = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.directory, name, "DONE")):
+                steps.append(int(m.group(1)))
+        for s in sorted(steps)[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

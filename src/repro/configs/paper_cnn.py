@@ -1,0 +1,10 @@
+"""The paper's own Table III CNN for CIFAR-10 (the reproduction target)."""
+from repro.models.cnn import CNNConfig
+
+FULL = CNNConfig()                       # exact Table III: 591,274 params
+
+# Table-III-literal variant: ReLU only after FC1 (matches the paper's
+# 24.7 Kb residual accounting exactly; see DESIGN.md §1).
+TABLE_III_LITERAL = CNNConfig(conv_relu=False)
+
+SMOKE = CNNConfig(in_hw=(16, 16), channels=(8, 8), fc=(32,))

@@ -1,0 +1,43 @@
+"""16-bit fixed-point simulation (paper §IV: Q-format 16b weights/acts/grads).
+
+The FPGA uses 16-bit fixed point for activations, weights and gradients.  The
+TPU-native numeric is bf16; to validate that the paper's precision choice is
+sound on the reproduced CNN we provide a fake-quantization path: values are
+snapped to a Qm.n grid after every layer, in f32 carriers (straight-through
+estimator for the BP phase, matching how the FPGA truncates products).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def make_quantizer(int_bits: int = 7, frac_bits: int = 8):
+    """Q``int_bits``.``frac_bits`` symmetric fixed-point fake-quantizer.
+
+    Default Q7.8 (1 sign + 7 int + 8 frac = 16 bits), range (-128, 128),
+    resolution 2^-8 — the natural choice for the paper's CNN whose
+    activations stay within +-tens.
+    """
+    scale = float(2 ** frac_bits)
+    lim = float(2 ** (int_bits + frac_bits) - 1)
+
+    @jax.custom_vjp
+    def q(x):
+        return jnp.clip(jnp.round(x * scale), -lim, lim) / scale
+
+    # Straight-through: the FPGA truncates products but propagates gradient
+    # signals at full local fidelity across the quantization.
+    q.defvjp(lambda x: (q(x), None), lambda _, g: (g,))
+    return q
+
+
+fxp16 = make_quantizer(7, 8)
+
+
+def quantize_tree(tree, int_bits: int = 7, frac_bits: int = 8):
+    """Fake-quantize every leaf of a parameter pytree to Qm.n."""
+    q = make_quantizer(int_bits, frac_bits)
+    return jax.tree.map(q, tree)

@@ -1,0 +1,76 @@
+"""Bit-packed residual masks — the paper's memory optimization (§III.D, Table II).
+
+The FPGA design stores, per ReLU, a 1-bit mask (sign of the forward
+pre-activation) in BRAM, and per 2x2 max-pool, a 2-bit argmax index.  On TPU
+the analogue is a bit-packed ``uint8`` tensor living in HBM as the *only*
+residual the attribution backward pass keeps — 16x smaller than a bf16
+activation (32x vs f32) for ReLU masks, and 8x smaller than a bf16 index for
+pool indices.
+
+All helpers operate on the LAST axis and are pure ``jnp`` (shardable on any
+leading axis, differentiable-free, jit/pjit friendly).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_BIT_WEIGHTS = np.asarray([1, 2, 4, 8, 16, 32, 64, 128], dtype=np.uint8)
+_CRUMB_WEIGHTS = np.asarray([1, 4, 16, 64], dtype=np.uint8)  # 2-bit fields
+
+
+def _pad_to(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    n = x.shape[-1]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
+    return jnp.pad(x, pad)
+
+
+def pack_mask(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a boolean tensor into uint8, 8 bits per byte, along the last axis.
+
+    ``bits`` may have any shape; the last axis is padded to a multiple of 8.
+    Returns shape ``bits.shape[:-1] + (ceil(n/8),)`` uint8.
+    """
+    b = _pad_to(bits.astype(jnp.uint8), 8)
+    b = b.reshape(b.shape[:-1] + (b.shape[-1] // 8, 8))
+    return jnp.sum(b * jnp.asarray(_BIT_WEIGHTS), axis=-1, dtype=jnp.uint8)
+
+
+def unpack_mask(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_mask`; returns a bool tensor with last axis ``n``."""
+    bits = (packed[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & jnp.uint8(1)
+    bits = bits.reshape(packed.shape[:-1] + (packed.shape[-1] * 8,))
+    return bits[..., :n].astype(jnp.bool_)
+
+
+def pack_crumbs(idx: jnp.ndarray) -> jnp.ndarray:
+    """Pack values in [0, 3] into uint8, 4 per byte, along the last axis.
+
+    This is the paper's 2-bit max-pool argmax index (Fig. 5b).
+    """
+    c = _pad_to(idx.astype(jnp.uint8), 4)
+    c = c.reshape(c.shape[:-1] + (c.shape[-1] // 4, 4))
+    return jnp.sum(c * jnp.asarray(_CRUMB_WEIGHTS), axis=-1, dtype=jnp.uint8)
+
+
+def unpack_crumbs(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_crumbs`; returns int32 values in [0, 3]."""
+    shifts = jnp.asarray([0, 2, 4, 6], dtype=jnp.uint8)
+    vals = (packed[..., None] >> shifts) & jnp.uint8(3)
+    vals = vals.reshape(packed.shape[:-1] + (packed.shape[-1] * 4,))
+    return vals[..., :n].astype(jnp.int32)
+
+
+def mask_nbytes(shape) -> int:
+    """Bytes of a packed 1-bit mask for a tensor of ``shape``."""
+    n = int(np.prod(shape))
+    return (n + 7) // 8
+
+
+def crumb_nbytes(shape) -> int:
+    """Bytes of a packed 2-bit index tensor for ``shape`` windows."""
+    n = int(np.prod(shape))
+    return (n + 3) // 4

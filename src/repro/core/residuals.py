@@ -1,0 +1,87 @@
+"""Residual-memory accounting — reproduces the paper's §V "Software" claim.
+
+The paper compares, for the Table III CNN:
+
+  * autodiff-style activation caching (PyTorch/TF): **3.4 Mb**  (megabits;
+    every intermediate activation cached at fp32), vs.
+  * their analytic BP: **24.7 Kb** — only the 2-bit max-pool indices
+    (8192 + 4096 windows) plus the single FC ReLU's 128-bit mask
+    (Table III lists ReLU only after FC1), i.e.
+    ``(8192 + 4096) * 2 + 128 = 24_704 bits = 24.7 Kb`` — a **137x** cut.
+
+This module computes both sides of that comparison from a layer-shape ledger
+so the claim is checked *by construction* (tests) and reported (benchmarks),
+and generalizes the accounting to the LM-zoo archs (int8 residual policy).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Ledger:
+    """Shapes of every residual-bearing site in one forward pass (batch=1)."""
+    activations: List[Tuple[int, ...]] = field(default_factory=list)  # all cached acts
+    relu_sites: List[Tuple[int, ...]] = field(default_factory=list)   # ReLU inputs
+    pool_sites: List[Tuple[int, ...]] = field(default_factory=list)   # pooled OUTPUT shapes
+    smooth_sites: List[Tuple[int, ...]] = field(default_factory=list) # SiLU/GELU inputs
+
+    @staticmethod
+    def _n(shape) -> int:
+        return int(np.prod(shape))
+
+    # -- software baseline: cache every activation ------------------------
+    def autodiff_bits(self, act_bits: int = 32) -> int:
+        return sum(self._n(s) for s in self.activations) * act_bits
+
+    # -- the paper's analytic policy (Table II) ----------------------------
+    def analytic_bits(self, method: str = "saliency",
+                      smooth_residual_bits: int = 8) -> int:
+        bits = 0
+        if method in ("saliency", "guided"):
+            bits += sum(self._n(s) for s in self.relu_sites)          # 1 bit/elt
+            bits += sum(self._n(s) for s in self.smooth_sites) * smooth_residual_bits
+        elif method == "deconvnet":
+            bits += 0   # Table II: no ReLU mask; gradient-side rule only
+        else:
+            raise ValueError(method)
+        bits += sum(self._n(s) for s in self.pool_sites) * 2          # 2 bit/window
+        return bits
+
+    def reduction(self, method: str = "saliency", act_bits: int = 32) -> float:
+        a = self.analytic_bits(method)
+        return self.autodiff_bits(act_bits) / max(a, 1)
+
+
+def paper_cnn_ledger() -> Ledger:
+    """Ledger for the exact Table III CNN (batch=1, CIFAR-10 input).
+
+    Table III layer rows: Conv, Conv, MaxPool, Conv, Conv, MaxPool, FC, ReLU,
+    FC.  The paper's 24.7 Kb figure corresponds to pooling indices at both
+    pools plus the single listed ReLU's mask.
+    """
+    led = Ledger()
+    led.activations = [
+        (32, 32, 32),   # conv1 out
+        (32, 32, 32),   # conv2 out
+        (32, 16, 16),   # pool1 out
+        (64, 16, 16),   # conv3 out
+        (64, 16, 16),   # conv4 out
+        (64, 8, 8),     # pool2 out
+        (128,),         # fc1 out
+        (10,),          # fc2 out
+    ]
+    led.relu_sites = [(128,)]                      # the one ReLU row in Table III
+    led.pool_sites = [(32, 16, 16), (64, 8, 8)]    # pooled output shapes
+    return led
+
+
+def kb(bits: int) -> float:
+    return bits / 1e3
+
+
+def mb(bits: int) -> float:
+    return bits / 1e6

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (CifarLikeImages, TokenStream,
+                                  host_shard_bounds)
+
+__all__ = ["CifarLikeImages", "TokenStream", "host_shard_bounds"]

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (§III.B-E).
+
+Each subpackage mirrors an FPGA compute block:
+
+  conv2d/     tiled output-stationary convolution — FP, and BP reusing the
+              SAME kernel on flipped-transposed weights (paper Fig. 6, Table I)
+  vmm/        tiled FC matmul — FP, and BP via transposed operand load
+  relu_mask/  fused ReLU + 1-bit packed mask emit, and the three masked
+              BP dataflows (paper Fig. 4)
+  pool/       2x2 max-pool + 2-bit argmax emit, and unpool BP (paper Fig. 5)
+  ssm_scan/   state-stationary selective scan (mamba hot-spot; beyond-paper:
+              recurrent state persists in VMEM across the seq-chunk grid)
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling, MXU-aligned dots)
+and are validated on CPU with interpret=True against the ref.py oracles.
+"""
+import jax
+
+
+def interpret_mode() -> bool:
+    """True off-TPU: run kernel bodies in Python for CPU validation."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,4 @@
+from repro.kernels.conv2d import ops, ref
+from repro.kernels.conv2d.ops import conv2d
+
+__all__ = ["ops", "ref", "conv2d"]

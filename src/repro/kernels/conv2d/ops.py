@@ -1,0 +1,43 @@
+"""Jit'd conv wrapper with the paper's compute-block-reuse backward pass.
+
+The BP of a stride-1 SAME conv w.r.t. its *input* is the SAME conv of the
+incoming gradient with the 180-degree-flipped, channel-transposed kernel
+(paper Fig. 6 / Table I).  We therefore invoke the *same* Pallas kernel for
+both phases — only the weight layout in HBM changes, the TPU analogue of the
+FPGA's modified DRAM access pattern.
+
+The weight cotangent (needed for training, never for attribution) is computed
+via the jnp reference; when the caller differentiates w.r.t. inputs only
+(attribution), XLA dead-code-eliminates it together with the cached ``x``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode
+from repro.kernels.conv2d import ref
+from repro.kernels.conv2d.conv2d import conv2d_pallas
+
+
+@jax.custom_vjp
+def conv2d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Stride-1 SAME conv, NHWC x HWIO, Pallas-tiled."""
+    return conv2d_pallas(x, w, interpret=interpret_mode())
+
+
+def _fwd(x, w):
+    return conv2d(x, w), (x, w)
+
+
+def _bwd(res, g):
+    x, w = res
+    # Phase BP, same compute block: flipped-transposed kernel (Table I).
+    dx = conv2d_pallas(g, ref.flip_transpose(w), interpret=interpret_mode())
+    # Weight grad (training only; DCE'd for attribution).
+    _, wgrad = jax.vjp(lambda w_: ref.conv2d(x, w_), w)
+    (dw,) = wgrad(g)
+    return dx, dw
+
+
+conv2d.defvjp(_fwd, _bwd)

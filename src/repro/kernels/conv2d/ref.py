@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the tiled conv kernel (NHWC x HWIO, stride 1, SAME)."""
+import jax
+import jax.numpy as jnp
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: [N, H, W, Cin], w: [K, K, Cin, Cout] -> [N, H, W, Cout]."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def flip_transpose(w: jnp.ndarray) -> jnp.ndarray:
+    """Paper Fig. 6: 180-degree kernel flip + in/out channel transpose."""
+    return jnp.flip(w, axis=(0, 1)).swapaxes(2, 3)
+
+
+def conv2d_input_grad(g: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """dL/dx of a stride-1 SAME conv == SAME conv of g with flip_transpose(w)."""
+    return conv2d(g, flip_transpose(w))

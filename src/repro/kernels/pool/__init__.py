@@ -1,0 +1,4 @@
+from repro.kernels.pool import ops, ref
+from repro.kernels.pool.ops import maxpool2x2
+
+__all__ = ["ops", "ref", "maxpool2x2"]

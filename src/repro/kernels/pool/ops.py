@@ -1,0 +1,40 @@
+"""Attribution-aware 2x2 max-pool backed by the Pallas kernels.
+
+The residual is the 2-bit packed argmax index — required by ALL three
+attribution methods (paper Table II) — and the BP is the unpool routing of
+Fig. 5b.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode
+from repro.kernels.pool.pool import maxpool_fwd_pallas, unpool_bwd_pallas
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _maxpool_attr(x, method: str):
+    y, _ = maxpool_fwd_pallas(x, interpret=interpret_mode())
+    return y
+
+
+def _fwd(x, method: str):
+    y, packed = maxpool_fwd_pallas(x, interpret=interpret_mode())
+    return y, packed
+
+
+def _bwd(method: str, packed, g):
+    return (unpool_bwd_pallas(packed, g, interpret=interpret_mode()),)
+
+
+_maxpool_attr.defvjp(_fwd, _bwd)
+
+
+def maxpool2x2(x: jnp.ndarray, method: str = "autodiff") -> jnp.ndarray:
+    # Max-pool BP (index routing) is identical for autodiff and all three
+    # attribution methods (Table II: every method stores the pooling mask),
+    # so the custom_vjp path serves every phase.
+    return _maxpool_attr(x, method)

@@ -1,0 +1,76 @@
+"""2x2 max-pool + 2-bit argmax-index Pallas kernels (paper §III.D, Fig. 5).
+
+The FPGA absorbs pooling into the output-store of the preceding layer and
+caches a 2-bit index per window on-chip.  The TPU kernel reads the feature
+map once from VMEM, emits the pooled map and the crumb-packed indices in the
+same pass; the unpool BP kernel routes gradients through strided VMEM stores
+with everything else zeroed.
+
+Window candidates are materialized as four strided views — (0,0) (0,1) (1,0)
+(1,1) — so max/argmax are 4-way VPU selects, no 6-D transpose on-chip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _pool_fwd_kernel(x_ref, y_ref, i_ref):
+    x = x_ref[0]                      # [H, W, C]
+    h, w, c = x.shape
+    cands = jnp.stack([x[0::2, 0::2], x[0::2, 1::2],
+                       x[1::2, 0::2], x[1::2, 1::2]])        # [4, H/2, W/2, C]
+    y_ref[0] = jnp.max(cands, axis=0)
+    idx = jnp.argmax(cands, axis=0).astype(jnp.int32)        # 2-bit values
+    crumbw = 1 << (2 * jnp.arange(4, dtype=jnp.int32))  # in-kernel constant
+    crumbs = idx.reshape(h // 2, w // 2, c // 4, 4)
+    i_ref[0] = jnp.sum(crumbs * crumbw, axis=-1).astype(jnp.uint8)
+
+
+def _unpool_bwd_kernel(i_ref, g_ref, o_ref):
+    g = g_ref[0]                      # [H/2, W/2, C]
+    hp, wp, c = g.shape
+    packed = i_ref[0].astype(jnp.int32)
+    shifts = 2 * jnp.arange(4, dtype=jnp.int32)
+    idx = ((packed[..., None] >> shifts) & 3).reshape(hp, wp, c)
+    out = jnp.zeros((2 * hp, 2 * wp, c), g.dtype)
+    for k, (di, dj) in enumerate([(0, 0), (0, 1), (1, 0), (1, 1)]):
+        out = out.at[di::2, dj::2].set(jnp.where(idx == k, g, 0))
+    o_ref[0] = out
+
+
+def maxpool_fwd_pallas(x: jnp.ndarray, *, interpret: bool = True):
+    """x: [N, H, W, C] (H, W even; C padded to 4) -> (pooled, packed idx)."""
+    n, h, w, c = x.shape
+    cp = -(-c // 4) * 4
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
+    y, idx = pl.pallas_call(
+        _pool_fwd_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, cp), lambda b: (b, 0, 0, 0))],
+        out_specs=[pl.BlockSpec((1, h // 2, w // 2, cp), lambda b: (b, 0, 0, 0)),
+                   pl.BlockSpec((1, h // 2, w // 2, cp // 4), lambda b: (b, 0, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, h // 2, w // 2, cp), x.dtype),
+                   jax.ShapeDtypeStruct((n, h // 2, w // 2, cp // 4), jnp.uint8)],
+        interpret=interpret,
+    )(xp)
+    return y[..., :c], idx[..., : -(-c // 4)]
+
+
+def unpool_bwd_pallas(packed: jnp.ndarray, g: jnp.ndarray, *,
+                      interpret: bool = True) -> jnp.ndarray:
+    """packed: [N, H/2, W/2, ceil(C/4)], g: [N, H/2, W/2, C] -> [N, H, W, C]."""
+    n, hp, wp, c = g.shape
+    cp = -(-c // 4) * 4
+    gp = jnp.pad(g, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
+    ip = jnp.pad(packed, ((0, 0), (0, 0), (0, 0), (0, cp // 4 - packed.shape[-1])))
+    out = pl.pallas_call(
+        _unpool_bwd_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, hp, wp, cp // 4), lambda b: (b, 0, 0, 0)),
+                  pl.BlockSpec((1, hp, wp, cp), lambda b: (b, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 2 * hp, 2 * wp, cp), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 2 * hp, 2 * wp, cp), g.dtype),
+        interpret=interpret,
+    )(ip, gp)
+    return out[..., :c]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the 2x2 max-pool / unpool kernels (paper Fig. 5)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks
+
+
+def _windows(x):
+    n, h, w, c = x.shape
+    xw = x.reshape(n, h // 2, 2, w // 2, 2, c).transpose(0, 1, 3, 5, 2, 4)
+    return xw.reshape(n, h // 2, w // 2, c, 4)
+
+
+def maxpool_fwd(x: jnp.ndarray):
+    """NHWC -> (pooled, 2-bit packed argmax indices along C)."""
+    xw = _windows(x)
+    return jnp.max(xw, axis=-1), masks.pack_crumbs(jnp.argmax(xw, axis=-1))
+
+
+def unpool_bwd(packed: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Route pooled-gradient to the stored argmax position (Fig. 5b)."""
+    n, hp, wp, c = g.shape
+    idx = masks.unpack_crumbs(packed, c)
+    routed = jax.nn.one_hot(idx, 4, dtype=g.dtype) * g[..., None]
+    routed = routed.reshape(n, hp, wp, c, 2, 2).transpose(0, 1, 4, 2, 5, 3)
+    return routed.reshape(n, 2 * hp, 2 * wp, c)

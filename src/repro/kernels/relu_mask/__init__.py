@@ -1,0 +1,4 @@
+from repro.kernels.relu_mask import ops, ref
+from repro.kernels.relu_mask.ops import relu
+
+__all__ = ["ops", "ref", "relu"]

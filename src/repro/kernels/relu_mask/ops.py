@@ -1,0 +1,48 @@
+"""Attribution-aware ReLU backed by the fused Pallas kernels.
+
+Drop-in replacement for :func:`repro.core.rules.relu` on the Pallas path:
+the forward emits the 1-bit packed mask as its only residual; the backward
+runs the method's masked dataflow fully fused (paper Fig. 4).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode
+from repro.kernels.relu_mask.relu_mask import relu_bwd_pallas, relu_fwd_pallas
+
+
+def _as2d(x):
+    return x.reshape(-1, x.shape[-1])
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _relu_attr(x, method: str):
+    y, _ = relu_fwd_pallas(_as2d(x), interpret=interpret_mode())
+    return y.reshape(x.shape)
+
+
+def _fwd(x, method: str):
+    y, packed = relu_fwd_pallas(_as2d(x), interpret=interpret_mode())
+    res = None if method == "deconvnet" else packed   # Table II
+    return y.reshape(x.shape), res
+
+
+def _bwd(method: str, packed, g):
+    g2 = _as2d(g)
+    if packed is None:
+        packed = jnp.zeros((g2.shape[0], -(-g2.shape[1] // 8)), jnp.uint8)
+    r = relu_bwd_pallas(packed, g2, method, interpret=interpret_mode())
+    return (r.reshape(g.shape).astype(g.dtype),)
+
+
+_relu_attr.defvjp(_fwd, _bwd)
+
+
+def relu(x: jnp.ndarray, method: str = "autodiff") -> jnp.ndarray:
+    if method == "autodiff":
+        return jnp.maximum(x, 0)
+    return _relu_attr(x, method)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused ReLU + 1-bit-mask kernel (paper §III.D)."""
+import jax.numpy as jnp
+
+from repro.core import masks
+
+
+def relu_fwd(x: jnp.ndarray):
+    """Returns (relu(x), packed 1-bit sign mask along the last axis)."""
+    return jnp.maximum(x, 0), masks.pack_mask(x > 0)
+
+
+def relu_bwd(packed: jnp.ndarray, g: jnp.ndarray, method: str) -> jnp.ndarray:
+    """The three masked BP dataflows of paper Fig. 4 (b)-(d)."""
+    if method == "deconvnet":
+        return jnp.where(g > 0, g, 0)
+    m = masks.unpack_mask(packed, g.shape[-1])
+    if method == "guided":
+        return jnp.where(m & (g > 0), g, 0)
+    return jnp.where(m, g, 0)   # saliency

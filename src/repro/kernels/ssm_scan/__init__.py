@@ -1,0 +1,4 @@
+from repro.kernels.ssm_scan import ops, ref
+from repro.kernels.ssm_scan.ops import selective_scan
+
+__all__ = ["ops", "ref", "selective_scan"]

@@ -1,0 +1,35 @@
+"""Jit'd selective-scan wrapper.
+
+Forward runs the Pallas state-stationary kernel; the backward falls back to
+autodiff over the jnp reference recurrence (attribution and training through
+SSM blocks differentiate the pure-JAX chunked scan in mamba.py; this kernel
+is the serving/prefill hot-path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode
+from repro.kernels.ssm_scan import ref
+from repro.kernels.ssm_scan.ssm_scan import selective_scan_pallas
+
+
+@jax.custom_vjp
+def selective_scan(dt, x, bmat, cmat, a, h0):
+    """(dt, x [B,S,D], B/C [B,S,N], A [D,N], h0 [B,D,N]) -> (y, h_last)."""
+    return selective_scan_pallas(dt, x, bmat, cmat, a, h0,
+                                 interpret=interpret_mode())
+
+
+def _fwd(dt, x, bmat, cmat, a, h0):
+    out = selective_scan(dt, x, bmat, cmat, a, h0)
+    return out, (dt, x, bmat, cmat, a, h0)
+
+
+def _bwd(res, g):
+    _, vjp = jax.vjp(lambda *args: ref.selective_scan(*args), *res)
+    return vjp(g)
+
+
+selective_scan.defvjp(_fwd, _bwd)

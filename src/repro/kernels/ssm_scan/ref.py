@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the selective-scan (mamba-1 SSM) kernel.
+
+Recurrence (diagonal A), per batch row and channel d:
+
+    abar_t = exp(dt_t * A)              A = -exp(A_log) < 0
+    h_t    = abar_t * h_{t-1} + dt_t * B_t * x_t
+    y_t    = <h_t, C_t> + D * x_t       (the D*x skip stays outside)
+
+Shapes: dt, x [B, S, D]; Bmat, Cmat [B, S, N]; A [D, N]; h0 [B, D, N].
+Returns (y [B, S, D], h_last [B, D, N]).
+"""
+import jax.numpy as jnp
+
+
+def selective_scan(dt, x, bmat, cmat, a, h0):
+    b, s, d = x.shape
+    n = a.shape[1]
+    h = h0.astype(jnp.float32)
+    ys = []
+    dt = dt.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+    for t in range(s):
+        abar = jnp.exp(dt[:, t, :, None] * a)              # [B, D, N]
+        bx = dt[:, t, :, None] * bmat[:, t, None, :] * x[:, t, :, None]
+        h = abar * h + bx
+        ys.append(jnp.einsum("bdn,bn->bd", h, cmat[:, t]))
+    return jnp.stack(ys, axis=1).astype(x.dtype), h

@@ -1,0 +1,4 @@
+from repro.kernels.vmm import ops, ref
+from repro.kernels.vmm.ops import vmm
+
+__all__ = ["ops", "ref", "vmm"]

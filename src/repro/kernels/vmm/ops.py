@@ -1,0 +1,37 @@
+"""Jit'd FC wrapper with transposed-operand BP reuse (paper §III.E, Table I).
+
+FP:  y = x @ W        — the Pallas VMM kernel.
+BP:  dx = g @ W^T     — the SAME kernel, weight operand loaded transposed
+                        (the FPGA's "buffers loaded in a transpose manner
+                        from DRAM"; on TPU a free layout view in HBM).
+dW (training only) is an einsum the attribution path never differentiates,
+so XLA DCEs it together with the cached x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode
+from repro.kernels.vmm.vmm import vmm_pallas
+
+
+@jax.custom_vjp
+def vmm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """[M, K] @ [K, N] -> [M, N], Pallas-tiled, f32 accumulation."""
+    return vmm_pallas(x, w, interpret=interpret_mode())
+
+
+def _fwd(x, w):
+    return vmm(x, w), (x, w)
+
+
+def _bwd(res, g):
+    x, w = res
+    dx = vmm_pallas(g, w.T, interpret=interpret_mode())   # transposed reuse
+    dw = jnp.einsum("mk,mn->kn", x, g,
+                    preferred_element_type=jnp.float32).astype(w.dtype)
+    return dx, dw
+
+
+vmm.defvjp(_fwd, _bwd)

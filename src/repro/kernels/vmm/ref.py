@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the tiled vector-matrix-multiply (FC) kernel."""
+import jax.numpy as jnp
+
+
+def vmm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """[M, K] @ [K, N] -> [M, N] with f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def vmm_input_grad(g: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """BP of FC w.r.t. input: the transposed VMM (paper §III.E)."""
+    return jnp.dot(g, w.T, preferred_element_type=jnp.float32).astype(g.dtype)

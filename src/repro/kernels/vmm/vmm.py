@@ -1,0 +1,61 @@
+"""Tiled matmul kernel for FC layers (paper §III.C) for TPU.
+
+FPGA -> TPU mapping: the input vector / weight-matrix tiles in on-chip
+buffers become (TM, TK) x (TK, TN) VMEM blocks; the unrolled MAC loop
+becomes one MXU dot per grid step; output-stationary accumulation is an f32
+VMEM scratch accumulated across the K grid dimension (the innermost,
+"arbitrary" axis), flushed once per (M, N) tile.
+
+The BP phase reuses this kernel on a transposed weight view — the paper's
+"buffers loaded in a transpose manner from DRAM" (§III.E) — see ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def vmm_pallas(x: jnp.ndarray, w: jnp.ndarray, *, tm: int = 128,
+               tk: int = 512, tn: int = 128,
+               interpret: bool = True) -> jnp.ndarray:
+    """[M, K] @ [K, N] -> [M, N], MXU-aligned VMEM tiles, f32 accumulate."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    tm_, tk_, tn_ = min(tm, -(-m // 8) * 8), min(tk, k), min(tn, n)
+    mp, kp, np_ = (-(-m // tm_) * tm_, -(-k // tk_) * tk_, -(-n // tn_) * tn_)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    k_steps = kp // tk_
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=k_steps),
+        grid=(mp // tm_, np_ // tn_, k_steps),
+        in_specs=[
+            pl.BlockSpec((tm_, tk_), lambda i, j, s: (i, s)),
+            pl.BlockSpec((tk_, tn_), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((tm_, tn_), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        # f32 output-stationary accumulator, persists across the K grid axis
+        scratch_shapes=[pltpu.VMEM((tm_, tn_), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]

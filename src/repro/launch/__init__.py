@@ -1,0 +1,1 @@
+"""Launchers: production mesh, steps, multi-pod dry-run, train/serve drivers."""

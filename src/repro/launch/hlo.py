@@ -1,0 +1,353 @@
+"""HLO post-mortem: roofline terms from the compiled, SPMD-partitioned module.
+
+Why not ``compiled.cost_analysis()``?  XLA's HloCostAnalysis visits each
+computation ONCE — a ``while`` body (every ``lax.scan``: layer stacks,
+microbatch accumulation, chunked attention, SSM chunk scans) is counted a
+single time regardless of trip count, undercounting scan-heavy programs by
+1-2 orders of magnitude (we measured 7x-40x on these models).  The same
+applies to collectives living inside scanned layers.
+
+This module parses ``compiled.as_text()`` (post-optimization, per-device
+shapes) into its computation graph and accumulates:
+
+  * flops            — dot ops: 2 * |result| * prod(contracting dims)
+                       (+1 flop/elt for non-dot elementwise, transcendentals)
+  * hbm bytes        — per *top-level* instruction: operands + result
+                       (fusion internals excluded: a fusion's HBM traffic is
+                       its boundary I/O).  gather/dynamic-slice count result
+                       + indices, not the full operand (sliced reads).
+  * collective bytes — per collective kind, result-shape bytes
+
+each multiplied by the product of enclosing ``while`` trip counts (parsed
+from the loop-condition constants), so scanned work is counted trip times.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_ARRAY_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALL_ATTR = re.compile(r"(?:calls|to|body|condition)=%?([\w\.\-]+)")
+_TRIP_CONST = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy-start", "copy-done", "after-all", "partition-id", "replica-id",
+    "while", "conditional", "call", "custom-call", "iota", "broadcast",
+}
+_SLICED_READ_OPS = {"gather", "dynamic-slice"}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "logistic", "sine", "cosine", "exponential-minus-one"}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    elems = 0
+    byts = 0
+    for m in _ARRAY_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _match_paren(s: str, start: int) -> int:
+    """Index just past the ')' matching the '(' at ``start``."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _split_rhs(rhs: str):
+    """'TYPE opname(operands), attrs' -> (type, op, operand_region).
+
+    TYPE is either a tuple '( ... )' (may contain /*index=N*/ comments) or a
+    space-free array type 'f32[8,16]{1,0}'.
+    """
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        end = _match_paren(rhs, 0)
+        result_type = rhs[:end]
+        rest = rhs[end:].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return rhs, "", ""
+        result_type = rhs[:sp]
+        rest = rhs[sp + 1:].lstrip()
+    par = rest.find("(")
+    if par < 0:
+        return result_type, rest.strip(), ""
+    op = rest[:par].strip()
+    operand_region = rest[par:_match_paren(rest, par)]
+    return result_type, op, operand_region
+
+
+_NAME_RE = re.compile(r"%[\w\.\-]+")
+
+
+class _Instr:
+    __slots__ = ("name", "op", "result_type", "operand_names", "line")
+
+    def __init__(self, name, op, result_type, operand_names, line):
+        self.name, self.op, self.result_type = name, op, result_type
+        self.operand_names, self.line = operand_names, line
+
+
+def _parse_computations(text: str):
+    """Returns (comps: name -> [_Instr], types: name -> {instr -> type})."""
+    comps: Dict[str, List[_Instr]] = {}
+    types: Dict[str, Dict[str, str]] = {}
+    cur: Optional[str] = None
+    entry_alias = None
+    for raw in text.splitlines():
+        s = raw.strip()
+        if cur is None:
+            # computation header: "[ENTRY ]%name (params) -> type {"
+            if s.endswith("{") and "->" in s and (
+                    s.startswith("%") or s.startswith("ENTRY")):
+                name = s.split("(", 1)[0].strip()
+                is_entry = name.startswith("ENTRY")
+                name = name.replace("ENTRY", "").strip().lstrip("%")
+                cur = name
+                comps[cur] = []
+                types[cur] = {}
+                if is_entry:
+                    entry_alias = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if not s.startswith(("%", "ROOT")):
+            continue
+        body = s[5:].strip() if s.startswith("ROOT") else s
+        if " = " not in body:
+            continue
+        iname, rhs = body.split(" = ", 1)
+        iname = iname.strip()
+        result_type, op, operand_str = _split_rhs(rhs)
+        if not op or not op.replace("-", "").isalnum():
+            continue
+        opnames = _NAME_RE.findall(operand_str)
+        types[cur][iname] = result_type
+        comps[cur].append(_Instr(iname, op, result_type, opnames, body))
+    if entry_alias:
+        comps["__entry__"] = comps[entry_alias]
+        types["__entry__"] = types[entry_alias]
+    return comps, types
+
+
+def _dims_of(type_str: str) -> List[int]:
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _dot_flops(ins: _Instr, local_types: Dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(ins.result_type)
+    mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    lhs_t = local_types.get(ins.operand_names[0], "") if ins.operand_names else ""
+    lhs_dims = _dims_of(lhs_t)
+    if not mdims or not lhs_dims:
+        return 2.0 * out_elems
+    contract = 1
+    for ax in mdims.group(1).split(","):
+        if ax:
+            ax = int(ax)
+            if ax < len(lhs_dims):
+                contract *= lhs_dims[ax]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(ins: _Instr, local_types: Dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(ins.result_type)
+    rhs_t = (local_types.get(ins.operand_names[1], "")
+             if len(ins.operand_names) > 1 else "")
+    kdims = _dims_of(rhs_t)
+    if not kdims:
+        return 2.0 * out_elems
+    # rhs = kernel [..., Cin, Cout]-ish: flops = 2*|out|*prod(kernel)/Cout
+    cout = kdims[-1]
+    prod = 1
+    for d in kdims:
+        prod *= d
+    return 2.0 * out_elems * max(1, prod // max(cout, 1))
+
+
+def _loop_trip(comps, cond_name: str) -> int:
+    consts = []
+    for ins in comps.get(cond_name, []):
+        for m in _TRIP_CONST.finditer(ins.line):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    """Trip-count-aware per-device cost summary of the compiled module."""
+    comps, types = _parse_computations(hlo_text)
+    agg = defaultdict(float)
+    visiting = set()
+
+    def operand_bytes(ins: _Instr, local: Dict[str, str]) -> int:
+        total = 0
+        for nm in ins.operand_names:
+            t = local.get(nm)
+            if t:
+                total += _shape_elems_bytes(t)[1]
+        return total
+
+    def comp_cost(name: str, mult: float, top_level: bool):
+        if name not in comps or name in visiting:
+            return
+        visiting.add(name)
+        local = types.get(name, {})
+        for ins in comps[name]:
+            op = ins.op
+            if op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                body = bm.group(1) if bm else None
+                cond = cm.group(1) if cm else None
+                tm = _TRIP_CFG.search(ins.line)      # XLA's own trip count
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trip = _loop_trip(comps, cond) if cond else 1
+                agg["while_loops"] += 1
+                if body:
+                    comp_cost(body, mult * trip, top_level)
+                continue
+            if op in ("call", "fusion", "conditional", "custom-call"):
+                for sub in _CALL_ATTR.findall(ins.line):
+                    # fusion bodies: flops only (bytes are boundary I/O)
+                    comp_cost(sub, mult,
+                              top_level=top_level and op == "call")
+                if op in ("fusion", "custom-call") and top_level:
+                    _, rb = _shape_elems_bytes(ins.result_type)
+                    agg["bytes"] += (rb + operand_bytes(ins, local)) * mult
+                continue
+
+            out_elems, out_bytes = _shape_elems_bytes(ins.result_type)
+
+            # ---- flops ----
+            if op == "dot":
+                f = _dot_flops(ins, local)
+                agg["flops"] += f * mult
+                agg["dot_flops"] += f * mult
+            elif op == "convolution":
+                f = _conv_flops(ins, local)
+                agg["flops"] += f * mult
+                agg["dot_flops"] += f * mult
+            elif op in _TRANSCENDENTAL:
+                agg["flops"] += out_elems * mult
+                agg["transcendentals"] += out_elems * mult
+            elif op in ("add", "multiply", "subtract", "divide", "maximum",
+                        "minimum", "compare", "select", "reduce", "and",
+                        "or", "xor"):
+                agg["flops"] += out_elems * mult
+
+            # ---- collectives ----
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                wire = out_bytes
+                # XLA promotes bf16 all-reduce accumulation to f32
+                # (to_apply=%..._promoted): the TPU wire still carries bf16
+                # with f32 accumulation in the reduction units — count wire
+                # bytes, not the promoted-carrier bytes.
+                if "_promoted" in ins.line and "f32[" in ins.result_type:
+                    wire = out_bytes // 2
+                agg[f"coll_{base}"] += wire * mult
+                agg["collective_bytes"] += wire * mult
+                if top_level:
+                    agg["bytes"] += wire * mult
+                    agg["bytes_major"] += wire * mult
+
+            # ---- hbm bytes (top level only; fusion internals excluded) ----
+            if top_level and op not in _SKIP_BYTES_OPS:
+                if op in _SLICED_READ_OPS:
+                    b = 2 * out_bytes                      # result + read rows
+                elif op in ("scatter", "dynamic-update-slice"):
+                    upd = min(operand_bytes(ins, local), 3 * out_bytes)
+                    b = out_bytes + upd
+                else:
+                    b = out_bytes + operand_bytes(ins, local)
+                agg["bytes"] += b * mult
+                # TPU-proxy lower bound: traffic a TPU fusion pass cannot
+                # elide — matmul operands/results, explicit data movement,
+                # wire traffic. CPU-XLA's many small elementwise fusions
+                # (82% of upper-bound bytes on these models) are excluded.
+                if op in ("dot", "convolution", "copy", "concatenate",
+                          "slice", "reverse", "transpose", "sort",
+                          "gather", "dynamic-slice", "scatter",
+                          "dynamic-update-slice", "pad"):
+                    agg["bytes_major"] += b * mult
+        visiting.discard(name)
+
+    comp_cost("__entry__", 1.0, True)
+    return dict(agg)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Trip-aware per-collective-kind bytes (per device). Keys + 'total'."""
+    a = analyze(hlo_text)
+    out = {k[5:]: int(v) for k, v in a.items() if k.startswith("coll_")}
+    out["total"] = int(a.get("collective_bytes", 0))
+    return out
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    """Raw XLA cost_analysis (per device) — kept for reference; see analyze()."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if ca is None:
+        return {}
+    out = {}
+    for key in ("flops", "bytes accessed", "transcendentals"):
+        if key in ca:
+            out[key.replace(" ", "_")] = float(ca[key])
+    return out
+
+
+def memory_summary(compiled) -> Dict[str, int]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes"):
+        if hasattr(ma, key):
+            out[key] = int(getattr(ma, key))
+    return out

@@ -1,0 +1,86 @@
+"""Assigned input-shape cells + ShapeDtypeStruct input specs per cell.
+
+Four shapes x ten archs = 40 cells.  ``long_500k`` lowers only for
+sub-quadratic archs (ssm/hybrid) per the assignment; the skip is recorded,
+not silently dropped.  ``decode_*`` cells lower ``serve_step`` (one token
+against a seq_len KV cache), not ``train_step``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+# audio enc-dec: fixed source-frame length per cell kind
+AUDIO_SRC_LEN = {"train": None, "prefill": 4096, "decode": 4096}  # None: = seq
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """(runs?, reason).  Skips are assignment-mandated, recorded in DESIGN."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 524k dense decode is skipped per "
+                       "assignment (sub-quadratic archs only)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """Abstract inputs for the cell — ShapeDtypeStructs, no allocation.
+
+    train:   {"tokens","labels"} (+frames/patches for audio/vlm)
+    prefill: {"tokens", ...}
+    decode:  {"tokens" [B,1], "pos" scalar}  (cache specs come from the step)
+    """
+    cell = SHAPES[shape_name]
+    b, s = cell.batch, cell.seq
+    tok = jnp.int32
+    if cell.kind in ("train", "prefill"):
+        if cfg.frontend == "patches":
+            batch = {"tokens": _sds((b, s - cfg.n_patches), tok),
+                     "patches": _sds((b, cfg.n_patches, cfg.d_model), cfg.jdtype)}
+        elif cfg.frontend == "frames":
+            src = AUDIO_SRC_LEN[cell.kind] or s
+            batch = {"tokens": _sds((b, s), tok),
+                     "frames": _sds((b, src, cfg.d_model), cfg.jdtype)}
+        else:
+            batch = {"tokens": _sds((b, s), tok)}
+        if cell.kind == "train":
+            lab_len = s if cfg.frontend != "patches" else s - cfg.n_patches
+            batch["labels"] = _sds((b, lab_len), tok)
+        return batch
+    # decode
+    return {"tokens": _sds((b, 1), tok)}
+
+
+def cache_capacity(shape_name: str) -> int:
+    # headroom past the prefilled context; 64 keeps every sharded cache dim
+    # divisible by the 16-way axes (seq-parallel long-context cache included)
+    cell = SHAPES[shape_name]
+    return cell.seq + 64
+
+
+def decode_src_len(cfg: ModelConfig) -> int:
+    return AUDIO_SRC_LEN["decode"] if cfg.enc_layers else 0

@@ -1,0 +1,129 @@
+"""The paper's Table III CNN (CIFAR-10), reproduced exactly.
+
+Layer stack:  Conv(3->32) Conv(32->32) Pool Conv(32->64) Conv(64->64) Pool
+              FC(4096->128) ReLU FC(128->10)           — 2.26 MB of params.
+
+Two fidelity knobs:
+
+* ``conv_relu``: Table III lists ReLU only after FC1, and the paper's 24.7 Kb
+  residual figure matches exactly that reading (pool indices + one 128-bit
+  mask).  Real training needs conv ReLUs for the quoted 88% accuracy, so the
+  default is True; the memory benchmark reports BOTH accountings.
+* ``use_pallas``: route conv/FC through the Pallas TPU kernels
+  (:mod:`repro.kernels`) instead of ``lax`` ops — the explicit tile-based
+  mapping of the paper's §III, incl. BP-as-flipped-transpose-conv reuse.
+
+Layout is NHWC / HWIO (TPU-native); the FPGA's CHW is a host-side transpose.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rules
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    in_hw: Tuple[int, int] = (32, 32)
+    in_ch: int = 3
+    channels: Tuple[int, ...] = (32, 32, 64, 64)   # conv channels, pool every 2
+    kernel: int = 3
+    fc: Tuple[int, ...] = (128,)
+    num_classes: int = 10
+    conv_relu: bool = True          # see module docstring
+    pool_every: int = 2
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def feature_hw(self) -> Tuple[int, int]:
+        h, w = self.in_hw
+        n_pools = len(self.channels) // self.pool_every
+        return h // (2 ** n_pools), w // (2 ** n_pools)
+
+    def flat_features(self) -> int:
+        h, w = self.feature_hw()
+        return h * w * self.channels[-1]
+
+    def param_count(self) -> int:
+        n, cin = 0, self.in_ch
+        for c in self.channels:
+            n += self.kernel * self.kernel * cin * c + c
+            cin = c
+        fin = self.flat_features()
+        for f in self.fc + (self.num_classes,):
+            n += fin * f + f
+            fin = f
+        return n
+
+
+def init(key, cfg: CNNConfig):
+    """He-init conv (HWIO) and FC params."""
+    params = {"conv": [], "fc": []}
+    cin = cfg.in_ch
+    for c in cfg.channels:
+        key, k1 = jax.random.split(key)
+        fan_in = cfg.kernel * cfg.kernel * cin
+        w = jax.random.normal(k1, (cfg.kernel, cfg.kernel, cin, c),
+                              cfg.jdtype) * jnp.sqrt(2.0 / fan_in)
+        params["conv"].append({"w": w, "b": jnp.zeros((c,), cfg.jdtype)})
+        cin = c
+    fin = cfg.flat_features()
+    for f in cfg.fc + (cfg.num_classes,):
+        key, k1 = jax.random.split(key)
+        w = jax.random.normal(k1, (fin, f), cfg.jdtype) * jnp.sqrt(2.0 / fin)
+        params["fc"].append({"w": w, "b": jnp.zeros((f,), cfg.jdtype)})
+        fin = f
+    return params
+
+
+def _conv(x, w, b, *, use_pallas: bool):
+    if use_pallas:
+        from repro.kernels.conv2d import ops as conv_ops
+        y = conv_ops.conv2d(x, w)
+    else:
+        y = jax.lax.conv_general_dilated(
+            x, w, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _fc(x, w, b, *, use_pallas: bool):
+    if use_pallas:
+        from repro.kernels.vmm import ops as vmm_ops
+        return vmm_ops.vmm(x, w) + b
+    return x @ w + b
+
+
+def apply(params, x, cfg: CNNConfig, *, method: str = "autodiff",
+          use_pallas: bool = False):
+    """Forward pass: [N, H, W, Cin] -> logits [N, num_classes].
+
+    ``method`` selects the attribution backward rules (static, like the
+    paper's HLS design-time configuration).
+    """
+    if use_pallas:
+        from repro.kernels.pool import ops as pool_ops
+        from repro.kernels.relu_mask import ops as relu_ops
+        relu_fn, pool_fn = relu_ops.relu, pool_ops.maxpool2x2
+    else:
+        relu_fn, pool_fn = rules.relu, rules.maxpool2x2
+    for i, p in enumerate(params["conv"]):
+        x = _conv(x, p["w"], p["b"], use_pallas=use_pallas)
+        if cfg.conv_relu:
+            x = relu_fn(x, method)
+        if (i + 1) % cfg.pool_every == 0:
+            x = pool_fn(x, method)
+    x = x.reshape(x.shape[0], -1)
+    n_fc = len(params["fc"])
+    for i, p in enumerate(params["fc"]):
+        x = _fc(x, p["w"], p["b"], use_pallas=use_pallas)
+        if i < n_fc - 1:
+            x = relu_fn(x, method)   # Table III: ReLU after FC1
+    return x

@@ -1,0 +1,8 @@
+from repro.runtime.fault import (ElasticPlan, HealthMonitor, plan_remesh)
+from repro.runtime.compression import (compress_int8, decompress_int8,
+                                       ErrorFeedbackState, compressed_psum,
+                                       ef_compress_update)
+
+__all__ = ["ElasticPlan", "HealthMonitor", "plan_remesh", "compress_int8",
+           "decompress_int8", "ErrorFeedbackState", "compressed_psum",
+           "ef_compress_update"]

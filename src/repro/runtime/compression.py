@@ -1,0 +1,72 @@
+"""int8 error-feedback gradient compression for the cross-pod (DCN) axis.
+
+At 512+ chips the intra-pod ICI all-reduce is fast; the pod-to-pod hop rides
+data-center network at ~1/10 the bandwidth, so the cross-pod gradient
+reduction is the collective-term bottleneck of multi-pod training.  Classic
+fix (1-bit Adam / PowerSGD lineage): quantize the cross-pod summand to int8
+with per-row scales, keep the quantization error in a local *error-feedback*
+buffer that is added back before the next step's compression — unbiased in
+the long run, 4x fewer DCN bytes than f32 (2x vs bf16).
+
+``compressed_psum`` composes with shard_map over the "pod" axis;
+``ef_compress_update`` is the pure-functional EF state update the train step
+threads through.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row (last-axis) absmax int8. Returns (q, scale_f32)."""
+    xf = x.astype(jnp.float32)
+    flat = xf.reshape(-1, x.shape[-1]) if x.ndim > 1 else xf.reshape(1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(x.shape), scale.reshape(x.shape[:-1] + (1,) if x.ndim > 1 else (1, 1))
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+class ErrorFeedbackState(NamedTuple):
+    error: object   # pytree like grads (f32)
+
+
+def ef_init(grads) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        error=jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads))
+
+
+def ef_compress_update(g: jnp.ndarray, err: jnp.ndarray):
+    """One tensor: returns (q, scale, new_err). new_err = (g+err) - deq(q)."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale = compress_int8(corrected)
+    new_err = corrected - decompress_int8(q, scale)
+    return q, scale, new_err
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str,
+                    err: jnp.ndarray | None = None):
+    """int8-compressed all-reduce over ``axis_name`` (use inside shard_map).
+
+    The WIRE carries the int8 payload: each participant quantizes its
+    summand, all-gathers the int8 tensors + f32 row scales across the axis
+    (cross-pod axes are small — 2-4 pods — so gather-then-local-sum is the
+    right algorithm there), and dequantize-accumulates locally in f32.
+    ~4x fewer DCN bytes than an f32 ring all-reduce; verified at the HLO
+    level in benchmarks/compression.py.
+    Returns (sum, new_err) — new_err is the local error-feedback residue.
+    """
+    if err is None:
+        err = jnp.zeros_like(x, jnp.float32)
+    q, scale, new_err = ef_compress_update(x, err)
+    qg = jax.lax.all_gather(q, axis_name)          # [P, ...] int8 on the wire
+    sg = jax.lax.all_gather(scale, axis_name)      # [P, ...] f32 row scales
+    total = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+    return total.astype(x.dtype), new_err

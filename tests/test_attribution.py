@@ -1,0 +1,128 @@
+"""Attribution engine on the paper's CNN — FP+BP dataflow (§II, Fig. 2/3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attribution, fixedpoint
+from repro.models import cnn
+
+CFG = cnn.CNNConfig(in_hw=(16, 16), channels=(8, 8), fc=(32,))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = cnn.init(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 16, 16, 3))
+    return params, x
+
+
+def test_saliency_equals_jax_grad(setup):
+    """Eq. 2: the saliency map IS the input gradient of the argmax logit."""
+    params, x = setup
+    f = lambda v: cnn.apply(params, v, CFG, method="saliency")
+    logits, rel = attribution.attribute(jax.jit(f), x)
+    tgt = jnp.argmax(logits, -1)
+
+    def scalar(v):
+        lg = cnn.apply(params, v, CFG, method="autodiff")
+        return jnp.sum(lg * jax.nn.one_hot(tgt, CFG.num_classes))
+
+    np.testing.assert_allclose(np.asarray(rel), np.asarray(jax.grad(scalar)(x)),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("method", ["saliency", "deconvnet", "guided"])
+def test_methods_shapes_and_finiteness(setup, method):
+    params, x = setup
+    f = lambda v: cnn.apply(params, v, CFG, method=method)
+    logits, rel = attribution.attribute(jax.jit(f), x)
+    assert rel.shape == x.shape
+    assert bool(jnp.isfinite(rel).all())
+    assert float(jnp.abs(rel).sum()) > 0
+
+
+def test_explicit_target(setup):
+    params, x = setup
+    f = lambda v: cnn.apply(params, v, CFG, method="saliency")
+    t = jnp.asarray([1, 2, 3])
+    _, rel_t = attribution.attribute(f, x, target=t)
+    _, rel_a = attribution.attribute(f, x)
+    assert not np.allclose(np.asarray(rel_t), np.asarray(rel_a))
+
+
+def test_integrated_gradients_completeness(setup):
+    """IG axiom: sum(attributions) ~= f(x) - f(baseline) for the target."""
+    params, x = setup
+    tgt = jnp.argmax(cnn.apply(params, x, CFG), -1)
+    f = lambda v: cnn.apply(params, v, CFG, method="saliency")
+    logits, ig = attribution.integrated_gradients(f, x, steps=64, target=tgt)
+    total = jnp.sum(ig, axis=(1, 2, 3))
+    fx = jnp.sum(logits * jax.nn.one_hot(tgt, CFG.num_classes), -1)
+    f0 = jnp.sum(cnn.apply(params, jnp.zeros_like(x), CFG)
+                 * jax.nn.one_hot(tgt, CFG.num_classes), -1)
+    np.testing.assert_allclose(np.asarray(total), np.asarray(fx - f0),
+                               rtol=0.12, atol=0.12)
+
+
+def test_attribute_classes_one_forward_many_backward(setup):
+    """FPGA mask reuse across explanations: one FP, K BP passes — each map
+    must equal the single-target map for its class."""
+    params, x = setup
+    f = lambda v: cnn.apply(params, v, CFG, method="guided")
+    targets = jnp.asarray([0, 3, 7])
+    logits, rels = attribution.attribute_classes(jax.jit(f, static_argnums=()), x,
+                                                 targets)
+    assert rels.shape == (3,) + x.shape
+    for i, t in enumerate([0, 3, 7]):
+        _, single = attribution.attribute(
+            f, x, target=jnp.full((x.shape[0],), t))
+        np.testing.assert_allclose(np.asarray(rels[i]), np.asarray(single),
+                                   atol=1e-6)
+
+
+def test_contrastive_is_difference_of_maps(setup):
+    """Linearity: rel(A - B) == rel(A) - rel(B) for gradient methods."""
+    params, x = setup
+    f = lambda v: cnn.apply(params, v, CFG, method="saliency")
+    a = jnp.zeros((x.shape[0],), jnp.int32)
+    bcls = jnp.full((x.shape[0],), 5, jnp.int32)
+    _, rc = attribution.contrastive(f, x, a, bcls)
+    _, ra = attribution.attribute(f, x, target=a)
+    _, rb = attribution.attribute(f, x, target=bcls)
+    np.testing.assert_allclose(np.asarray(rc), np.asarray(ra - rb), atol=1e-5)
+
+
+def test_smoothgrad_runs(setup):
+    params, x = setup
+    f = lambda v: cnn.apply(params, v, CFG, method="saliency")
+    _, sg = attribution.smoothgrad(f, x, jax.random.PRNGKey(7), n=4)
+    assert sg.shape == x.shape and bool(jnp.isfinite(sg).all())
+
+
+def test_heatmap_normalized(setup):
+    params, x = setup
+    f = lambda v: cnn.apply(params, v, CFG, method="guided")
+    _, rel = attribution.attribute(f, x)
+    hm = attribution.heatmap(rel)
+    assert hm.shape == (3, 16, 16)
+    assert float(hm.min()) >= 0 and float(hm.max()) <= 1 + 1e-6
+
+
+def test_fixed_point_16b_preserves_ranking(setup):
+    """Paper §IV: 16-bit fixed point suffices — heatmap ranking is stable."""
+    params, x = setup
+    q = fixedpoint.make_quantizer(7, 8)
+    params_q = fixedpoint.quantize_tree(params)
+    f32 = lambda v: cnn.apply(params, v, CFG, method="saliency")
+    fq = lambda v: cnn.apply(params_q, q(v), CFG, method="saliency")
+    _, r32 = attribution.attribute(f32, x)
+    _, rq = attribution.attribute(fq, x)
+    a = np.abs(np.asarray(r32)).reshape(3, -1)
+    b = np.abs(np.asarray(rq)).reshape(3, -1)
+    # Spearman-ish: top-10% pixel overlap
+    k = a.shape[1] // 10
+    for i in range(3):
+        ta = set(np.argsort(a[i])[-k:].tolist())
+        tb = set(np.argsort(b[i])[-k:].tolist())
+        assert len(ta & tb) / k > 0.6

@@ -1,0 +1,63 @@
+"""HLO analyzer: trip-count-aware cost extraction on a synthetic module."""
+import textwrap
+
+from repro.launch import hlo
+
+_MODULE = textwrap.dedent("""
+HloModule jit_f, entry_computation_layout={(f32[128,256]{1,0})->f32[128,256]{1,0}}
+
+%body.1 (arg: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %arg = (s32[], f32[128,256]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[128,256]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[256,256]{1,0} constant({...})
+  %mm = f32[128,256]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,256]{1,0} all-reduce(%mm), replica_groups={}, to_apply=%sum
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %out = (s32[], f32[128,256]{1,0}) tuple(%ip, %ar)
+}
+
+%cond.1 (arg2: (s32[], f32[128,256])) -> pred[] {
+  %arg2 = (s32[], f32[128,256]{1,0}) parameter(0)
+  %i2 = s32[] get-tuple-element(%arg2), index=0
+  %lim = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i2, %lim), direction=LT
+}
+
+ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t = (s32[], f32[128,256]{1,0}) tuple(%zero, %p0)
+  %loop = (s32[], f32[128,256]{1,0}) while(%t), condition=%cond.1, body=%body.1
+  ROOT %res = f32[128,256]{1,0} get-tuple-element(%loop), index=1
+}
+""")
+
+
+def test_while_trip_count_multiplies_costs():
+    a = hlo.analyze(_MODULE)
+    # 10 iterations x (2 * 128 * 256 * 256) dot flops
+    assert a["dot_flops"] == 10 * 2 * 128 * 256 * 256
+    # 10 iterations of a 128x256 f32 all-reduce
+    assert a["coll_all-reduce"] == 10 * 128 * 256 * 4
+    assert a["while_loops"] == 1
+
+
+def test_promoted_allreduce_counts_wire_bytes():
+    mod = _MODULE.replace("to_apply=%sum", "to_apply=%add.clone_promoted")
+    a = hlo.analyze(mod)
+    assert a["coll_all-reduce"] == 10 * 128 * 256 * 4 // 2
+
+
+def test_backend_config_trip_count_preferred():
+    mod = _MODULE.replace(
+        "condition=%cond.1, body=%body.1",
+        'condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"3"}}')
+    a = hlo.analyze(mod)
+    assert a["dot_flops"] == 3 * 2 * 128 * 256 * 256
+
+
+def test_collective_bytes_helper():
+    out = hlo.collective_bytes(_MODULE)
+    assert out["total"] == out["all-reduce"] == 10 * 128 * 256 * 4

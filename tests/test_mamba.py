@@ -1,0 +1,66 @@
+"""Mamba selective scan: chunked parallel scan == sequential recurrence;
+decode state streaming == full-sequence forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import mamba
+from repro.models.config import ModelConfig
+
+CFG = ModelConfig(name="mamba-test", family="ssm", n_layers=1, d_model=24,
+                  n_heads=2, n_kv=2, d_ff=0, vocab=64, ssm_state=8,
+                  ssm_chunk=5, dtype="float32")   # chunk NOT dividing seq
+
+
+def test_chunked_scan_matches_sequential():
+    """The chunked associative scan must equal the naive recurrence."""
+    b, s, di, n = 2, 17, CFG.d_inner, CFG.ssm_state
+    key = jax.random.PRNGKey(0)
+    abar = jax.random.uniform(key, (b, s, di, n), minval=0.5, maxval=0.99)
+    bx = jax.random.normal(jax.random.PRNGKey(1), (b, s, di, n))
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (b, di, n))
+
+    # sequential reference
+    hs = []
+    h = np.asarray(h0, np.float64)
+    for t in range(s):
+        h = np.asarray(abar[:, t], np.float64) * h + np.asarray(bx[:, t], np.float64)
+        hs.append(h.copy())
+    want = np.stack(hs, axis=1)
+
+    got, last = mamba._chunk_scan(abar, bx, h0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(last), want[:, -1], rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_decode_stream_matches_full_forward():
+    """Feeding tokens one-by-one through the O(1) state update must equal the
+    full-sequence chunked forward — the property that makes long_500k viable."""
+    p = mamba.init_mamba(jax.random.PRNGKey(0), CFG)
+    b, s = 2, 11
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, CFG.d_model)) * 0.5
+
+    full, _ = mamba.mamba_core(p, x, CFG)
+
+    state = mamba.init_state(CFG, b, jnp.float32)
+    outs = []
+    for t in range(s):
+        o, state = mamba.mamba_core(p, x[:, t:t + 1], CFG, state=state, pos=t)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stream), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_grad_through_scan():
+    p = mamba.init_mamba(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 9, CFG.d_model))
+
+    def loss(pp):
+        y, _ = mamba.mamba_core(pp, x, CFG)
+        return jnp.sum(y ** 2)
+
+    g = jax.grad(loss)(p)
+    assert all(bool(jnp.isfinite(v).all()) for v in jax.tree.leaves(g))
+    assert float(jnp.abs(g["A_log"]).sum()) > 0

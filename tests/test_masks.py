@@ -1,0 +1,42 @@
+"""1-bit / 2-bit packing — the paper's BRAM mask store (unit + property)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks
+
+
+@given(st.integers(1, 200), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_pack_mask_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.random(n) > 0.5
+    packed = masks.pack_mask(jnp.asarray(bits))
+    assert packed.dtype == jnp.uint8
+    assert packed.shape[-1] == (n + 7) // 8          # 8 masks per byte
+    out = masks.unpack_mask(packed, n)
+    np.testing.assert_array_equal(np.asarray(out), bits)
+
+
+@given(st.integers(1, 100), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_pack_crumbs_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, 4, size=n)
+    packed = masks.pack_crumbs(jnp.asarray(idx))
+    assert packed.shape[-1] == (n + 3) // 4          # 4 indices per byte
+    out = masks.unpack_crumbs(packed, n)
+    np.testing.assert_array_equal(np.asarray(out), idx)
+
+
+def test_batched_shapes():
+    bits = jnp.ones((3, 5, 24), jnp.bool_)
+    packed = masks.pack_mask(bits)
+    assert packed.shape == (3, 5, 3)
+    assert bool(masks.unpack_mask(packed, 24).all())
+
+
+def test_nbytes_accounting():
+    # 16x smaller than bf16, 32x smaller than f32 (modulo byte rounding)
+    assert masks.mask_nbytes((128,)) == 16
+    assert masks.crumb_nbytes((64, 8, 8)) == 64 * 8 * 8 // 4

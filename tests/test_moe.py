@@ -1,0 +1,73 @@
+"""MoE dispatch correctness: sort-based capacity routing vs per-token loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import moe
+from repro.models.config import ModelConfig
+
+CFG = ModelConfig(name="moe-test", family="moe", n_layers=1, d_model=16,
+                  n_heads=2, n_kv=2, d_ff=32, vocab=64, n_experts=4, top_k=2,
+                  n_shared_experts=0, capacity_factor=8.0,  # no drops
+                  dtype="float32", router_aux_coef=0.0)
+
+
+def _dense_reference(p, x, cfg):
+    """Route every token through its top-k experts with a python loop."""
+    b, s, d = x.shape
+    xt = np.asarray(x.reshape(-1, d), np.float64)
+    logits = xt @ np.asarray(p["router"], np.float64)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    k = cfg.top_k
+    out = np.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        top = np.argsort(-probs[t])[:k]
+        gates = probs[t][top]
+        gates = gates / gates.sum()
+        for gate, e in zip(gates, top):
+            h = xt[t] @ np.asarray(p["w1"][e], np.float64)
+            h = h / (1 + np.exp(-h))         # silu
+            h = h * (xt[t] @ np.asarray(p["w3"][e], np.float64))
+            out[t] += gate * (h @ np.asarray(p["w2"][e], np.float64))
+    return out.reshape(b, s, d)
+
+
+def test_dispatch_matches_dense_loop():
+    p = moe.init_moe(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, CFG.d_model))
+    got, aux = moe.moe_ffn(p, x, CFG)
+    want = _dense_reference(p, x, CFG)
+    np.testing.assert_allclose(np.asarray(got), want, atol=2e-4, rtol=2e-3)
+
+
+def test_capacity_drops_tokens_not_correctness():
+    cfg = CFG.with_(capacity_factor=0.25)    # force drops
+    p = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    got, _ = moe.moe_ffn(p, x, cfg)
+    assert bool(jnp.isfinite(got).all())
+
+
+def test_grad_flows_through_router_and_experts():
+    p = moe.init_moe(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, CFG.d_model))
+
+    def loss(pp):
+        y, aux = moe.moe_ffn(pp, x, CFG)
+        return jnp.sum(y ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["w1"]).sum()) > 0
+    assert float(jnp.abs(g["router"]).sum()) > 0
+
+
+def test_shared_expert_added():
+    cfg = CFG.with_(n_shared_experts=1)
+    p = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    y, _ = moe.moe_ffn(p, x, cfg)
+    p0 = dict(p)
+    p0["shared"] = jax.tree.map(jnp.zeros_like, p["shared"])
+    y0, _ = moe.moe_ffn(p0, x, cfg)
+    assert not np.allclose(np.asarray(y), np.asarray(y0))

@@ -1,0 +1,40 @@
+"""The paper's §V memory claim: 3.4 Mb autodiff -> 24.7 Kb analytic (137x)."""
+import pytest
+
+from repro.core import residuals
+
+
+def test_paper_numbers_reproduce_exactly():
+    led = residuals.paper_cnn_ledger()
+    analytic = led.analytic_bits("saliency")
+    # pool indices: (8192 + 4096) windows * 2 bits + FC ReLU mask 128 * 1 bit
+    assert analytic == (8192 + 4096) * 2 + 128 == 24_704          # = 24.7 Kb
+    autodiff = led.autodiff_bits(32)
+    assert 3.3e6 < autodiff < 3.6e6                               # ~3.4 Mb
+    assert led.reduction("saliency") > 137                        # paper: 137x
+
+
+def test_deconvnet_cheapest():
+    """Table II: DeconvNet needs no ReLU masks at all."""
+    led = residuals.paper_cnn_ledger()
+    assert led.analytic_bits("deconvnet") < led.analytic_bits("saliency")
+    assert led.analytic_bits("deconvnet") == (8192 + 4096) * 2
+
+
+def test_guided_equals_saliency_overhead():
+    """§II.C: Guided BP's mask cost equals Saliency's."""
+    led = residuals.paper_cnn_ledger()
+    assert led.analytic_bits("guided") == led.analytic_bits("saliency")
+
+
+def test_smooth_site_accounting():
+    led = residuals.Ledger()
+    led.activations = [(1024,)]
+    led.smooth_sites = [(1024,)]
+    # int8 residual: 8 bits vs 32-bit activation cache = 4x
+    assert led.autodiff_bits(32) / led.analytic_bits("saliency") == 4.0
+
+
+def test_unknown_method_raises():
+    with pytest.raises(ValueError):
+        residuals.paper_cnn_ledger().analytic_bits("lime")

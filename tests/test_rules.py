@@ -1,0 +1,99 @@
+"""The three ReLU backward rules (paper Eq. 3-5) + pooling + smooth gates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rules
+
+
+def _vjp(fn, x, g=None):
+    y, vjp_fn = jax.vjp(fn, x)
+    (dx,) = vjp_fn(jnp.ones_like(y) if g is None else g)
+    return y, dx
+
+
+def test_saliency_equals_autodiff():
+    """Eq. 3 IS the exact ReLU derivative — bit-packed residual changes nothing."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 33))
+    g = jax.random.normal(jax.random.PRNGKey(1), (64, 33))
+    _, dx_s = _vjp(lambda v: rules.relu(v, "saliency"), x, g)
+    _, dx_a = _vjp(lambda v: rules.relu(v, "autodiff"), x, g)
+    np.testing.assert_allclose(np.asarray(dx_s), np.asarray(dx_a))
+
+
+def test_deconvnet_rule():
+    """Eq. 4: R_L = (R>0) . R — independent of the forward sign."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 17))
+    g = jax.random.normal(jax.random.PRNGKey(1), (32, 17))
+    _, dx = _vjp(lambda v: rules.relu(v, "deconvnet"), x, g)
+    np.testing.assert_allclose(np.asarray(dx), np.where(g > 0, g, 0))
+
+
+def test_guided_rule():
+    """Eq. 5: R_L = (f>0).(R>0).R."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 17))
+    g = jax.random.normal(jax.random.PRNGKey(1), (32, 17))
+    _, dx = _vjp(lambda v: rules.relu(v, "guided"), x, g)
+    expect = np.where((np.asarray(x) > 0) & (np.asarray(g) > 0),
+                      np.asarray(g), 0)
+    np.testing.assert_allclose(np.asarray(dx), expect)
+
+
+@pytest.mark.parametrize("method", ["saliency", "deconvnet", "guided"])
+def test_forward_unchanged(method):
+    """Attribution rules only alter BP; FP must equal plain ReLU (Fig. 4a)."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 40))
+    np.testing.assert_allclose(np.asarray(rules.relu(x, method)),
+                               np.asarray(jax.nn.relu(x)))
+
+
+def test_maxpool_routing():
+    """Fig. 5b: gradient goes to the argmax position only."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 8, 5))
+    g = jax.random.normal(jax.random.PRNGKey(4), (2, 4, 4, 5))
+    _, dx_attr = _vjp(lambda v: rules.maxpool2x2(v, "saliency"), x, g)
+    _, dx_auto = _vjp(lambda v: rules.maxpool2x2(v, "autodiff"), x, g)
+    np.testing.assert_allclose(np.asarray(dx_attr), np.asarray(dx_auto),
+                               atol=1e-6)
+    # at most one nonzero per (2x2 window, channel)
+    w = np.asarray(dx_attr).reshape(2, 4, 2, 4, 2, 5).swapaxes(2, 3)
+    nz = (w != 0).sum(axis=(3, 4)).max()       # sum over the h,w window dims
+    assert nz <= 1
+
+
+@pytest.mark.parametrize("kind", ["silu", "gelu"])
+def test_smooth_exact_residual_matches_autodiff(kind):
+    x = jax.random.normal(jax.random.PRNGKey(5), (16, 24))
+    _, dx = _vjp(lambda v: rules.act(v, kind, "saliency", "exact"), x)
+    _, dx_a = _vjp(lambda v: rules.act(v, kind, "autodiff"), x)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_a),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_smooth_int8_residual_bounded_error(seed):
+    """Beyond-paper: int8 residuals approximate the slope to ~1% relative."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32, 64)) * 3
+    _, dx_q = _vjp(lambda v: rules.act(v, "silu", "saliency", "int8"), x)
+    _, dx_e = _vjp(lambda v: rules.act(v, "silu", "saliency", "exact"), x)
+    err = np.abs(np.asarray(dx_q) - np.asarray(dx_e)).max()
+    assert err < 0.05, err
+
+
+def test_deconvnet_saves_no_residual():
+    """Table II: DeconvNet has no ReLU mask — its fwd residual is None."""
+    x = jnp.ones((4, 8))
+    _, res = rules._relu_attr_fwd(x, "deconvnet")
+    assert res is None
+    _, res = rules._relu_attr_fwd(x, "saliency")
+    assert res is not None and res.dtype == jnp.uint8
+
+
+def test_rules_under_jit_and_vmap():
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 8, 16))
+    f = jax.jit(jax.vmap(lambda v: rules.relu(v, "guided")))
+    y = f(x)
+    assert y.shape == x.shape

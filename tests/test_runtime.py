@@ -1,0 +1,63 @@
+"""Fault-tolerance runtime: stragglers, elastic remesh, int8 compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime import (HealthMonitor, compress_int8, decompress_int8,
+                           ef_compress_update, plan_remesh)
+
+
+def test_straggler_detection():
+    mon = HealthMonitor(window=8, straggler_factor=2.0)
+    for step in range(8):
+        for h in range(4):
+            mon.record_step(h, 1.0 if h != 2 else 3.5)
+    assert mon.stragglers() == [2]
+
+
+def test_dead_host_detection():
+    mon = HealthMonitor(heartbeat_timeout_s=10.0)
+    mon.record_step(0, 1.0, now=100.0)
+    mon.record_step(1, 1.0, now=100.0)
+    mon.record_step(0, 1.0, now=200.0)
+    assert mon.dead_hosts(now=205.0) == [1]
+
+
+def test_remesh_drops_pod():
+    total = 128                      # 128 hosts x 4 chips = 512 chips
+    healthy = list(range(0, 100))    # lost 28 hosts
+    plan = plan_remesh(total, healthy, chips_per_host=4, model_parallel=16)
+    chips = int(np.prod(plan.mesh_shape))
+    assert chips <= len(healthy) * 4
+    assert plan.mesh_shape[-1] == 16             # TP preserved
+    assert len(plan.dropped_hosts) == 28
+
+
+def test_remesh_healthy_keeps_two_pods():
+    plan = plan_remesh(128, list(range(128)), 4, 16)
+    assert plan.mesh_shape == (2, 16, 16)
+    assert plan.axis_names == ("pod", "data", "model")
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_int8_roundtrip_error_bounded(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 64)) * 5
+    q, s = compress_int8(x)
+    err = jnp.abs(decompress_int8(q, s) - x)
+    # absmax rowwise quantization: error < scale/2 per element
+    assert float((err <= s / 2 + 1e-6).all())
+
+
+def test_error_feedback_is_lossless_in_aggregate():
+    """EF property: sum of transmitted values -> sum of true values."""
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (8, 32)) * 0.1
+    err = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    for _ in range(50):
+        q, s, err = ef_compress_update(g, err)
+        sent = sent + decompress_int8(q, s)
+    np.testing.assert_allclose(np.asarray(sent) / 50, np.asarray(g),
+                               atol=2e-3)

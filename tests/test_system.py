@@ -1,0 +1,114 @@
+"""End-to-end system tests: train -> attribute (the paper's full pipeline),
+checkpoint crash-resume bitwise equality, serving loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.core import attribution
+from repro.data import CifarLikeImages, TokenStream
+from repro.launch import steps as steps_lib
+from repro.launch.train import train_loop
+from repro.models import cnn, transformer as tf
+from repro.optim import adamw_init, adamw_update
+
+
+def test_cnn_trains_and_heatmap_finds_the_blob():
+    """Fig. 1/3 semantics: after training, the saliency heatmap concentrates
+    on the class-defining blob region."""
+    cfg = cnn.CNNConfig()
+    ds = CifarLikeImages()
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    state = adamw_init(params)
+
+    @jax.jit
+    def step(params, state, img, lab):
+        def loss_fn(p):
+            logits = cnn.apply(p, img, cfg)
+            oh = jax.nn.one_hot(lab, cfg.num_classes)
+            return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * oh, -1))
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, state = adamw_update(g, state, params, lr=3e-3,
+                                     weight_decay=0.0)
+        return params, state, loss
+
+    for s in range(60):
+        b = ds.batch_at(s, batch=64)
+        params, state, loss = step(params, state, jnp.asarray(b["image"]),
+                                   jnp.asarray(b["label"]))
+
+    test = ds.batch_at(999, batch=128)
+    logits = cnn.apply(params, jnp.asarray(test["image"]), cfg)
+    acc = float((jnp.argmax(logits, -1) == jnp.asarray(test["label"])).mean())
+    assert acc > 0.5, f"CNN failed to learn (acc={acc})"
+
+    # attribution concentrates near the blob center
+    f = lambda v: cnn.apply(params, v, cfg, method="saliency")
+    _, rel = attribution.attribute(jax.jit(f), jnp.asarray(test["image"][:16]))
+    hm = np.asarray(attribution.heatmap(rel))
+    cy, cx = ds.blob_center(test["label"][:16])
+    yy = np.arange(32)[None, :, None]
+    xx = np.arange(32)[None, None, :]
+    near = ((yy - cy[:, None, None]) ** 2
+            + (xx - cx[:, None, None]) ** 2) < 6.0 ** 2
+    in_mass = (hm * near).sum(axis=(1, 2)) / hm.sum(axis=(1, 2))
+    frac_area = near.mean()
+    # relevance density inside the blob >> uniform
+    assert float(np.median(in_mass)) > 3 * frac_area, (
+        float(np.median(in_mass)), frac_area)
+
+
+def test_lm_loss_decreases():
+    cfg = configs.get_smoke("qwen2-1.5b")
+    data = TokenStream(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    _, losses = train_loop(cfg, data, steps=30, ckpt_dir=None, verbose=False,
+                           ckpt_every=10 ** 9)
+    assert losses[-1] < losses[0] - 0.2, (losses[0], losses[-1])
+
+
+def test_checkpoint_crash_resume_bitwise(tmp_path):
+    """Interrupted training resumes to the SAME final state (deterministic
+    step-indexed data + checkpointed optimizer)."""
+    cfg = configs.get_smoke("llama3.2-1b")
+    data = TokenStream(vocab=cfg.vocab, seq_len=16, global_batch=4)
+
+    s_full, _ = train_loop(cfg, data, steps=8, ckpt_dir=None, verbose=False,
+                           ckpt_every=10 ** 9)
+
+    d = str(tmp_path / "ck")
+    train_loop(cfg, data, steps=4, ckpt_dir=d, ckpt_every=4, verbose=False)
+    s_resumed, _ = train_loop(cfg, data, steps=8, ckpt_dir=d, ckpt_every=100,
+                              resume=True, verbose=False)
+
+    for a, b in zip(jax.tree.leaves(s_full.params),
+                    jax.tree.leaves(s_resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serve_generate_and_explain():
+    from repro.launch.serve import explain, generate
+    cfg = configs.get_smoke("llama3.2-1b")
+    params = tf.init(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    toks = generate(cfg, params, prompts, max_new=4)
+    assert toks.shape == (2, 4)
+    _, scores = explain(cfg, params, prompts, method="guided")
+    assert scores.shape == (2, 12)
+    assert bool(jnp.isfinite(scores).all())
+
+
+def test_attribute_step_vlm_patches():
+    """VLM: first n_patches scores form the image heatmap (paper Fig. 3 at
+    VLM scale)."""
+    cfg = configs.get_smoke("llava-next-mistral-7b")
+    params = tf.init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                          cfg.vocab),
+             "patches": jax.random.normal(jax.random.PRNGKey(2),
+                                          (2, cfg.n_patches, cfg.d_model))}
+    step = steps_lib.make_attribute_step(cfg, "saliency")
+    logits, scores = jax.jit(step)(params, batch)
+    assert scores.shape == (2, cfg.n_patches + 8)
+    patch_scores = scores[:, :cfg.n_patches]
+    assert bool(jnp.isfinite(patch_scores).all())
