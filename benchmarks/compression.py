@@ -20,7 +20,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import json
 import jax, jax.numpy as jnp
 from functools import partial
-shard_map = partial(jax.shard_map, check_vma=False)
+if hasattr(jax, "shard_map"):                      # jax >= 0.6
+    shard_map = partial(jax.shard_map, check_vma=False)
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _sm
+    shard_map = partial(_sm, check_rep=False)
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch import hlo

@@ -2,7 +2,9 @@
 
 On CPU the Pallas kernels run in interpret mode, so absolute numbers are
 meaningless for TPU — the reported *derived* quantities are the structural
-ones: VMEM working-set bytes per tile and MXU-aligned dot shapes.
+ones: VMEM working-set bytes per tile, MXU dot shapes (the single-dot
+im2col contraction per conv tile), and the fused-vs-unfused HBM traffic of
+a conv layer's backward step.
 """
 from __future__ import annotations
 
@@ -27,6 +29,29 @@ def _time(fn, *args, iters=50):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _conv_bp_hbm_bytes(n, h, w, c, cout_prev, k, *, pooled, elt=4):
+    """HBM bytes of a conv layer's backward step (unpool -> gate -> conv-BP).
+
+    unfused: three pallas_calls, the full-resolution gradient round-trips
+    HBM twice between the pointwise stages and the dot.
+    fused:   one pallas_call — only the residuals, weights and the two
+    endpoint gradients ever touch HBM.
+    """
+    full = n * h * w * c * elt                 # unpooled gradient map
+    g_in = n * (h // 2) * (w // 2) * c * elt if pooled else full
+    idx_b = n * (h // 2) * (w // 2) * c // 4 if pooled else 0
+    mask_b = n * h * w * c // 8
+    w_b = k * k * c * cout_prev * elt
+    dx_b = n * h * w * cout_prev * elt
+    unfused = 0
+    if pooled:
+        unfused += g_in + idx_b + full         # unpool kernel
+    unfused += full + mask_b + full            # relu-gate kernel
+    unfused += full + w_b + dx_b               # conv-BP kernel
+    fused = g_in + idx_b + mask_b + w_b + dx_b
+    return unfused, fused
+
+
 def run():
     rows = []
     # conv (paper conv3: 16x16x32 -> 64)
@@ -39,6 +64,14 @@ def run():
     us = _time(jax.jit(conv_ref.conv2d_input_grad), x_g := jax.random.normal(
         jax.random.PRNGKey(2), (1, 16, 16, 64)), w)
     rows.append(("kernel/conv2d_bp_ref_us", us, "flipped_transpose_reuse"))
+
+    # single-dot im2col tile: the whole K*K tap fan-in is ONE MXU contraction
+    from repro.kernels.conv2d.conv2d import conv2d_pallas
+    us = _time(jax.jit(conv2d_pallas), x, w)
+    h, wd, k, cin, cout = 16, 16, 3, 32, 64
+    rows.append(("kernel/conv2d_single_dot_us", us,
+                 f"tile_dot=[{h * wd}x{k * k * cin}]@[{k * k * cin}x{cout}]"
+                 f"_was_{k * k}x[{h * wd}x{cin}]"))
 
     # vmm (paper FC1: 4096 -> 128)
     xv = jax.random.normal(jax.random.PRNGKey(3), (1, 4096))
@@ -57,6 +90,40 @@ def run():
     us = _time(jax.jit(pool_ref.maxpool_fwd), xp)
     rows.append(("kernel/maxpool_idx_ref_us", us,
                  f"idx_bytes={8 * 16 * 16 * 64 // 4}"))
+
+    # fused backward dataflow: unpool -> mask gate -> conv-BP, ONE call
+    from repro.kernels.conv2d.conv2d import conv2d_bwd_fused_pallas
+    from repro.kernels.pool.pool import maxpool_fwd_pallas, unpool_bwd_pallas
+    from repro.kernels.relu_mask.relu_mask import (relu_bwd_pallas,
+                                                  relu_fwd_pallas)
+    n, h, wd, cin, cout, k = 1, 16, 16, 64, 64, 3   # paper conv4 (pooled)
+    xc = jax.random.normal(jax.random.PRNGKey(7), (n, h, wd, cin))
+    wc = jax.random.normal(jax.random.PRNGKey(8), (k, k, cin, cout)) * 0.1
+    y = conv_ref.conv2d(xc, wc)
+    _, m2 = relu_fwd_pallas(y.reshape(-1, cout))
+    mask4 = m2.reshape(n, h, wd, -1)
+    _, idx = maxpool_fwd_pallas(jnp.maximum(y, 0))
+    g = jax.random.normal(jax.random.PRNGKey(9), (n, h // 2, wd // 2, cout))
+    wt = conv_ref.flip_transpose(wc)
+
+    fused = jax.jit(lambda gg: conv2d_bwd_fused_pallas(
+        gg, wt, pool_idx=idx, relu_mask=mask4, method="guided"))
+
+    def _unfused(gg):
+        up = unpool_bwd_pallas(idx, gg)
+        gated = relu_bwd_pallas(m2, up.reshape(-1, cout),
+                                "guided").reshape(up.shape)
+        return conv2d_pallas(gated, wt)
+
+    us_f = _time(fused, g, iters=10)
+    us_u = _time(jax.jit(_unfused), g, iters=10)
+    unfused_b, fused_b = _conv_bp_hbm_bytes(n, h, wd, cout, cin, k,
+                                            pooled=True)
+    rows.append(("kernel/conv_bp_fused_us", us_f,
+                 f"hbm_bytes={fused_b}_one_pallas_call"))
+    rows.append(("kernel/conv_bp_unfused_us", us_u,
+                 f"hbm_bytes={unfused_b}_3_calls_"
+                 f"fused_saves={1 - fused_b / unfused_b:.0%}"))
     return rows
 
 

@@ -1,4 +1,6 @@
-# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV and
+# writes ``benchmarks/results/BENCH_<UTC-date>.json`` (suite -> rows) so the
+# perf trajectory stays machine-readable across PRs.
 #
 #   memory_overhead      — paper Table II + §V (3.4 Mb -> 24.7 Kb, 137x)
 #   fp_bp_overhead       — paper Table IV (FP vs FP+BP latency, 50-72%)
@@ -7,6 +9,9 @@
 #   roofline             — §Roofline terms from the dry-run artifacts
 from __future__ import annotations
 
+import datetime
+import json
+import os
 import traceback
 
 
@@ -21,17 +26,29 @@ def main() -> None:
         ("compression", compression.run),
         ("roofline", roofline.run),
     ]
-    failures = 0
+    results, failures = {}, []
     for name, fn in suites:
         try:
-            for row, val, derived in fn():
+            rows = [(row, float(val), derived) for row, val, derived in fn()]
+            results[name] = rows
+            for row, val, derived in rows:
                 print(f"{row},{val:.3f},{derived}", flush=True)
         except Exception:
-            failures += 1
+            failures.append(name)
             print(f"{name},nan,FAILED", flush=True)
             traceback.print_exc()
+
+    date = datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%d")
+    out_dir = os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"BENCH_{date}.json")
+    with open(out_path, "w") as f:
+        json.dump({"date": date, "suites": results, "failures": failures},
+                  f, indent=1)
+    print(f"[bench] wrote {out_path}", flush=True)
+
     if failures:
-        raise SystemExit(f"{failures} benchmark suites failed")
+        raise SystemExit(f"{len(failures)} benchmark suites failed")
 
 
 if __name__ == "__main__":

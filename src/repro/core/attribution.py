@@ -73,15 +73,31 @@ def attribute_tokens(f: Callable, embeds: jnp.ndarray, *, position=-1,
     return logits, rel, scores
 
 
-def attribute_classes(f: Callable, x, targets):
+def attribute_classes(f: Callable, x, targets, *, backward=None):
     """Relevance maps for SEVERAL classes from ONE forward pass.
 
     The paper's FPGA stores the ReLU/pool masks once per input; re-running
     only the BP phase per output class amortizes the FP cost across
-    explanations.  The JAX analogue: one ``jax.vjp`` (one forward, residuals
-    held), then a vmap over cotangent seeds — K backward passes, zero extra
-    forwards.  ``targets``: int array [K]; returns (logits, rel [K, ...]).
+    explanations.  ``targets``: int array [K]; returns (logits, rel [K, ...]).
+
+    Two backends:
+
+    * default — one ``jax.vjp`` (one forward, residuals held), then a vmap
+      over cotangent seeds: K backward passes, zero extra forwards.
+    * ``backward`` given (e.g. from ``cnn.seed_batched_attribution``) —
+      ``f(x)`` must return ``(logits, residuals)`` and
+      ``backward(residuals, seeds)`` consumes ALL K one-hot seeds at once
+      with a leading seeds axis folded into the kernels' sublane dimension:
+      one grid launch per layer, every stored mask loaded once and shared
+      across the K explanations (the paper's mask-reuse amortization).
     """
+    if backward is not None:
+        logits, residuals = f(x)
+        seeds = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+        seeds = jnp.broadcast_to(seeds[:, None, :],
+                                 (seeds.shape[0],) + logits.shape)
+        return logits, backward(residuals, seeds)
+
     logits, vjp_fn = jax.vjp(f, x)
     seeds = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
     seeds = jnp.broadcast_to(seeds[:, None, :],

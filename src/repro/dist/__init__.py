@@ -1,0 +1,8 @@
+"""Distribution layer: logical-axis sharding + name-based param specs.
+
+``sharding`` holds the mesh context (:func:`use_mesh` / :func:`current_mesh`),
+the logical->physical axis translation (:func:`physical_spec`) and the
+in-graph constraint helper (:func:`constrain`).  ``params`` derives
+PartitionSpec trees for whole parameter pytrees from leaf names.
+"""
+from repro.dist import params, sharding  # noqa: F401

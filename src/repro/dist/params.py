@@ -1,0 +1,64 @@
+"""Name-based parameter sharding rules for the whole model zoo.
+
+One table instead of per-arch spec trees: a leaf's NAME (last dict key on its
+tree path) plus its rank decide the spec.  Column-parallel projections shard
+their output dim on "model", row-parallel ones their input dim; MoE expert
+stacks ([L, E, d, f]) shard the expert axis ("model" carries EP, see
+launch/mesh.py); everything unnamed replicates.  Leading layer axes from the
+vmap-stacked segment init are padded with ``None``.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import physical_spec
+
+# output dim ("model" last): qkv projections, up/gate FFN, SSM in/dt/conv
+_COL = ("wq", "wk", "wv", "w1", "w3", "in_proj", "dt_proj", "conv_w")
+# input dim ("model" second-to-last): down/out projections, SSM dynamics
+_ROW = ("wo", "w2", "out_proj", "x_proj", "A_log")
+# per-output-channel vectors riding the column-parallel shards
+_VEC = ("bq", "bk", "bv", "conv_b", "dt_bias", "D")
+# expert stacks [L, E, d, f]: expert-parallel on E
+_MOE = ("w1", "w2", "w3")
+
+
+def _leaf_name(path) -> str:
+    """Last dict-key / attr name on a tree path (list indices skipped)."""
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def _leaf_spec(path, leaf) -> P:
+    name = _leaf_name(path)
+    nd = leaf.ndim
+    if name in _MOE and nd >= 4:
+        return P(*((None,) * (nd - 3) + ("model", None, None)))
+    if name in _COL and nd >= 2:
+        return P(*((None,) * (nd - 1) + ("model",)))
+    if name in _ROW and nd >= 2:
+        return P(*((None,) * (nd - 2) + ("model", None)))
+    if name in _VEC and nd >= 1:
+        return P(*((None,) * (nd - 1) + ("model",)))
+    if name in ("table", "head") and nd == 2:
+        # embed table d-sharded (layers.embed gathers locally); head V-sharded
+        return P(None, "model")
+    return P(*((None,) * nd))
+
+
+def spec_tree(params_sds):
+    """Pytree of PartitionSpecs mirroring ``params_sds`` (shapes only)."""
+    return jax.tree_util.tree_map_with_path(_leaf_spec, params_sds)
+
+
+def param_sharding_tree(params_sds, mesh: Mesh):
+    """NamedSharding tree for ``jax.jit(in_shardings=...)``."""
+    specs = spec_tree(params_sds)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, physical_spec(tuple(s), mesh)),
+        specs, is_leaf=lambda s: isinstance(s, P))

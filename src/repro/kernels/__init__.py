@@ -2,17 +2,40 @@
 
 Each subpackage mirrors an FPGA compute block:
 
-  conv2d/     tiled output-stationary convolution — FP, and BP reusing the
-              SAME kernel on flipped-transposed weights (paper Fig. 6, Table I)
-  vmm/        tiled FC matmul — FP, and BP via transposed operand load
+  conv2d/     tiled SINGLE-DOT convolution: the K*K taps are gathered in
+              VMEM (im2col on the already-loaded block) into one
+              [H*W, K^2*Cin] @ [K^2*Cin, Tco] MXU contraction per tile.
+              FP and BP share the kernel — BP loads flipped-transposed
+              weights (paper Fig. 6, Table I).
+  vmm/        tiled FC matmul — FP, and BP via transposed operand load.
   relu_mask/  fused ReLU + 1-bit packed mask emit, and the three masked
-              BP dataflows (paper Fig. 4)
-  pool/       2x2 max-pool + 2-bit argmax emit, and unpool BP (paper Fig. 5)
+              BP dataflows (paper Fig. 4).
+  pool/       2x2 max-pool + 2-bit argmax emit, and unpool BP (Fig. 5).
   ssm_scan/   state-stationary selective scan (mamba hot-spot; beyond-paper:
-              recurrent state persists in VMEM across the seq-chunk grid)
+              recurrent state persists in VMEM across the seq-chunk grid).
 
-Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling, MXU-aligned dots)
-and are validated on CPU with interpret=True against the ref.py oracles.
+FUSED BACKWARD DATAFLOW (the paper's central overhead claim, Fig. 4-6):
+a CNN layer's backward step — 2-bit unpool scatter, 1-bit mask unpack +
+method gating (saliency / deconvnet / guided), and the flipped-transpose
+conv or transposed matmul — executes as ONE ``pallas_call``
+(``conv2d.conv2d_bwd_fused_pallas`` / ``vmm.vmm_bwd_fused_pallas``).  The
+pointwise stages run as prologues on the incoming gradient (optionally an
+epilogue gate for the previous layer's rectifier on the outgoing one), so
+the gradient never round-trips HBM between stages.  HBM traffic per pooled
+conv layer backward (paper conv4, f32): unfused 3 calls move the full-res
+gradient twice — ~483 KB; fused moves only the endpoint gradients +
+residuals + weights — ~227 KB (53% less; `benchmarks/kernels.py` reports
+both).  A leading seeds axis S folds into the sublane dimension of the
+fused dots, so explaining S classes is one grid launch per layer sharing
+every stored mask/index load (the paper's mask-reuse amortization; wired
+through ``repro.core.attribution.attribute_classes(backward=...)`` and
+``repro.models.cnn.seed_batched_attribution``).
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling, MXU-aligned
+dots) and are validated on CPU with interpret=True against the ref.py
+oracles.  Every wrapper's ``interpret`` argument defaults to ``None`` ->
+:func:`interpret_mode`, so direct calls compile on TPU and interpret
+elsewhere without the caller having to thread the flag.
 """
 import jax
 

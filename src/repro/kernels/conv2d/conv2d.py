@@ -1,11 +1,14 @@
-"""Tiled output-stationary convolution kernel (paper §III.B) for TPU.
+"""Tiled single-dot convolution kernels (paper §III.B, Fig. 4-6) for TPU.
 
 FPGA -> TPU mapping:
 
   * DRAM -> BRAM tile loads over AXI  ==>  HBM -> VMEM blocks via BlockSpec.
-  * N_oh x N_ow unrolled MAC array    ==>  one MXU matmul per kernel tap:
-    the (H x W) output tile is flattened to the sublane axis and contracted
-    against [Cin, Cout_tile] — a [H*W, Cin] @ [Cin, Tco] dot per (kh, kw).
+  * N_oh x N_ow unrolled MAC array    ==>  ONE MXU contraction per tile:
+    the K*K taps of the already-loaded padded block are gathered in VMEM
+    (im2col) into a [H*W, K*K*Cin] patch matrix and contracted against the
+    [K*K*Cin, Tco] flattened kernel — a single MXU-shaped dot instead of
+    K^2 skinny [H*W, Cin] dots, so the MXU sees one deep contraction and
+    the weights stream through once per tile.
   * Output-stationary accumulation    ==>  f32 accumulator in VMEM registers,
     written once per output tile.
 
@@ -14,42 +17,65 @@ padded feature map fits easily in VMEM (34*34*128*4B = 0.6 MB << 16 MB), so
 we tile over (batch, Cout) and keep H/W un-tiled — the TPU analogue of the
 FPGA's "maximally use on-chip resources" rule.  Cout tiles are 128-aligned
 for the MXU lane width; Cin is zero-padded to the sublane multiple.
+
+:func:`conv2d_bwd_fused_pallas` is the fused BP dataflow: the 2-bit unpool
+scatter and the 1-bit ReLU mask gating run INSIDE the conv-BP pallas_call as
+prologues on the incoming gradient (optionally a second gate as epilogue on
+the outgoing one), so a CNN layer's whole backward step is one kernel and
+the gradient never touches HBM between the pointwise stages and the dot.
+A leading seeds axis S folds into the sublane dimension of the patch matrix
+([S*H*W, K*K*C]), so explaining S classes shares one mask/index load per
+tile — the paper's mask-reuse amortization.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import interpret_mode
+from repro.kernels.pool.pool import unpack_crumbs, unpool_scatter
+from repro.kernels.relu_mask.relu_mask import gate_gradient, unpack_bits
+
+
+def _im2col_dot(xpad, K: int, H: int, W: int, wmat):
+    """[S, H+2p, W+2p, C] -> one [S*H*W, K*K*C] @ [K*K*C, T] f32 dot."""
+    s, _, _, c = xpad.shape
+    cols = [xpad[:, i:i + H, j:j + W, :].reshape(s * H * W, c)
+            for i in range(K) for j in range(K)]
+    patches = jnp.concatenate(cols, axis=1)              # [S*H*W, K*K*C]
+    acc = jnp.dot(patches, wmat, preferred_element_type=jnp.float32)
+    return acc.reshape(s, H, W, wmat.shape[-1])
+
 
 def _conv_kernel(x_ref, w_ref, o_ref, *, K: int, H: int, W: int):
-    """One (batch, cout-tile) grid cell: full-map output-stationary conv."""
+    """One (batch, cout-tile) grid cell: full-map single-dot conv."""
     cin = x_ref.shape[-1]
     tco = o_ref.shape[-1]
-    acc = jnp.zeros((H * W, tco), dtype=jnp.float32)
-    # Output-stationary: iterate the K*K taps, one MXU dot each (paper's
-    # loop-unrolled MAC array with the accumulator held in place).
-    for i in range(K):
-        for j in range(K):
-            xs = x_ref[0, i:i + H, j:j + W, :].reshape(H * W, cin)
-            acc += jnp.dot(xs, w_ref[i, j],
-                           preferred_element_type=jnp.float32)
-    o_ref[0, :, :, :] = acc.reshape(H, W, tco).astype(o_ref.dtype)
+    wmat = w_ref[...].reshape(K * K * cin, tco)
+    o_ref[...] = _im2col_dot(x_ref[...], K, H, W, wmat).astype(o_ref.dtype)
+
+
+def _cout_tiling(cout: int, co_tile: int):
+    tco = min(co_tile, -(-cout // 128) * 128) if cout >= 128 else cout
+    return tco, -(-cout // tco) * tco
 
 
 def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, *, co_tile: int = 128,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
     """[N, H, W, Cin] x [K, K, Cin, Cout] -> [N, H, W, Cout], stride 1, SAME."""
+    if interpret is None:
+        interpret = interpret_mode()
     n, h, ww, cin = x.shape
     k, _, _, cout = w.shape
     p = (k - 1) // 2
 
     # Zero-pad: spatial halo (SAME), Cin to sublane multiple, Cout to tile.
     cin_p = -(-cin // 8) * 8
-    tco = min(co_tile, -(-cout // 128) * 128) if cout >= 128 else cout
-    cout_p = -(-cout // tco) * tco
+    tco, cout_p = _cout_tiling(cout, co_tile)
     xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, cin_p - cin)))
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, cin_p - cin), (0, cout_p - cout)))
 
@@ -67,3 +93,145 @@ def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, *, co_tile: int = 128,
         interpret=interpret,
     )(xp, wp)
     return out[..., :cout]
+
+
+# ---------------------------------------------------------------------------
+# fused backward: [unpool] -> [mask gate] -> conv-BP dot -> [epilogue gate]
+# ---------------------------------------------------------------------------
+
+
+def _conv_bwd_fused_kernel(*refs, K: int, H: int, W: int, method: str,
+                           has_pool: bool, gate_in: bool, has_mask: bool,
+                           gate_out: bool, has_omask: bool):
+    it = iter(refs)
+    g_ref, w_ref = next(it), next(it)
+    i_ref = next(it) if has_pool else None
+    m_ref = next(it) if has_mask else None
+    om_ref = next(it) if has_omask else None
+    o_ref = next(it)
+
+    p = (K - 1) // 2
+    c = g_ref.shape[-1]
+    s = g_ref.shape[0]
+    tco = o_ref.shape[-1]
+
+    g = g_ref[:, 0]                                     # [S, Hg, Wg, C]
+    if has_pool:                                        # prologue 1: unpool
+        g = unpool_scatter(unpack_crumbs(i_ref[0]), g)  # -> [S, H, W, C]
+    if gate_in:                                         # prologue 2: Eq. 3-5
+        m = unpack_bits(m_ref[0]) if has_mask else None
+        g = gate_gradient(g, m, method)
+
+    # halo-pad in VMEM, then the single im2col dot (flipped-transpose conv)
+    gp = jnp.zeros((s, H + 2 * p, W + 2 * p, c), g.dtype)
+    gp = gp.at[:, p:p + H, p:p + W, :].set(g)
+    out = _im2col_dot(gp, K, H, W, w_ref[...].reshape(K * K * c, tco))
+
+    if gate_out:                                        # epilogue: prev ReLU
+        om = unpack_bits(om_ref[0]) if has_omask else None
+        out = gate_gradient(out, om, method)
+    o_ref[...] = out.reshape(s, 1, H, W, tco).astype(o_ref.dtype)
+
+
+def conv2d_bwd_fused_pallas(
+        g: jnp.ndarray, wt: jnp.ndarray, *,
+        pool_idx: Optional[jnp.ndarray] = None,
+        relu_mask: Optional[jnp.ndarray] = None,
+        gate: Optional[bool] = None,
+        method: str = "saliency",
+        out_relu_mask: Optional[jnp.ndarray] = None,
+        out_gate: Optional[bool] = None,
+        co_tile: int = 128,
+        interpret: Optional[bool] = None) -> jnp.ndarray:
+    """One pallas_call for a conv layer's whole backward step.
+
+    ``g``:        grads w.r.t. the layer output — [N, Hg, Wg, C] or
+                  seed-batched [S, N, Hg, Wg, C] (Hg = H/2 when pooled).
+    ``wt``:       flip-transposed kernel [K, K, C, Cout'] (forward
+                  ``ref.flip_transpose(w)``; Cout' is the forward Cin).
+    ``pool_idx``: [N, Hg, Wg, ceil(C/4)] packed 2-bit argmax (None: no pool).
+    ``relu_mask``: [N, H, W, ceil(C/8)] packed 1-bit mask of the layer's own
+                  ReLU.  ``gate`` forces the rectifier rule on/off — pass
+                  ``gate=True`` with no mask for deconvnet (Eq. 4 reads only
+                  the gradient sign).
+    ``out_relu_mask``/``out_gate``: same, applied as an EPILOGUE on the
+                  outgoing dx (the PREVIOUS layer's rectifier), [N, H, W,
+                  ceil(Cout'/8)].
+    Masks/indices carry no seeds axis: all S seeds share one stored residual
+    load per tile (the paper's mask-reuse amortization).
+    """
+    if interpret is None:
+        interpret = interpret_mode()
+    if gate is None:
+        gate = relu_mask is not None
+    if out_gate is None:
+        out_gate = out_relu_mask is not None
+    if gate and relu_mask is None and method != "deconvnet":
+        raise ValueError(
+            f"gate=True without relu_mask is only valid for "
+            f"method='deconvnet' (Eq. 4 reads just the gradient sign); "
+            f"method={method!r} needs the stored 1-bit mask")
+    if out_gate and out_relu_mask is None and method != "deconvnet":
+        raise ValueError(
+            f"out_gate=True without out_relu_mask is only valid for "
+            f"method='deconvnet'; method={method!r} needs the stored mask")
+    seeded = g.ndim == 5
+    if not seeded:
+        g = g[None]
+    s, n, hg, wg, c = g.shape
+    k, _, cw, cout = wt.shape
+    has_pool = pool_idx is not None
+    h, w_sp = (2 * hg, 2 * wg) if has_pool else (hg, wg)
+    p = (k - 1) // 2
+
+    cp = -(-c // 8) * 8                      # contraction channels (fwd Cout)
+    tco, cout_p = _cout_tiling(cout, co_tile)
+    if tco % 8:                              # epilogue mask bytes need /8 tiles
+        tco = -(-tco // 8) * 8
+        cout_p = -(-cout // tco) * tco
+    gp = jnp.pad(g, ((0, 0),) * 4 + ((0, cp - c),))
+    wp = jnp.pad(wt, ((0, 0), (0, 0), (0, cp - cw), (0, cout_p - cout)))
+
+    grid = (n, cout_p // tco)
+    in_specs = [
+        pl.BlockSpec((s, 1, hg, wg, cp), lambda b, co: (0, b, 0, 0, 0)),
+        pl.BlockSpec((k, k, cp, tco), lambda b, co: (0, 0, 0, co)),
+    ]
+    operands = [gp, wp]
+
+    if has_pool:
+        ip = jnp.pad(pool_idx,
+                     ((0, 0),) * 3 + ((0, cp // 4 - pool_idx.shape[-1]),))
+        in_specs.append(pl.BlockSpec((1, hg, wg, cp // 4),
+                                     lambda b, co: (b, 0, 0, 0)))
+        operands.append(ip)
+    has_mask = relu_mask is not None
+    if has_mask:
+        mp = jnp.pad(relu_mask,
+                     ((0, 0),) * 3 + ((0, cp // 8 - relu_mask.shape[-1]),))
+        in_specs.append(pl.BlockSpec((1, h, w_sp, cp // 8),
+                                     lambda b, co: (b, 0, 0, 0)))
+        operands.append(mp)
+    has_omask = out_relu_mask is not None
+    if has_omask:
+        omp = jnp.pad(out_relu_mask,
+                      ((0, 0),) * 3
+                      + ((0, cout_p // 8 - out_relu_mask.shape[-1]),))
+        in_specs.append(pl.BlockSpec((1, h, w_sp, tco // 8),
+                                     lambda b, co: (b, 0, 0, co)))
+        operands.append(omp)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _conv_bwd_fused_kernel, K=k, H=h, W=w_sp, method=method,
+            has_pool=has_pool, gate_in=gate, has_mask=has_mask,
+            gate_out=out_gate, has_omask=has_omask),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((s, 1, h, w_sp, tco),
+                               lambda b, co: (0, b, 0, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((s, n, h, w_sp, cout_p), g.dtype),
+        interpret=interpret,
+    )(*operands)
+    out = out[..., :cout]
+    return out if seeded else out[0]

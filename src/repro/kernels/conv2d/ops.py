@@ -2,9 +2,14 @@
 
 The BP of a stride-1 SAME conv w.r.t. its *input* is the SAME conv of the
 incoming gradient with the 180-degree-flipped, channel-transposed kernel
-(paper Fig. 6 / Table I).  We therefore invoke the *same* Pallas kernel for
-both phases — only the weight layout in HBM changes, the TPU analogue of the
-FPGA's modified DRAM access pattern.
+(paper Fig. 6 / Table I).  We therefore invoke the *same* single-dot Pallas
+kernel for both phases — only the weight layout in HBM changes, the TPU
+analogue of the FPGA's modified DRAM access pattern.
+
+This is the STANDALONE conv op.  Inside the CNN, layers instead use the
+fused blocks of :mod:`repro.models.cnn`, whose backward step runs unpool +
+mask gating + this flipped-transpose conv as ONE ``pallas_call``
+(:func:`repro.kernels.conv2d.conv2d.conv2d_bwd_fused_pallas`).
 
 The weight cotangent (needed for training, never for attribution) is computed
 via the jnp reference; when the caller differentiates w.r.t. inputs only
@@ -15,7 +20,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import interpret_mode
 from repro.kernels.conv2d import ref
 from repro.kernels.conv2d.conv2d import conv2d_pallas
 
@@ -23,7 +27,7 @@ from repro.kernels.conv2d.conv2d import conv2d_pallas
 @jax.custom_vjp
 def conv2d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """Stride-1 SAME conv, NHWC x HWIO, Pallas-tiled."""
-    return conv2d_pallas(x, w, interpret=interpret_mode())
+    return conv2d_pallas(x, w)
 
 
 def _fwd(x, w):
@@ -33,11 +37,9 @@ def _fwd(x, w):
 def _bwd(res, g):
     x, w = res
     # Phase BP, same compute block: flipped-transposed kernel (Table I).
-    dx = conv2d_pallas(g, ref.flip_transpose(w), interpret=interpret_mode())
+    dx = conv2d_pallas(g, ref.flip_transpose(w))
     # Weight grad (training only; DCE'd for attribution).
-    _, wgrad = jax.vjp(lambda w_: ref.conv2d(x, w_), w)
-    (dw,) = wgrad(g)
-    return dx, dw
+    return dx, ref.conv2d_weight_grad(x, w, g)
 
 
 conv2d.defvjp(_fwd, _bwd)

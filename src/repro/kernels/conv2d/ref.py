@@ -19,3 +19,18 @@ def flip_transpose(w: jnp.ndarray) -> jnp.ndarray:
 def conv2d_input_grad(g: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """dL/dx of a stride-1 SAME conv == SAME conv of g with flip_transpose(w)."""
     return conv2d(g, flip_transpose(w))
+
+
+def conv2d_weight_grad(x: jnp.ndarray, w: jnp.ndarray,
+                       g: jnp.ndarray) -> jnp.ndarray:
+    """dL/dw via the oracle's vjp, in f32 throughout.
+
+    The f32 round-trip matters: the oracle's trailing ``astype`` would
+    otherwise transpose into an f32 cotangent feeding a low-precision conv
+    and crash the eager bf16 path.  Training-only — attribution callers
+    never differentiate w, so XLA DCEs this together with the cached x.
+    """
+    _, wgrad = jax.vjp(lambda w_: conv2d(x.astype(jnp.float32), w_),
+                       w.astype(jnp.float32))
+    (dw,) = wgrad(g.astype(jnp.float32))
+    return dw.astype(w.dtype)

@@ -11,23 +11,22 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import interpret_mode
 from repro.kernels.pool.pool import maxpool_fwd_pallas, unpool_bwd_pallas
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(1,))
 def _maxpool_attr(x, method: str):
-    y, _ = maxpool_fwd_pallas(x, interpret=interpret_mode())
+    y, _ = maxpool_fwd_pallas(x)
     return y
 
 
 def _fwd(x, method: str):
-    y, packed = maxpool_fwd_pallas(x, interpret=interpret_mode())
+    y, packed = maxpool_fwd_pallas(x)
     return y, packed
 
 
 def _bwd(method: str, packed, g):
-    return (unpool_bwd_pallas(packed, g, interpret=interpret_mode()),)
+    return (unpool_bwd_pallas(packed, g),)
 
 
 _maxpool_attr.defvjp(_fwd, _bwd)

@@ -8,12 +8,51 @@ with everything else zeroed.
 
 Window candidates are materialized as four strided views — (0,0) (0,1) (1,0)
 (1,1) — so max/argmax are 4-way VPU selects, no 6-D transpose on-chip.
+
+:func:`unpack_crumbs` and :func:`unpool_scatter` are IN-KERNEL helpers also
+invoked by the fused conv backward kernel (conv2d/), where the unpool scatter
+runs as a prologue on the incoming gradient inside the conv-BP pallas_call.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import interpret_mode
+
+
+# ---------------------------------------------------------------------------
+# in-kernel helpers (shared by the fused conv BP kernel)
+# ---------------------------------------------------------------------------
+
+
+def unpack_crumbs(packed: jnp.ndarray) -> jnp.ndarray:
+    """[..., C/4] uint8 -> [..., C] int32 in 0..3 — VPU shift/and unpack."""
+    shifts = 2 * jnp.arange(4, dtype=jnp.int32)
+    idx = (packed.astype(jnp.int32)[..., None] >> shifts) & 3
+    return idx.reshape(packed.shape[:-1] + (packed.shape[-1] * 4,))
+
+
+def unpool_scatter(idx: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Route pooled grads [..., H/2, W/2, C] -> [..., H, W, C] (Fig. 5b).
+
+    ``idx`` ([H/2, W/2, C], values 0..3) broadcasts against ``g``'s leading
+    axes — seed-batched gradients share one stored index map.
+    """
+    hp, wp, c = g.shape[-3:]
+    out = jnp.zeros(g.shape[:-3] + (2 * hp, 2 * wp, c), g.dtype)
+    for k, (di, dj) in enumerate(((0, 0), (0, 1), (1, 0), (1, 1))):
+        out = out.at[..., di::2, dj::2, :].set(jnp.where(idx == k, g, 0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# standalone kernels
+# ---------------------------------------------------------------------------
+
 
 def _pool_fwd_kernel(x_ref, y_ref, i_ref):
     x = x_ref[0]                      # [H, W, C]
@@ -28,19 +67,14 @@ def _pool_fwd_kernel(x_ref, y_ref, i_ref):
 
 
 def _unpool_bwd_kernel(i_ref, g_ref, o_ref):
-    g = g_ref[0]                      # [H/2, W/2, C]
-    hp, wp, c = g.shape
-    packed = i_ref[0].astype(jnp.int32)
-    shifts = 2 * jnp.arange(4, dtype=jnp.int32)
-    idx = ((packed[..., None] >> shifts) & 3).reshape(hp, wp, c)
-    out = jnp.zeros((2 * hp, 2 * wp, c), g.dtype)
-    for k, (di, dj) in enumerate([(0, 0), (0, 1), (1, 0), (1, 1)]):
-        out = out.at[di::2, dj::2].set(jnp.where(idx == k, g, 0))
-    o_ref[0] = out
+    idx = unpack_crumbs(i_ref[0])               # [H/2, W/2, C]
+    o_ref[0] = unpool_scatter(idx, g_ref[0])
 
 
-def maxpool_fwd_pallas(x: jnp.ndarray, *, interpret: bool = True):
+def maxpool_fwd_pallas(x: jnp.ndarray, *, interpret: Optional[bool] = None):
     """x: [N, H, W, C] (H, W even; C padded to 4) -> (pooled, packed idx)."""
+    if interpret is None:
+        interpret = interpret_mode()
     n, h, w, c = x.shape
     cp = -(-c // 4) * 4
     xp = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
@@ -58,8 +92,10 @@ def maxpool_fwd_pallas(x: jnp.ndarray, *, interpret: bool = True):
 
 
 def unpool_bwd_pallas(packed: jnp.ndarray, g: jnp.ndarray, *,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """packed: [N, H/2, W/2, ceil(C/4)], g: [N, H/2, W/2, C] -> [N, H, W, C]."""
+    if interpret is None:
+        interpret = interpret_mode()
     n, hp, wp, c = g.shape
     cp = -(-c // 4) * 4
     gp = jnp.pad(g, ((0, 0), (0, 0), (0, 0), (0, cp - c)))

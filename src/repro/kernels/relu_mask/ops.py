@@ -11,7 +11,6 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import interpret_mode
 from repro.kernels.relu_mask.relu_mask import relu_bwd_pallas, relu_fwd_pallas
 
 
@@ -21,12 +20,12 @@ def _as2d(x):
 
 @partial(jax.custom_vjp, nondiff_argnums=(1,))
 def _relu_attr(x, method: str):
-    y, _ = relu_fwd_pallas(_as2d(x), interpret=interpret_mode())
+    y, _ = relu_fwd_pallas(_as2d(x))
     return y.reshape(x.shape)
 
 
 def _fwd(x, method: str):
-    y, packed = relu_fwd_pallas(_as2d(x), interpret=interpret_mode())
+    y, packed = relu_fwd_pallas(_as2d(x))
     res = None if method == "deconvnet" else packed   # Table II
     return y.reshape(x.shape), res
 
@@ -35,7 +34,7 @@ def _bwd(method: str, packed, g):
     g2 = _as2d(g)
     if packed is None:
         packed = jnp.zeros((g2.shape[0], -(-g2.shape[1] // 8)), jnp.uint8)
-    r = relu_bwd_pallas(packed, g2, method, interpret=interpret_mode())
+    r = relu_bwd_pallas(packed, g2, method)
     return (r.reshape(g.shape).astype(g.dtype),)
 
 

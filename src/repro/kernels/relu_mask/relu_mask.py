@@ -8,14 +8,55 @@ kernel fuses unpack + the method's gating rule into the gradient stream.
 Bit packing inside the kernel: the [T, C] sign bits are viewed as
 [T, C/8, 8] and contracted with the weight vector [1, 2, ..., 128] — a VPU
 reduce, no MXU involvement.
+
+:func:`unpack_bits` and :func:`gate_gradient` are IN-KERNEL helpers shared
+with the fused conv/vmm backward kernels (conv2d/, vmm/), so the mask unpack
++ method gating runs as a prologue/epilogue inside those dots and the
+gradient never round-trips HBM between the pointwise stage and the matmul.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import interpret_mode
+
+
+# ---------------------------------------------------------------------------
+# in-kernel helpers (shared by the fused conv/vmm BP kernels)
+# ---------------------------------------------------------------------------
+
+
+def unpack_bits(packed: jnp.ndarray) -> jnp.ndarray:
+    """[..., C/8] uint8 -> [..., C] bool — VPU shift/and unpack, no HBM."""
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    bits = (packed.astype(jnp.int32)[..., None] >> shifts) & 1
+    return bits.reshape(packed.shape[:-1]
+                        + (packed.shape[-1] * 8,)).astype(jnp.bool_)
+
+
+def gate_gradient(g: jnp.ndarray, mask_bits: Optional[jnp.ndarray],
+                  method: str) -> jnp.ndarray:
+    """The method's rectifier rule (paper Eq. 3-5) on a gradient block.
+
+    ``mask_bits`` broadcasts against ``g`` (seed-batched grads carry leading
+    axes the stored mask does not — the paper's mask-reuse amortization).
+    """
+    if method == "deconvnet":                        # Eq. 4: no mask read
+        return jnp.where(g > 0, g, 0)
+    if method == "guided":                           # Eq. 5
+        return jnp.where(mask_bits & (g > 0), g, 0)
+    return jnp.where(mask_bits, g, 0)                # Eq. 3: saliency
+
+
+# ---------------------------------------------------------------------------
+# standalone kernels
+# ---------------------------------------------------------------------------
+
 
 def _relu_fwd_kernel(x_ref, y_ref, m_ref):
     x = x_ref[...]
@@ -29,17 +70,11 @@ def _relu_fwd_kernel(x_ref, y_ref, m_ref):
 def _relu_bwd_kernel(m_ref, g_ref, r_ref, *, method: str):
     g = g_ref[...]
     if method == "deconvnet":               # no mask read at all
-        r_ref[...] = jnp.where(g > 0, g, 0)
+        r_ref[...] = gate_gradient(g, None, method)
         return
     t, c = g.shape
-    packed = m_ref[...].astype(jnp.int32)
-    shifts = jnp.arange(8, dtype=jnp.int32)
-    bits = (packed[..., None] >> shifts) & 1
-    m = bits.reshape(t, c).astype(jnp.bool_)
-    if method == "guided":
-        r_ref[...] = jnp.where(m & (g > 0), g, 0)
-    else:                                    # saliency
-        r_ref[...] = jnp.where(m, g, 0)
+    m = unpack_bits(m_ref[...]).reshape(t, c)
+    r_ref[...] = gate_gradient(g, m, method)
 
 
 def _pad_rows_cols(a, tr, c_mult):
@@ -49,8 +84,10 @@ def _pad_rows_cols(a, tr, c_mult):
 
 
 def relu_fwd_pallas(x2d: jnp.ndarray, *, tr: int = 256,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None):
     """x2d: [R, C] -> (relu, packed mask [R, ceil(C/8)])."""
+    if interpret is None:
+        interpret = interpret_mode()
     r, c = x2d.shape
     xp, rp, cp = _pad_rows_cols(x2d, tr, 128)
     tr = min(tr, rp)
@@ -68,8 +105,11 @@ def relu_fwd_pallas(x2d: jnp.ndarray, *, tr: int = 256,
 
 
 def relu_bwd_pallas(packed: jnp.ndarray, g2d: jnp.ndarray, method: str, *,
-                    tr: int = 256, interpret: bool = True) -> jnp.ndarray:
+                    tr: int = 256,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """Masked gradient propagation; method is static (design-time config)."""
+    if interpret is None:
+        interpret = interpret_mode()
     r, c = g2d.shape
     gp, rp, cp = _pad_rows_cols(g2d, tr, 128)
     mp = jnp.pad(packed, ((0, rp - r), (0, cp // 8 - packed.shape[1])))

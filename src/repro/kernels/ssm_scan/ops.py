@@ -10,7 +10,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import interpret_mode
 from repro.kernels.ssm_scan import ref
 from repro.kernels.ssm_scan.ssm_scan import selective_scan_pallas
 
@@ -18,8 +17,7 @@ from repro.kernels.ssm_scan.ssm_scan import selective_scan_pallas
 @jax.custom_vjp
 def selective_scan(dt, x, bmat, cmat, a, h0):
     """(dt, x [B,S,D], B/C [B,S,N], A [D,N], h0 [B,D,N]) -> (y, h_last)."""
-    return selective_scan_pallas(dt, x, bmat, cmat, a, h0,
-                                 interpret=interpret_mode())
+    return selective_scan_pallas(dt, x, bmat, cmat, a, h0)
 
 
 def _fwd(dt, x, bmat, cmat, a, h0):

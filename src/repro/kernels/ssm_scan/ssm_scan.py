@@ -16,10 +16,13 @@ axis; h_scratch carries across it.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import interpret_mode
 from jax.experimental.pallas import tpu as pltpu
 
 
@@ -51,11 +54,13 @@ def _scan_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, h0_ref,
 
 
 def selective_scan_pallas(dt, x, bmat, cmat, a, h0, *, d_tile: int = 256,
-                          chunk: int = 64, interpret: bool = True):
+                          chunk: int = 64, interpret: Optional[bool] = None):
     """dt/x [B,S,D] f32/bf16, bmat/cmat [B,S,N], a [D,N] f32, h0 [B,D,N] f32.
 
     Returns (y [B,S,D] (x.dtype), h_last [B,D,N] f32).
     """
+    if interpret is None:
+        interpret = interpret_mode()
     b, s, d = x.shape
     n = a.shape[1]
     dt_t = min(d_tile, d)

@@ -6,20 +6,24 @@ BP:  dx = g @ W^T     — the SAME kernel, weight operand loaded transposed
                         from DRAM"; on TPU a free layout view in HBM).
 dW (training only) is an einsum the attribution path never differentiates,
 so XLA DCEs it together with the cached x.
+
+This is the STANDALONE matmul op.  FC layers inside the CNN use the fused
+block of :mod:`repro.models.cnn` whose backward gates the gradient with the
+1-bit ReLU mask INSIDE the transposed matmul kernel
+(:func:`repro.kernels.vmm.vmm.vmm_bwd_fused_pallas`).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import interpret_mode
 from repro.kernels.vmm.vmm import vmm_pallas
 
 
 @jax.custom_vjp
 def vmm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """[M, K] @ [K, N] -> [M, N], Pallas-tiled, f32 accumulation."""
-    return vmm_pallas(x, w, interpret=interpret_mode())
+    return vmm_pallas(x, w)
 
 
 def _fwd(x, w):
@@ -28,7 +32,7 @@ def _fwd(x, w):
 
 def _bwd(res, g):
     x, w = res
-    dx = vmm_pallas(g, w.T, interpret=interpret_mode())   # transposed reuse
+    dx = vmm_pallas(g, w.T)                               # transposed reuse
     dw = jnp.einsum("mk,mn->kn", x, g,
                     preferred_element_type=jnp.float32).astype(w.dtype)
     return dx, dw

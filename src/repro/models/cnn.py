@@ -13,12 +13,22 @@ Two fidelity knobs:
   (:mod:`repro.kernels`) instead of ``lax`` ops — the explicit tile-based
   mapping of the paper's §III, incl. BP-as-flipped-transpose-conv reuse.
 
+On the Pallas path with an attribution method bound, layers run as FUSED
+BLOCKS: one block = conv (+bias) -> ReLU (+1-bit mask) -> pool (+2-bit idx),
+whose backward step — unpool scatter, mask gating, and the flipped-transpose
+conv dot — executes as ONE ``pallas_call`` (paper Fig. 4-6 fused dataflow);
+FC blocks likewise fuse mask gating into the transposed matmul.  The fused
+blocks also expose a seed-batched multi-class backward
+(:func:`seed_batched_attribution`): K output classes backpropagate in one
+grid launch sharing the stored masks, instead of K separate passes.
+
 Layout is NHWC / HWIO (TPU-native); the FPGA's CHW is a host-side transpose.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Tuple
+from functools import partial
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -101,13 +111,151 @@ def _fc(x, w, b, *, use_pallas: bool):
     return x @ w + b
 
 
+# ---------------------------------------------------------------------------
+# fused Pallas blocks: ONE pallas_call per layer backward step
+# ---------------------------------------------------------------------------
+
+
+def _relu_fwd_mask4(y):
+    """relu(y) + NHWC-packed 1-bit mask [N, H, W, ceil(C/8)]."""
+    from repro.kernels.relu_mask.relu_mask import relu_fwd_pallas
+    n, h, w, c = y.shape
+    y2, m2 = relu_fwd_pallas(y.reshape(-1, c))
+    return y2.reshape(y.shape), m2.reshape(n, h, w, -1)
+
+
+def _gate_ref(g, mask4, method):
+    """jnp oracle of the mask gating — training-grad path only (DCE'd)."""
+    from repro.kernels.relu_mask import ref as relu_ref
+    c = g.shape[-1]
+    g2 = g.reshape(-1, c)
+    if method == "deconvnet":
+        g2 = jnp.where(g2 > 0, g2, 0)
+    else:
+        g2 = relu_ref.relu_bwd(mask4.reshape(g2.shape[0], -1), g2, method)
+    return g2.reshape(g.shape)
+
+
+def _conv_block_fwd_res(x, w, b, method, do_relu, do_pool):
+    """Pallas conv->relu->pool forward; residuals = packed masks only."""
+    from repro.kernels.conv2d.conv2d import conv2d_pallas
+    from repro.kernels.pool.pool import maxpool_fwd_pallas
+    y = conv2d_pallas(x, w) + b
+    mask4 = idx = None
+    if do_relu:
+        if method == "deconvnet":          # Table II: no ReLU mask stored
+            y = jnp.maximum(y, 0)
+        else:
+            y, mask4 = _relu_fwd_mask4(y)
+    if do_pool:
+        y, idx = maxpool_fwd_pallas(y)
+    return y, (x, w, mask4, idx)
+
+
+def _conv_block_bwd_fused(w, mask4, idx, g, method, do_relu):
+    """The ONE-pallas_call backward step (also the seed-batched entry)."""
+    from repro.kernels.conv2d import ref as conv_ref
+    from repro.kernels.conv2d.conv2d import conv2d_bwd_fused_pallas
+    return conv2d_bwd_fused_pallas(
+        g, conv_ref.flip_transpose(w), pool_idx=idx,
+        relu_mask=mask4, gate=do_relu, method=method)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _conv_block(x, w, b, method, do_relu, do_pool):
+    y, _ = _conv_block_fwd_res(x, w, b, method, do_relu, do_pool)
+    return y
+
+
+def _conv_block_vjp_fwd(x, w, b, method, do_relu, do_pool):
+    return _conv_block_fwd_res(x, w, b, method, do_relu, do_pool)
+
+
+def _conv_block_vjp_bwd(method, do_relu, do_pool, res, g):
+    x, w, mask4, idx = res
+    # attribution hot path: unpool -> mask gate -> conv-BP, one pallas_call
+    dx = _conv_block_bwd_fused(w, mask4, idx, g, method, do_relu)
+    # weight/bias grads (training only; DCE'd with x on the attribution path)
+    from repro.kernels.conv2d import ref as conv_ref
+    from repro.kernels.pool import ref as pool_ref
+    gg = pool_ref.unpool_bwd(idx, g) if do_pool else g
+    if do_relu:
+        gg = _gate_ref(gg, mask4, method)
+    dw = conv_ref.conv2d_weight_grad(x, w, gg)
+    db = jnp.sum(gg, axis=(0, 1, 2)).astype(w.dtype)
+    return dx, dw, db
+
+
+_conv_block.defvjp(_conv_block_vjp_fwd, _conv_block_vjp_bwd)
+
+
+def _fc_block_fwd_res(x, w, b, method, do_relu):
+    from repro.kernels.relu_mask.relu_mask import relu_fwd_pallas
+    from repro.kernels.vmm.vmm import vmm_pallas
+    y = vmm_pallas(x, w) + b
+    mask = None
+    if do_relu:
+        if method == "deconvnet":
+            y = jnp.maximum(y, 0)
+        else:
+            y, mask = relu_fwd_pallas(y)
+    return y, (x, w, mask)
+
+
+def _fc_block_bwd_fused(w, mask, g, method, do_relu):
+    from repro.kernels.vmm.vmm import vmm_bwd_fused_pallas
+    return vmm_bwd_fused_pallas(g, w.T, relu_mask=mask, gate=do_relu,
+                                method=method)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _fc_block(x, w, b, method, do_relu):
+    y, _ = _fc_block_fwd_res(x, w, b, method, do_relu)
+    return y
+
+
+def _fc_block_vjp_fwd(x, w, b, method, do_relu):
+    return _fc_block_fwd_res(x, w, b, method, do_relu)
+
+
+def _fc_block_vjp_bwd(method, do_relu, res, g):
+    x, w, mask = res
+    dx = _fc_block_bwd_fused(w, mask, g, method, do_relu)
+    from repro.kernels.relu_mask import ref as relu_ref
+    gg = relu_ref.relu_bwd(mask, g, method) if do_relu else g
+    dw = jnp.einsum("mk,mn->kn", x, gg,
+                    preferred_element_type=jnp.float32).astype(w.dtype)
+    db = jnp.sum(gg, axis=0).astype(w.dtype)
+    return dx, dw, db
+
+
+_fc_block.defvjp(_fc_block_vjp_fwd, _fc_block_vjp_bwd)
+
+
+def _apply_fused(params, x, cfg: CNNConfig, method: str):
+    for i, p in enumerate(params["conv"]):
+        do_pool = (i + 1) % cfg.pool_every == 0
+        x = _conv_block(x, p["w"], p["b"], method, cfg.conv_relu, do_pool)
+    x = x.reshape(x.shape[0], -1)
+    n_fc = len(params["fc"])
+    for i, p in enumerate(params["fc"]):
+        x = _fc_block(x, p["w"], p["b"], method, i < n_fc - 1)
+    return x
+
+
 def apply(params, x, cfg: CNNConfig, *, method: str = "autodiff",
-          use_pallas: bool = False):
+          use_pallas: bool = False, fused: Optional[bool] = None):
     """Forward pass: [N, H, W, Cin] -> logits [N, num_classes].
 
     ``method`` selects the attribution backward rules (static, like the
-    paper's HLS design-time configuration).
+    paper's HLS design-time configuration).  On the Pallas path with a
+    method bound, ``fused`` (default on) runs each layer as a fused block
+    whose backward step is a single ``pallas_call``.
     """
+    if fused is None:
+        fused = use_pallas and method != "autodiff"
+    if fused:
+        return _apply_fused(params, x, cfg, method)
     if use_pallas:
         from repro.kernels.pool import ops as pool_ops
         from repro.kernels.relu_mask import ops as relu_ops
@@ -127,3 +275,67 @@ def apply(params, x, cfg: CNNConfig, *, method: str = "autodiff",
         if i < n_fc - 1:
             x = relu_fn(x, method)   # Table III: ReLU after FC1
     return x
+
+
+# ---------------------------------------------------------------------------
+# seed-batched multi-class attribution (paper §III.F amortization)
+# ---------------------------------------------------------------------------
+
+
+def forward_with_residuals(params, x, cfg: CNNConfig, method: str):
+    """Pallas forward that RETURNS the packed residuals (masks + indices).
+
+    The residual set is exactly the paper's BRAM store: per conv layer a
+    1-bit ReLU mask + 2-bit pool indices, per hidden FC a 1-bit mask —
+    no activations.  Feed to :func:`backward_seeds`.
+    """
+    res_conv, res_fc = [], []
+    for i, p in enumerate(params["conv"]):
+        do_pool = (i + 1) % cfg.pool_every == 0
+        x, (_, _, mask4, idx) = _conv_block_fwd_res(
+            x, p["w"], p["b"], method, cfg.conv_relu, do_pool)
+        res_conv.append((mask4, idx))
+    feat_shape = x.shape[1:]
+    x = x.reshape(x.shape[0], -1)
+    n_fc = len(params["fc"])
+    for i, p in enumerate(params["fc"]):
+        x, (_, _, mask) = _fc_block_fwd_res(
+            x, p["w"], p["b"], method, i < n_fc - 1)
+        res_fc.append(mask)
+    return x, {"conv": res_conv, "fc": res_fc, "feat_shape": feat_shape}
+
+
+def backward_seeds(params, residuals, seeds, cfg: CNNConfig, method: str):
+    """Seed-batched BP: seeds [S, N, classes] -> relevance [S, N, H, W, Cin].
+
+    One fused grid launch per layer for ALL S seeds — the seeds axis folds
+    into the sublane dimension of each kernel's dot and every stored
+    mask/index block is loaded once and shared across seeds.
+    """
+    g = seeds
+    n_fc = len(params["fc"])
+    for i in reversed(range(n_fc)):
+        g = _fc_block_bwd_fused(params["fc"][i]["w"], residuals["fc"][i], g,
+                                method, i < n_fc - 1)
+    s, n = g.shape[:2]
+    g = g.reshape((s, n) + tuple(residuals["feat_shape"]))
+    for i in reversed(range(len(params["conv"]))):
+        mask4, idx = residuals["conv"][i]
+        g = _conv_block_bwd_fused(params["conv"][i]["w"], mask4, idx, g,
+                                  method, cfg.conv_relu)
+    return g
+
+
+def seed_batched_attribution(params, cfg: CNNConfig, method: str):
+    """(forward, backward) pair for ``attribution.attribute_classes``.
+
+    ``forward(x) -> (logits, residuals)``; ``backward(residuals, seeds)``
+    runs the whole multi-class BP as seed-batched fused kernels.
+    """
+    def forward(x):
+        return forward_with_residuals(params, x, cfg, method)
+
+    def backward(residuals, seeds):
+        return backward_seeds(params, residuals, seeds, cfg, method)
+
+    return forward, backward

@@ -1,0 +1,23 @@
+"""Optional-hypothesis shim.
+
+The container image may not ship ``hypothesis``; property tests then skip
+individually while the plain unit tests in the same modules keep running.
+With hypothesis installed this re-exports the real API unchanged.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:                                            # pragma: no cover
+    def given(*_args, **_kwargs):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed")(fn)
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -1,0 +1,253 @@
+"""Fused BP dataflow: unpool + mask gating + conv/vmm dot in ONE pallas_call.
+
+Parity vs the composed ref.py oracles for all three attribution methods,
+the seed-batched path vs per-seed / vmap baselines, odd-shape padding edges
+(Cin not a multiple of 8, Cout < 128), and the structural guarantee itself —
+a conv layer's whole backward step lowers to exactly one pallas_call.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attribution
+from repro.kernels.conv2d import ref as conv_ref
+from repro.kernels.conv2d.conv2d import conv2d_bwd_fused_pallas
+from repro.kernels.pool import ref as pool_ref
+from repro.kernels.pool.pool import maxpool_fwd_pallas
+from repro.kernels.relu_mask import ref as relu_ref
+from repro.kernels.relu_mask.relu_mask import relu_fwd_pallas
+from repro.kernels.vmm.vmm import vmm_bwd_fused_pallas
+from repro.models import cnn
+
+METHODS = ("saliency", "deconvnet", "guided")
+
+
+def _mask4_of(y):
+    n, h, w, c = y.shape
+    _, m2 = relu_fwd_pallas(y.reshape(-1, c))
+    return m2.reshape(n, h, w, -1)
+
+
+def _gate4_ref(g, mask4, method):
+    c = g.shape[-1]
+    g2 = g.reshape(-1, c)
+    m2 = mask4.reshape(g2.shape[0], -1) if mask4 is not None else None
+    return relu_ref.relu_bwd(m2, g2, method).reshape(g.shape)
+
+
+def _conv_oracle(g, w, mask4, idx, method, gated):
+    """unpool -> mask gate -> flipped-transpose conv, as separate ref ops."""
+    gg = pool_ref.unpool_bwd(idx, g) if idx is not None else g
+    if gated:
+        gg = _gate4_ref(gg, mask4, method)
+    return conv_ref.conv2d(gg, conv_ref.flip_transpose(w))
+
+
+# ---------------------------------------------------------------------------
+# conv fused BP vs oracle
+# ---------------------------------------------------------------------------
+
+# (n, h, w, cin, cout, k, pool) — incl. Cin % 8 != 0 and Cout < 128 edges
+CONV_CASES = [
+    (2, 8, 8, 7, 13, 3, True),       # both channel counts unaligned
+    (1, 16, 16, 32, 64, 3, True),    # paper conv3/conv4 scale
+    (2, 10, 12, 5, 9, 3, False),     # odd spatial, no pool
+    (1, 8, 8, 64, 64, 5, False),     # K=5 halo
+]
+
+
+@pytest.mark.parametrize("case", CONV_CASES)
+@pytest.mark.parametrize("method", METHODS)
+def test_conv_bwd_fused_matches_composed_oracle(case, method):
+    n, h, w, cin, cout, k, pool = case
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, h, w, cin))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (k, k, cin, cout)) * 0.1
+    y = conv_ref.conv2d(x, wt)
+    mask4 = None if method == "deconvnet" else _mask4_of(y)
+    idx = None
+    gshape = (n, h, w, cout)
+    if pool:
+        _, idx = maxpool_fwd_pallas(jnp.maximum(y, 0))
+        gshape = (n, h // 2, w // 2, cout)
+    g = jax.random.normal(jax.random.PRNGKey(2), gshape)
+    got = conv2d_bwd_fused_pallas(g, conv_ref.flip_transpose(wt),
+                                  pool_idx=idx, relu_mask=mask4, gate=True,
+                                  method=method)
+    want = _conv_oracle(g, wt, mask4, idx, method, gated=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_gate_without_mask_requires_deconvnet():
+    """Mask-reading methods must not silently gate with no mask stored."""
+    g = jnp.ones((1, 4, 4, 8))
+    wt = jnp.ones((3, 3, 8, 8))
+    with pytest.raises(ValueError, match="deconvnet"):
+        conv2d_bwd_fused_pallas(g, wt, gate=True, method="saliency")
+    with pytest.raises(ValueError, match="deconvnet"):
+        vmm_bwd_fused_pallas(jnp.ones((2, 8)), jnp.ones((8, 4)),
+                             gate=True, method="guided")
+
+
+def test_conv_bwd_fused_no_gate_is_plain_conv_bp():
+    """gate=False (no ReLU in the layer) reduces to the flipped-transpose conv."""
+    n, h, w, cin, cout, k = 2, 8, 8, 3, 12, 3
+    wt = jax.random.normal(jax.random.PRNGKey(0), (k, k, cin, cout)) * 0.1
+    g = jax.random.normal(jax.random.PRNGKey(1), (n, h, w, cout))
+    got = conv2d_bwd_fused_pallas(g, conv_ref.flip_transpose(wt))
+    want = conv_ref.conv2d_input_grad(g, wt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_conv_bwd_fused_epilogue_gate(method):
+    """Epilogue = the PREVIOUS layer's rectifier rule on the outgoing dx."""
+    n, h, w, cin, cout, k = 2, 8, 8, 16, 24, 3
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, h, w, cin))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (k, k, cin, cout)) * 0.1
+    mask4 = _mask4_of(conv_ref.conv2d(x, wt))
+    omask = None if method == "deconvnet" else _mask4_of(x)
+    g = jax.random.normal(jax.random.PRNGKey(2), (n, h, w, cout))
+    in_mask = None if method == "deconvnet" else mask4
+    got = conv2d_bwd_fused_pallas(
+        g, conv_ref.flip_transpose(wt), relu_mask=in_mask, gate=True,
+        method=method, out_relu_mask=omask, out_gate=True)
+    want = _gate4_ref(_conv_oracle(g, wt, in_mask, None, method, gated=True),
+                      omask, method)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_conv_bwd_seed_batched_matches_per_seed():
+    """[S, N, ...] seeds axis == stacking S separate fused calls."""
+    n, h, w, cin, cout, k, s = 2, 8, 8, 7, 13, 3, 5
+    wt = jax.random.normal(jax.random.PRNGKey(0), (k, k, cin, cout)) * 0.1
+    y = conv_ref.conv2d(jax.random.normal(jax.random.PRNGKey(1),
+                                          (n, h, w, cin)), wt)
+    mask4 = _mask4_of(y)
+    _, idx = maxpool_fwd_pallas(jnp.maximum(y, 0))
+    gs = jax.random.normal(jax.random.PRNGKey(2), (s, n, h // 2, w // 2, cout))
+    got = conv2d_bwd_fused_pallas(gs, conv_ref.flip_transpose(wt),
+                                  pool_idx=idx, relu_mask=mask4,
+                                  method="guided")
+    want = jnp.stack([
+        conv2d_bwd_fused_pallas(gs[i], conv_ref.flip_transpose(wt),
+                                pool_idx=idx, relu_mask=mask4,
+                                method="guided") for i in range(s)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# vmm fused BP vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 4096), (3, 10, 33), (8, 513, 77)])
+@pytest.mark.parametrize("method", METHODS)
+def test_vmm_bwd_fused_matches_oracle(shape, method):
+    m, k, n = shape
+    w = jax.random.normal(jax.random.PRNGKey(0), (n, k)) * 0.05
+    y = jax.random.normal(jax.random.PRNGKey(1), (m, n)) @ w
+    _, mask = relu_fwd_pallas(y)
+    g = jax.random.normal(jax.random.PRNGKey(2), (m, k))
+    in_mask = None if method == "deconvnet" else mask
+    got = vmm_bwd_fused_pallas(g, w.T, relu_mask=in_mask, gate=True,
+                               method=method)
+    want = relu_ref.relu_bwd(mask, g, method) @ w.T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_vmm_bwd_seed_batched_and_epilogue():
+    m, k, n, s = 4, 64, 256, 5
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, n))
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, k)) * 0.05
+    _, mask = relu_fwd_pallas(x @ w)
+    _, omask = relu_fwd_pallas(x)
+    gs = jax.random.normal(jax.random.PRNGKey(2), (s, m, k))
+    got = vmm_bwd_fused_pallas(gs, w.T, relu_mask=mask, method="guided",
+                               out_relu_mask=omask)
+    want = jnp.stack([
+        relu_ref.relu_bwd(omask,
+                          relu_ref.relu_bwd(mask, gs[i], "guided") @ w.T,
+                          "guided") for i in range(s)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# structural guarantee: one pallas_call per layer backward step
+# ---------------------------------------------------------------------------
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):
+                total += _count_pallas_calls(v.jaxpr)
+    return total
+
+
+def test_conv_layer_backward_is_single_pallas_call():
+    """unpool -> mask gate -> conv-BP: ONE kernel launch, not three."""
+    n, h, w, cin, cout, k = 2, 8, 8, 16, 24, 3
+    wt = jax.random.normal(jax.random.PRNGKey(0), (k, k, cin, cout)) * 0.1
+    y = conv_ref.conv2d(jax.random.normal(jax.random.PRNGKey(1),
+                                          (n, h, w, cin)), wt)
+    mask4 = _mask4_of(y)
+    _, idx = maxpool_fwd_pallas(jnp.maximum(y, 0))
+    g = jnp.ones((n, h // 2, w // 2, cout))
+    jaxpr = jax.make_jaxpr(
+        lambda gg: conv2d_bwd_fused_pallas(
+            gg, conv_ref.flip_transpose(wt), pool_idx=idx, relu_mask=mask4,
+            method="guided"))(g)
+    assert _count_pallas_calls(jaxpr.jaxpr) == 1
+
+
+def test_fc_layer_backward_is_single_pallas_call():
+    m, k, n = 2, 32, 64
+    w = jax.random.normal(jax.random.PRNGKey(0), (n, k)) * 0.05
+    _, mask = relu_fwd_pallas(jax.random.normal(jax.random.PRNGKey(1),
+                                                (m, n)) @ w)
+    g = jnp.ones((m, k))
+    jaxpr = jax.make_jaxpr(
+        lambda gg: vmm_bwd_fused_pallas(gg, w.T, relu_mask=mask,
+                                        method="saliency"))(g)
+    assert _count_pallas_calls(jaxpr.jaxpr) == 1
+
+
+# ---------------------------------------------------------------------------
+# model level: fused path == jnp path, seed-batched == vmap
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_cnn_seed_batched_matches_vmap(method):
+    cfg = cnn.CNNConfig(in_hw=(16, 16), channels=(8, 8), fc=(32,))
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    targets = jnp.array([0, 3, 7, 1, 9])
+    fwd, bwd = cnn.seed_batched_attribution(params, cfg, method)
+    lk, rk = attribution.attribute_classes(fwd, x, targets, backward=bwd)
+    lv, rv = attribution.attribute_classes(
+        lambda v: cnn.apply(params, v, cfg, method=method, use_pallas=False),
+        x, targets)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(lv), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rv), atol=1e-5)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_cnn_training_grads_through_fused_blocks(method):
+    """dw/db (ref-oracle side of the custom_vjp) match the jnp path."""
+    cfg = cnn.CNNConfig(in_hw=(8, 8), channels=(8, 8), fc=(16,),
+                        num_classes=4)
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    g1 = jax.grad(lambda p: jnp.sum(
+        cnn.apply(p, x, cfg, method=method, use_pallas=True) ** 2))(params)
+    g2 = jax.grad(lambda p: jnp.sum(
+        cnn.apply(p, x, cfg, method=method, use_pallas=False) ** 2))(params)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=2e-3, rtol=1e-4), g1, g2)

@@ -1,7 +1,7 @@
 """1-bit / 2-bit packing — the paper's BRAM mask store (unit + property)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import masks
 
