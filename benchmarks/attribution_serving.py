@@ -68,6 +68,31 @@ def run():
     rows.append(("serve/explain_topk_us", us_k,
                  f"K=5_seed_batched_vs_vmap={us_v / max(us_k, 1):.2f}x"))
     rows.append(("serve/explain_topk_vmap_us", us_v, "K=5_vmap_baseline"))
+
+    # batched IG / SmoothGrad: fold the steps/noise axis into the leading
+    # batch dimension (ONE FP+BP over [steps*B, ...]) vs the sequential
+    # jax.lax.map baseline — same numbers, one launch per layer.
+    fc = lambda v: cnn_lib.apply(cparams, v, ccfg, method="saliency")
+    steps, nsg = 8, 8
+    ig_b = jax.jit(lambda v: attribution.integrated_gradients(
+        fc, v, steps=steps)[1])
+    ig_s = jax.jit(lambda v: attribution.integrated_gradients(
+        fc, v, steps=steps, batched=False)[1])
+    us_igb = _time(ig_b, xc, iters=3)
+    us_igs = _time(ig_s, xc, iters=3)
+    rows.append(("serve/ig_batched_us", us_igb,
+                 f"steps={steps}_vs_laxmap={us_igs / max(us_igb, 1):.2f}x"))
+    rows.append(("serve/ig_laxmap_us", us_igs, f"steps={steps}_baseline"))
+
+    key = jax.random.PRNGKey(11)
+    sg_b = jax.jit(lambda v: attribution.smoothgrad(fc, v, key, n=nsg)[1])
+    sg_s = jax.jit(lambda v: attribution.smoothgrad(
+        fc, v, key, n=nsg, batched=False)[1])
+    us_sgb = _time(sg_b, xc, iters=3)
+    us_sgs = _time(sg_s, xc, iters=3)
+    rows.append(("serve/smoothgrad_batched_us", us_sgb,
+                 f"n={nsg}_vs_laxmap={us_sgs / max(us_sgb, 1):.2f}x"))
+    rows.append(("serve/smoothgrad_laxmap_us", us_sgs, f"n={nsg}_baseline"))
     return rows
 
 

@@ -6,6 +6,7 @@
 #   fp_bp_overhead       — paper Table IV (FP vs FP+BP latency, 50-72%)
 #   kernels              — paper §III compute blocks (conv/VMM/ReLU/pool)
 #   attribution_serving  — 'real-time XAI' at LM scale (decode vs explain)
+#   serving_queue        — repro.serve queue: p50/p99, cache hits, occupancy
 #   roofline             — §Roofline terms from the dry-run artifacts
 from __future__ import annotations
 
@@ -17,12 +18,13 @@ import traceback
 
 def main() -> None:
     from benchmarks import (attribution_serving, compression, fp_bp_overhead,
-                            kernels, memory_overhead, roofline)
+                            kernels, memory_overhead, roofline, serving_queue)
     suites = [
         ("memory_overhead", memory_overhead.run),
         ("fp_bp_overhead", fp_bp_overhead.run),
         ("kernels", kernels.run),
         ("attribution_serving", attribution_serving.run),
+        ("serving_queue", serving_queue.run),
         ("compression", compression.run),
         ("roofline", roofline.run),
     ]

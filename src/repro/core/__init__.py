@@ -3,14 +3,15 @@
 # mask-based residual memory optimization.
 from repro.core import attribution, fixedpoint, masks, residuals, rules
 from repro.core.attribution import (attribute, attribute_classes,
-                                    attribute_tokens, contrastive, heatmap,
+                                    attribute_tokens, contrastive,
+                                    fold_batched_gradients, heatmap,
                                     input_x_gradient, integrated_gradients,
                                     smoothgrad)
 from repro.core.rules import METHODS, act, maxpool2x2, relu, silu
 
 __all__ = [
     "attribution", "fixedpoint", "masks", "residuals", "rules",
-    "attribute", "attribute_tokens", "heatmap", "input_x_gradient",
-    "integrated_gradients", "smoothgrad", "METHODS", "act", "maxpool2x2",
-    "relu", "silu",
+    "attribute", "attribute_tokens", "fold_batched_gradients", "heatmap",
+    "input_x_gradient", "integrated_gradients", "smoothgrad", "METHODS",
+    "act", "maxpool2x2", "relu", "silu",
 ]

@@ -1,9 +1,18 @@
-"""Batched serving driver with first-class attribution requests.
+"""Serving driver on the :mod:`repro.serve` subsystem.
 
-The paper's end goal — "real-time XAI on the edge" — at pod scale: a serving
-loop where a request can ask not just for the next tokens but for WHY
-(per-token / per-patch relevance of its prompt), served from the same
-weights with the same sharding, method switched statically per endpoint.
+The paper's end goal — "real-time XAI on the edge" — as a service: requests
+can ask not just for the next tokens (or class) but for WHY, served from the
+same weights with the same sharding.  Two workloads:
+
+  * ``--workload lm``  — generate + per-prompt-token relevance for an LM
+    arch; method choices come from the registry's token-capable explainers.
+  * ``--workload cnn`` — a mixed predict/explain stream through the
+    ``ExplanationServer`` (micro-batching + residual-mask cache): every
+    explain that follows a predict for the same request id skips the
+    forward pass and replays only the BP phase over the stored 1-/2-bit
+    masks (paper §III.F).
+
+``generate`` / ``explain`` stay importable helpers for the LM path.
 """
 from __future__ import annotations
 
@@ -15,9 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
-from repro.core import attribution
 from repro.launch import steps as steps_lib
-from repro.models import transformer as tf
+from repro.models import cnn as cnn_lib, transformer as tf
+from repro.serve import (CNNAdapter, ExplanationServer, Request, registry)
 
 
 def generate(cfg, params, prompt_tokens, *, max_new: int = 16):
@@ -41,16 +50,7 @@ def explain(cfg, params, prompt_tokens, *, method: str = "saliency"):
     return logits, scores
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--method", default="saliency",
-                    choices=["saliency", "deconvnet", "guided"])
-    args = ap.parse_args()
-
+def run_lm(args) -> None:
     cfg = configs.get_smoke(args.arch)
     params = tf.init(jax.random.PRNGKey(0), cfg)
     prompts = jax.random.randint(jax.random.PRNGKey(1),
@@ -58,14 +58,74 @@ def main():
 
     t0 = time.time()
     toks = generate(cfg, params, prompts, max_new=args.max_new)
-    print(f"[serve] generated {toks.shape} in {time.time() - t0:.2f}s")
+    print(f"[serve/lm] generated {toks.shape} in {time.time() - t0:.2f}s")
 
     t0 = time.time()
     _, scores = explain(cfg, params, prompts, method=args.method)
-    print(f"[serve] attribution ({args.method}) in {time.time() - t0:.2f}s")
+    print(f"[serve/lm] attribution ({args.method}) in {time.time() - t0:.2f}s")
     top = np.argsort(-np.abs(np.asarray(scores)), axis=1)[:, :5]
     for i in range(args.batch):
         print(f"  request {i}: most relevant prompt positions {top[i].tolist()}")
+
+
+def run_cnn(args) -> None:
+    cfg = cnn_lib.CNNConfig()
+    params = cnn_lib.init(jax.random.PRNGKey(0), cfg)
+    server = ExplanationServer(CNNAdapter(params, cfg),
+                               max_batch=args.batch,
+                               max_delay_s=args.max_delay_ms / 1e3)
+    n = args.requests
+    xs = jax.random.normal(jax.random.PRNGKey(1), (n,) + cfg.in_hw
+                           + (cfg.in_ch,))
+    cls = registry.get(args.method)
+    reqs = []
+    for i in range(n):
+        reqs.append(Request(uid=f"q{i}", kind="predict", x=xs[i]))
+        reqs.append(Request(
+            uid=f"q{i}", kind="explain", x=xs[i], method=args.method,
+            topk=args.topk if (i % 2 and cls.mask_reuse) else None,
+            key=jax.random.PRNGKey(100 + i) if cls.needs_key else None))
+    t0 = time.time()
+    responses = []
+    for req in reqs:                  # serve()'s dict collapses uids; keep all
+        server.submit(req)
+        responses.extend(server.poll())
+    responses.extend(server.drain())
+    dt = time.time() - t0
+    n_explain = sum(r.kind == "explain" for r in responses)
+    hits = sum(r.cache_hit for r in responses)
+    print(f"[serve/cnn] {len(responses)} responses in {dt:.2f}s "
+          f"({len(responses) / dt:.1f} req/s); cache hits "
+          f"{hits}/{n_explain} explains")
+    print(f"[serve/cnn] cache: {server.cache.stats.snapshot()}")
+    for name, snap in server.stats.snapshot()["methods"].items():
+        print(f"  {name:28s} n={snap['count']:3d} p50={snap['p50_us']:.0f}us "
+              f"p99={snap['p99_us']:.0f}us hit_rate={snap['hit_rate']:.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="lm", choices=["lm", "cnn"])
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--topk", type=int, default=3)
+    ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    # method lists derive from the registry: a newly registered explainer
+    # is immediately servable without touching this file.
+    ap.add_argument("--method", default="saliency", choices=registry.names())
+    args = ap.parse_args()
+
+    if args.workload == "lm":
+        if args.method not in registry.token_methods():
+            raise SystemExit(
+                f"--workload lm supports token-capable methods "
+                f"{registry.token_methods()}; got {args.method!r}")
+        run_lm(args)
+    else:
+        run_cnn(args)
 
 
 if __name__ == "__main__":

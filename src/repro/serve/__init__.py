@@ -1,0 +1,38 @@
+"""repro.serve — the explanation-serving subsystem.
+
+Turns the paper's FP+BP attribution engine into a server: an inseq-style
+explainer registry (one ``Explainer.attribute`` interface over every method
+in :mod:`repro.core.attribution`), a shape-bucketed micro-batcher with a
+max-latency deadline, and an LRU cache of the bit-packed forward residuals
+so an explain request that follows a predict for the same input skips the
+forward pass entirely — the serving-time realization of the paper's
+compute-block reuse (§III.F).
+
+Quickstart::
+
+    from repro.models import cnn
+    from repro.serve import CNNAdapter, ExplanationServer, Request
+
+    cfg = cnn.CNNConfig()
+    server = ExplanationServer(CNNAdapter(cnn.init(key, cfg), cfg))
+    server.submit(Request(uid="r0", kind="predict", x=image))
+    server.submit(Request(uid="r0", kind="explain", x=image,
+                          method="guided", topk=5))
+    responses = server.drain()        # explain hits the residual cache
+    print(server.cache.stats.snapshot(), server.stats.snapshot())
+"""
+from repro.serve.adapters import CNNAdapter
+from repro.serve.api import EXPLAIN, PREDICT, Request, Response
+from repro.serve.batcher import Batch, MicroBatcher, bucket_key
+from repro.serve.registry import (Explainer, get, make, mask_reuse_methods,
+                                  names, register, token_methods)
+from repro.serve.residual_cache import CacheEntry, ResidualCache, residual_bits
+from repro.serve.server import ExplanationServer
+from repro.serve.stats import ServerStats
+
+__all__ = [
+    "CNNAdapter", "EXPLAIN", "PREDICT", "Request", "Response", "Batch",
+    "MicroBatcher", "bucket_key", "Explainer", "get", "make",
+    "mask_reuse_methods", "names", "register", "token_methods", "CacheEntry",
+    "ResidualCache", "residual_bits", "ExplanationServer", "ServerStats",
+]

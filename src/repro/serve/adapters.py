@@ -1,0 +1,100 @@
+"""Model adapters: the narrow waist between the server and an engine.
+
+An adapter owns the jitted programs the dispatch loop calls:
+
+  * ``predict(xb)`` — forward pass that RETURNS the bit-packed residuals
+    (ReLU sign bits, 2-bit pool argmax) alongside the logits, so the server
+    can park them in the :class:`~repro.serve.residual_cache.ResidualCache`;
+  * ``explain_cached(method, residuals, seeds)`` — the BP phase alone,
+    seed-batched over stored masks (paper §III.F: explanation = backward
+    over the already-stored compute-block state);
+  * ``model_fn(rules)`` — a rule-bound ``f(x) -> logits`` for the registry's
+    cold (full FP+BP) explainers.
+
+:class:`CNNAdapter` wires the paper's Table III CNN through the fused Pallas
+blocks of :mod:`repro.models.cnn`; both cold and cached paths run the SAME
+fused backward kernels, so a cache hit is bit-exact with a cold explain —
+it just skips the forward pass.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cnn
+
+
+def slice_example(tree, i: int):
+    """Per-example [1, ...] slice of a batched residual/array pytree.
+
+    Non-array leaves (e.g. static shape ints) pass through unchanged.
+    """
+    return jax.tree.map(
+        lambda l: l[i:i + 1] if hasattr(l, "ndim") and l.ndim else l, tree)
+
+
+def concat_examples(trees):
+    """Rebuild a batch from per-example slices (inverse of slice_example)."""
+    return jax.tree.map(
+        lambda *ls: (jnp.concatenate(ls)
+                     if hasattr(ls[0], "ndim") and ls[0].ndim else ls[0]),
+        *trees)
+
+
+class CNNAdapter:
+    """Serve the paper CNN: residual-returning predict + fused BP explain.
+
+    ``store_rules`` picks the rule set masks are stored under at predict
+    time.  "saliency" stores the full mask/index set, which every pure-BP
+    method can consume (guided ANDs the mask with the gradient sign,
+    deconvnet reads only the sign — neither needs masks beyond it), so one
+    predict serves follow-up explains of ANY registered mask-reuse method.
+    """
+
+    input_kind = "image"
+
+    def __init__(self, params, cfg: cnn.CNNConfig, *,
+                 store_rules: str = "saliency"):
+        self.params = params
+        self.cfg = cfg
+        self.store_rules = store_rules
+        self.feat_shape = cfg.feature_hw() + (cfg.channels[-1],)
+        self._predict = jax.jit(self._predict_impl)
+        self._backward = {}          # rules -> jitted seed-batched BP
+        self._model_fn = {}          # rules -> jitted fused f(x) -> logits
+
+    # -- forward with residuals --------------------------------------------
+
+    def _predict_impl(self, xb):
+        logits, residuals = cnn.forward_with_residuals(
+            self.params, xb, self.cfg, self.store_rules)
+        # feat_shape is static (config-derived); keep it host-side so the
+        # cached-explain reshape sees Python ints, not traced scalars.
+        residuals = {k: v for k, v in residuals.items() if k != "feat_shape"}
+        return logits, residuals
+
+    def predict(self, xb) -> Tuple[jnp.ndarray, Any]:
+        """[B, H, W, C] -> (logits [B, num_classes], residual pytree)."""
+        return self._predict(xb)
+
+    # -- BP phase over stored residuals ------------------------------------
+
+    def explain_cached(self, method: str, residuals, seeds) -> jnp.ndarray:
+        """seeds [S, B, classes] -> relevance [S, B, H, W, Cin]; NO forward."""
+        if method not in self._backward:
+            def backward(res, sds, _m=method):
+                res = dict(res, feat_shape=self.feat_shape)
+                return cnn.backward_seeds(self.params, res, sds, self.cfg, _m)
+            self._backward[method] = jax.jit(backward)
+        return self._backward[method](residuals, seeds)
+
+    # -- rule-bound model fn for cold explainers ----------------------------
+
+    def model_fn(self, rules: str):
+        if rules not in self._model_fn:
+            self._model_fn[rules] = jax.jit(
+                lambda v, _r=rules: cnn.apply(self.params, v, self.cfg,
+                                              method=_r, use_pallas=True))
+        return self._model_fn[rules]

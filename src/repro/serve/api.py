@@ -1,0 +1,54 @@
+"""Request/response types of the explanation-serving subsystem.
+
+A request carries ONE example (no batch dimension) — the micro-batcher
+(:mod:`repro.serve.batcher`) stacks compatible requests into padded batches
+so heterogeneous traffic shares kernel launches.  Two kinds:
+
+  * ``predict`` — run the forward pass, return logits, and (on adapters that
+    expose them) park the bit-packed ReLU/pool residuals in the
+    :mod:`repro.serve.residual_cache` under the request id.
+  * ``explain`` — return a relevance map.  If a predict for the same ``uid``
+    already populated the cache and the method is a pure-BP one, the forward
+    pass is SKIPPED and the stored masks drive the fused seed-batched
+    backward — the serving-time realization of the paper's compute-block
+    reuse (§III.F).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+PREDICT = "predict"
+EXPLAIN = "explain"
+
+
+@dataclass
+class Request:
+    uid: str
+    kind: str                       # PREDICT | EXPLAIN
+    x: Any                          # single example, e.g. [H, W, C] image
+    method: str = "saliency"        # registry name (EXPLAIN only)
+    target: Optional[int] = None    # class to explain; None = argmax
+    topk: Optional[int] = None      # K-class panel instead of one target
+    key: Any = None                 # PRNG key (stochastic methods)
+    arrive_t: float = 0.0           # stamped by the batcher on submit
+
+    def __post_init__(self):
+        if self.kind not in (PREDICT, EXPLAIN):
+            raise ValueError(f"unknown request kind {self.kind!r}")
+        if self.kind == PREDICT and self.topk is not None:
+            raise ValueError("topk is an explain-request field")
+
+
+@dataclass
+class Response:
+    uid: str
+    kind: str
+    logits: Any = None              # [C] for the request's example
+    relevance: Any = None           # input-shaped map, or [K, ...] panel
+    targets: Optional[Tuple[int, ...]] = None  # class(es) actually explained
+    method: Optional[str] = None
+    cache_hit: bool = False         # explain served from stored residuals
+    batch_size: int = 0             # physical batch the request rode in
+    latency_s: float = 0.0          # submit -> completion (batcher clock)
+    meta: dict = field(default_factory=dict)

@@ -1,0 +1,146 @@
+"""Dynamic micro-batcher: coalesce pending requests into padded batches.
+
+Traffic against an explanation server is heterogeneous — CNN heatmap
+requests, LM token-score requests, top-K class panels, different methods —
+but every ``pallas_call`` is compiled for one static shape and one static
+rule set.  The batcher therefore:
+
+  * **buckets** requests by a compatibility key (kind, method, example
+    shape/dtype, panel width K): everything in a bucket can ride one kernel
+    launch with per-example targets;
+  * **pads** the stacked batch dimension up to the next power of two
+    (capped at ``max_batch``), so XLA sees a handful of distinct batch
+    shapes instead of one compile per occupancy — padding rows are sliced
+    off the results, keeping per-request outputs identical to unbatched
+    serving;
+  * **deadlines** each bucket: a bucket pops when it is full OR its oldest
+    request has waited ``max_delay_s`` — the classic throughput/latency
+    micro-batching trade.
+
+Stochastic methods (per-request PRNG keys, e.g. smoothgrad) get singleton
+buckets: their noise draw is request-deterministic and must not depend on
+which neighbours happened to share the batch.
+
+The clock is injectable so tests and simulations drive deadlines
+deterministically.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import registry
+from repro.serve.api import EXPLAIN, Request
+
+BucketKey = Tuple
+
+
+def bucket_key(req: Request) -> BucketKey:
+    """Requests with equal keys may share one padded kernel launch."""
+    shape = tuple(np.shape(req.x))
+    dtype = str(np.asarray(req.x).dtype if not hasattr(req.x, "dtype")
+                else req.x.dtype)
+    if req.kind != EXPLAIN:
+        return (req.kind, shape, dtype)
+    # target-kind keeps a bucket homogeneous: an all-None bucket resolves
+    # argmax targets inside the engine, an all-explicit one passes them in.
+    # Stochastic methods get a per-REQUEST token (not uid: two in-flight
+    # requests for one uid carry distinct PRNG keys and must not coalesce).
+    needs_key = registry.get(req.method).needs_key
+    return (req.kind, req.method, shape, dtype, req.topk,
+            req.target is None, id(req) if needs_key else None)
+
+
+def pad_size(n: int, max_batch: int) -> int:
+    """Next power of two >= n, capped at ``max_batch``."""
+    p = 1
+    while p < n:
+        p *= 2
+    return min(p, max(max_batch, n))
+
+
+def stack_padded(xs: List, size: int) -> jnp.ndarray:
+    """Stack examples into a batch padded with zero rows to ``size``."""
+    batch = jnp.stack([jnp.asarray(x) for x in xs])
+    if size > batch.shape[0]:
+        pad = [(0, size - batch.shape[0])] + [(0, 0)] * (batch.ndim - 1)
+        batch = jnp.pad(batch, pad)
+    return batch
+
+
+@dataclass
+class Batch:
+    """One popped bucket: the requests that will share a launch."""
+    key: BucketKey
+    requests: List[Request]
+
+    @property
+    def kind(self) -> str:
+        return self.key[0]
+
+    def stack(self, max_batch: int) -> Tuple[jnp.ndarray, int]:
+        """-> (padded [P, ...] batch, live row count)."""
+        n = len(self.requests)
+        return stack_padded([r.x for r in self.requests],
+                            pad_size(n, max_batch)), n
+
+
+@dataclass
+class _Bucket:
+    requests: List[Request] = field(default_factory=list)
+    oldest_t: float = 0.0
+
+
+class MicroBatcher:
+    def __init__(self, *, max_batch: int = 8, max_delay_s: float = 0.002,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_s
+        self.clock = clock
+        self._buckets: "Dict[BucketKey, _Bucket]" = {}
+
+    def pending(self) -> int:
+        return sum(len(b.requests) for b in self._buckets.values())
+
+    def submit(self, req: Request) -> None:
+        req.arrive_t = self.clock()
+        bucket = self._buckets.setdefault(bucket_key(req), _Bucket())
+        if not bucket.requests:
+            bucket.oldest_t = req.arrive_t
+        bucket.requests.append(req)
+
+    def _pop(self, key: BucketKey, n: int) -> Batch:
+        bucket = self._buckets[key]
+        popped, bucket.requests = bucket.requests[:n], bucket.requests[n:]
+        if bucket.requests:
+            bucket.oldest_t = bucket.requests[0].arrive_t
+        else:
+            del self._buckets[key]
+        return Batch(key, popped)
+
+    def ready(self, now: Optional[float] = None) -> List[Batch]:
+        """Pop every full bucket and every deadline-expired bucket."""
+        now = self.clock() if now is None else now
+        out = []
+        for key in list(self._buckets):
+            bucket = self._buckets.get(key)
+            while bucket and len(bucket.requests) >= self.max_batch:
+                out.append(self._pop(key, self.max_batch))
+                bucket = self._buckets.get(key)
+            if bucket and now - bucket.oldest_t >= self.max_delay_s:
+                out.append(self._pop(key, len(bucket.requests)))
+        return out
+
+    def flush(self) -> List[Batch]:
+        """Pop everything (shutdown / drain), max_batch chunks."""
+        out = []
+        for key in list(self._buckets):
+            while key in self._buckets:
+                out.append(self._pop(key, self.max_batch))
+        return out

@@ -1,0 +1,151 @@
+"""Explainer registry — every attribution method behind ONE interface.
+
+inseq-style: methods self-register under a string name via
+``@register("...")`` and the server/examples/CLIs derive their method lists
+from :func:`names` instead of hard-coding choices, so a newly registered
+explainer is immediately servable everywhere.
+
+An :class:`Explainer` wraps a model callable ``f(x) -> logits`` that already
+has the explainer's *rule set* bound (``cls.rules`` — models take a static
+``method=`` argument selecting the backward rules of
+:mod:`repro.core.rules`; composite methods like IG run on saliency rules).
+``attribute(x, target=...)`` then dispatches to the matching
+:mod:`repro.core.attribution` entry point, so registry results are
+definitionally bit-exact with direct engine calls.
+
+Class attributes drive server capabilities:
+
+  * ``mask_reuse`` — the method is a pure BP pass, so an explain request can
+    be served from cached forward residuals without re-running the forward
+    (paper §III.F; see :mod:`repro.serve.residual_cache`).
+  * ``token_capable`` — meaningful under the LM token-attribution seeding
+    (``attribute_tokens`` / ``make_attribute_step``).
+  * ``needs_key`` — stochastic; ``attribute`` requires a PRNG key.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Type
+
+from repro.core import attribution
+
+_REGISTRY: Dict[str, Type["Explainer"]] = {}
+
+
+def register(name: str) -> Callable[[type], type]:
+    """Class decorator: expose an :class:`Explainer` under ``name``."""
+    def deco(cls: type) -> type:
+        if name in _REGISTRY:
+            raise ValueError(f"explainer {name!r} already registered")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get(name: str) -> Type["Explainer"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown explainer {name!r}; registered: {names()}") from None
+
+
+def names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def token_methods() -> List[str]:
+    return [n for n in names() if _REGISTRY[n].token_capable]
+
+
+def mask_reuse_methods() -> List[str]:
+    return [n for n in names() if _REGISTRY[n].mask_reuse]
+
+
+def make(name: str, f: Callable, **opts) -> "Explainer":
+    return get(name)(f, **opts)
+
+
+class Explainer:
+    """Base: one attribution method over a rule-bound model callable."""
+
+    name: str = "?"
+    rules: str = "saliency"
+    mask_reuse: bool = False
+    token_capable: bool = False
+    needs_key: bool = False
+
+    def __init__(self, f: Callable, **opts):
+        self.f = f
+        self.opts = opts
+
+    def attribute(self, x, *, target=None, key=None):
+        """-> (logits, relevance) — same contract as the core engine."""
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self.name!r} opts={self.opts}>"
+
+
+class _PureBP(Explainer):
+    """Shared body of the paper's three methods: one FP + one masked BP."""
+
+    mask_reuse = True
+    token_capable = True
+
+    def attribute(self, x, *, target=None, key=None):
+        return attribution.attribute(self.f, x, target=target)
+
+
+@register("saliency")
+class Saliency(_PureBP):
+    rules = "saliency"
+
+
+@register("deconvnet")
+class Deconvnet(_PureBP):
+    rules = "deconvnet"
+
+
+@register("guided")
+class GuidedBackprop(_PureBP):
+    rules = "guided"
+
+
+@register("input_x_gradient")
+class InputXGradient(Explainer):
+    rules = "saliency"
+
+    def attribute(self, x, *, target=None, key=None):
+        return attribution.input_x_gradient(self.f, x, target=target)
+
+
+@register("integrated_gradients")
+class IntegratedGradients(Explainer):
+    """opts: ``steps`` (default 16), ``baseline``, ``batched``."""
+
+    rules = "saliency"
+
+    def attribute(self, x, *, target=None, key=None):
+        return attribution.integrated_gradients(
+            self.f, x, target=target,
+            steps=self.opts.get("steps", 16),
+            baseline=self.opts.get("baseline"),
+            batched=self.opts.get("batched", True))
+
+
+@register("smoothgrad")
+class SmoothGrad(Explainer):
+    """opts: ``n`` (default 8), ``sigma``, ``batched``."""
+
+    rules = "saliency"
+    needs_key = True
+
+    def attribute(self, x, *, target=None, key=None):
+        if key is None:
+            raise ValueError("smoothgrad needs a PRNG key")
+        return attribution.smoothgrad(
+            self.f, x, key, target=target,
+            n=self.opts.get("n", 8),
+            sigma=self.opts.get("sigma", 0.1),
+            batched=self.opts.get("batched", True))

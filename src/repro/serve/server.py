@@ -1,0 +1,268 @@
+"""The dispatch loop: registry -> micro-batcher -> engine -> stats.
+
+``ExplanationServer`` is the subsystem's front door.  Requests go in via
+:meth:`submit`; :meth:`poll` pops every micro-batch that is full or past its
+latency deadline and runs it:
+
+  * **predict** batches run the adapter's residual-returning forward; each
+    request's packed masks are parked in the LRU residual cache under its
+    ``uid``.
+  * **explain** batches split into cache **hits** — a pure-BP method with a
+    cached predict for the same ``uid``: the forward pass is skipped and all
+    hits in the bucket backpropagate together through ONE seed-batched fused
+    launch over the stored masks — and **colds**: pure-BP methods re-run the
+    same residual forward + fused BP programs (warming the cache), composite
+    methods dispatch through the registry explainer (exactly the direct
+    :mod:`repro.core.attribution` call).  Top-K panel requests ride the same
+    seed axis: K one-hot seeds per example, masks loaded once (§III.F).
+
+Everything is synchronous and deterministic (injectable clock); an async
+transport would wrap ``submit``/``poll`` without touching the dataflow.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import registry
+from repro.serve.api import EXPLAIN, PREDICT, Request, Response
+from repro.serve.batcher import Batch, MicroBatcher, pad_size
+from repro.serve.residual_cache import CacheEntry, ResidualCache
+from repro.serve.stats import ServerStats
+from repro.serve.adapters import concat_examples, slice_example
+
+
+class ExplanationServer:
+    def __init__(self, adapter, *, cache_capacity: int = 256,
+                 max_batch: int = 8, max_delay_s: float = 0.002,
+                 clock: Callable[[], float] = time.monotonic,
+                 method_opts: Optional[Dict[str, dict]] = None):
+        self.adapter = adapter
+        self.clock = clock
+        self.batcher = MicroBatcher(max_batch=max_batch,
+                                    max_delay_s=max_delay_s, clock=clock)
+        self.cache = ResidualCache(cache_capacity)
+        self.stats = ServerStats()
+        self.method_opts = method_opts or {}
+        self._explainers: Dict[str, registry.Explainer] = {}
+
+    # -- public surface -----------------------------------------------------
+
+    def methods(self) -> List[str]:
+        """Servable methods — derived from the registry, never hard-coded."""
+        return registry.names()
+
+    def submit(self, req: Request) -> None:
+        if req.kind == EXPLAIN:
+            cls = registry.get(req.method)    # fail fast on unknown methods
+            if req.topk is not None and not (
+                    cls.mask_reuse and self._rules_compatible(
+                        self.adapter.store_rules, req.method)):
+                raise ValueError(
+                    f"topk panels ride the seed-batched BP and need a "
+                    f"mask-reuse method {registry.mask_reuse_methods()} "
+                    f"whose masks the adapter stores (store_rules="
+                    f"{self.adapter.store_rules!r}); got {req.method!r}")
+        self.batcher.submit(req)
+
+    def poll(self, now: Optional[float] = None) -> List[Response]:
+        """Run every due micro-batch; returns completed responses."""
+        return list(itertools.chain.from_iterable(
+            self._process(b) for b in self.batcher.ready(now)))
+
+    def drain(self) -> List[Response]:
+        """Flush the queue regardless of deadlines (shutdown / tests)."""
+        return list(itertools.chain.from_iterable(
+            self._process(b) for b in self.batcher.flush()))
+
+    def serve(self, requests: List[Request]) -> Dict[str, Response]:
+        """Convenience: submit all, poll to completion, index by uid."""
+        out: Dict[str, Response] = {}
+        for req in requests:
+            self.submit(req)
+            for resp in self.poll():
+                out[resp.uid] = resp
+        for resp in self.drain():
+            out[resp.uid] = resp
+        return out
+
+    # -- explainer construction --------------------------------------------
+
+    def explainer(self, method: str) -> registry.Explainer:
+        if method not in self._explainers:
+            cls = registry.get(method)
+            self._explainers[method] = cls(
+                self.adapter.model_fn(cls.rules),
+                **self.method_opts.get(method, {}))
+        return self._explainers[method]
+
+    # -- dispatch -----------------------------------------------------------
+
+    def _process(self, batch: Batch) -> List[Response]:
+        if batch.kind == PREDICT:
+            return self._run_predict(batch)
+        return self._run_explain(batch)
+
+    def _finish(self, req: Request, resp: Response) -> Response:
+        resp.latency_s = self.clock() - req.arrive_t
+        self.stats.record(req.kind,
+                          req.method if req.kind == EXPLAIN else "",
+                          resp.latency_s, resp.cache_hit)
+        return resp
+
+    def _run_predict(self, batch: Batch) -> List[Response]:
+        xb, live = batch.stack(self.batcher.max_batch)
+        logits, residuals = self.adapter.predict(xb)
+        jax.block_until_ready(logits)
+        self.stats.record_batch(live, xb.shape[0])
+        out = []
+        for i, req in enumerate(batch.requests):
+            self.cache.put(req.uid, CacheEntry(
+                logits=logits[i], residuals=slice_example(residuals, i),
+                rules=self.adapter.store_rules))
+            out.append(self._finish(req, Response(
+                uid=req.uid, kind=PREDICT, logits=logits[i],
+                batch_size=xb.shape[0])))
+        return out
+
+    @staticmethod
+    def _rules_compatible(stored_rules: str, method: str) -> bool:
+        """Can masks stored under ``stored_rules`` replay ``method``'s BP?
+
+        deconvnet-rules forwards store NO ReLU masks (Table II: the rule
+        reads only the gradient sign), so those entries can replay nothing
+        but deconvnet; saliency/guided-stored masks serve every BP method.
+        """
+        return method == "deconvnet" or stored_rules != "deconvnet"
+
+    def _run_explain(self, batch: Batch) -> List[Response]:
+        method = batch.requests[0].method
+        hits, colds = [], []
+        reusable = registry.get(method).mask_reuse
+        for req in batch.requests:
+            entry = None
+            if reusable:
+                cand = self.cache.peek(req.uid)
+                if cand is not None and self._rules_compatible(cand.rules,
+                                                               method):
+                    entry = self.cache.get(req.uid)   # accounts the hit
+                else:
+                    self.cache.stats.misses += 1      # absent or unusable
+            if entry is not None:
+                hits.append((req, entry))
+            else:
+                colds.append(req)
+        out = []
+        if hits:
+            out.extend(self._explain_hits(method, hits))
+        if colds:
+            out.extend(self._explain_cold(method, colds))
+        return out
+
+    def _targets_for(self, req: Request, logits) -> np.ndarray:
+        """Resolve the class panel to explain: topk > explicit > argmax."""
+        lg = np.asarray(logits)
+        if req.topk is not None:
+            return np.argsort(-lg)[:req.topk]
+        if req.target is not None:
+            return np.asarray([req.target])
+        return np.asarray([int(np.argmax(lg))])
+
+    def _explain_hits(self, method: str, hits) -> List[Response]:
+        """Forward-free path: seed-batched fused BP over cached masks."""
+        reqs = [r for r, _ in hits]
+        entries = [e for _, e in hits]
+        targets = [self._targets_for(r, e.logits)
+                   for r, e in zip(reqs, entries)]
+        # pow2-pad the hit group too (rows repeat entry 0, sliced off below)
+        # so the BP program compiles for a handful of batch shapes only.
+        psize = pad_size(len(reqs), self.batcher.max_batch)
+        ent_pad = entries + [entries[0]] * (psize - len(reqs))
+        tgt_pad = targets + [targets[0]] * (psize - len(reqs))
+        residuals = concat_examples([e.residuals for e in ent_pad])
+        num_classes = entries[0].logits.shape[-1]
+        # [S, B, C]; S is bucket-homogeneous (topk is part of the bucket key)
+        seeds = jax.nn.one_hot(jnp.asarray(np.stack(tgt_pad, axis=1)),
+                               num_classes,
+                               dtype=entries[0].logits.dtype)
+        rel = self.adapter.explain_cached(method, residuals, seeds)
+        jax.block_until_ready(rel)
+        self.stats.record_batch(len(reqs), psize)
+        out = []
+        for i, (req, entry) in enumerate(zip(reqs, entries)):
+            rel_i = rel[:, i] if req.topk is not None else rel[0, i]
+            out.append(self._finish(req, Response(
+                uid=req.uid, kind=EXPLAIN, logits=entry.logits,
+                relevance=rel_i, targets=tuple(int(t) for t in targets[i]),
+                method=method, cache_hit=True, batch_size=psize)))
+        return out
+
+    def _explain_cold(self, method: str, reqs: List[Request]) -> List[Response]:
+        """Explain with no cached residuals — full FP+BP.
+
+        Mask-reuse methods run the SAME two jitted programs as the hit path
+        (residual forward, then seed-batched fused BP), so a hit is bitwise
+        identical to its cold counterpart by construction — skipping the
+        forward never changes the answer — and the forward's masks warm the
+        cache for follow-ups.  Composite methods (IG, smoothgrad, ...)
+        dispatch through the registry explainer, i.e. exactly the direct
+        :mod:`repro.core.attribution` call.
+        """
+        if (registry.get(method).mask_reuse
+                and self._rules_compatible(self.adapter.store_rules, method)):
+            return self._explain_cold_bp(method, reqs)
+        xb, live = Batch(("explain",), reqs).stack(self.batcher.max_batch)
+        explainer = self.explainer(method)
+        if reqs[0].target is None:             # bucket-homogeneous target kind
+            target = None
+        else:
+            # padding rows explain class 0 and are sliced off below
+            target = jnp.asarray([r.target for r in reqs]
+                                 + [0] * (xb.shape[0] - live))
+        key = reqs[0].key if explainer.needs_key else None
+        logits, rel = explainer.attribute(xb, target=target, key=key)
+        jax.block_until_ready(rel)
+        self.stats.record_batch(live, xb.shape[0])
+        out = []
+        for i, req in enumerate(reqs):
+            tgt = (req.target if req.target is not None
+                   else int(np.argmax(np.asarray(logits[i]))))
+            out.append(self._finish(req, Response(
+                uid=req.uid, kind=EXPLAIN, logits=logits[i],
+                relevance=rel[i], targets=(int(tgt),), method=method,
+                batch_size=xb.shape[0])))
+        return out
+
+    def _explain_cold_bp(self, method: str,
+                         reqs: List[Request]) -> List[Response]:
+        """Cold pure-BP explain: residual forward + seed-batched fused BP,
+        warming the residual cache with the forward's packed masks."""
+        xb, live = Batch(("explain",), reqs).stack(self.batcher.max_batch)
+        logits, residuals = self.adapter.predict(xb)
+        targets = [self._targets_for(r, logits[i])
+                   for i, r in enumerate(reqs)]
+        pad = xb.shape[0] - live
+        tmat = np.concatenate([np.stack(targets, axis=1),
+                               np.zeros((targets[0].shape[0], pad), int)],
+                              axis=1)
+        seeds = jax.nn.one_hot(jnp.asarray(tmat), logits.shape[-1],
+                               dtype=logits.dtype)
+        rel = self.adapter.explain_cached(method, residuals, seeds)
+        jax.block_until_ready(rel)
+        self.stats.record_batch(live, xb.shape[0])
+        out = []
+        for i, req in enumerate(reqs):
+            self.cache.put(req.uid, CacheEntry(
+                logits=logits[i], residuals=slice_example(residuals, i),
+                rules=self.adapter.store_rules))
+            out.append(self._finish(req, Response(
+                uid=req.uid, kind=EXPLAIN, logits=logits[i],
+                relevance=rel[:, i] if req.topk is not None else rel[0, i],
+                targets=tuple(int(t) for t in targets[i]), method=method,
+                batch_size=xb.shape[0])))
+        return out

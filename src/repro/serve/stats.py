@@ -1,0 +1,83 @@
+"""Serving counters: per-method latency percentiles, throughput, cache hits.
+
+Plain-Python accounting on the host side of the dispatch loop — nothing
+here touches traced values.  Latencies are recorded per (kind, method) so a
+mixed workload reports predict and explain tails separately, and the
+snapshot is a JSON-ready dict the benchmarks emit into ``BENCH_<date>.json``.
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List
+
+# percentiles are computed over a sliding window so a long-running server's
+# stats stay O(1) memory; count/mean remain exact over the full lifetime
+LATENCY_WINDOW = 4096
+
+
+def percentile(sorted_vals: List[float], q: float) -> float:
+    """Nearest-rank percentile of an ascending list (0 <= q <= 100)."""
+    if not sorted_vals:
+        return float("nan")
+    idx = min(len(sorted_vals) - 1,
+              max(0, int(round(q / 100.0 * (len(sorted_vals) - 1)))))
+    return sorted_vals[idx]
+
+
+@dataclass
+class MethodStats:
+    count: int = 0
+    cache_hits: int = 0
+    total_s: float = 0.0
+    latencies_s: Deque[float] = field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
+
+    def record(self, latency_s: float, cache_hit: bool) -> None:
+        self.count += 1
+        self.cache_hits += bool(cache_hit)
+        self.total_s += latency_s
+        self.latencies_s.append(latency_s)
+
+    def snapshot(self) -> dict:
+        lat = sorted(self.latencies_s)      # last LATENCY_WINDOW requests
+        return {
+            "count": self.count,
+            "cache_hits": self.cache_hits,
+            "hit_rate": self.cache_hits / self.count if self.count else 0.0,
+            "mean_us": 1e6 * self.total_s / self.count if self.count else 0.0,
+            "p50_us": 1e6 * percentile(lat, 50),
+            "p99_us": 1e6 * percentile(lat, 99),
+        }
+
+
+class ServerStats:
+    """Aggregates request completions; keys are ``kind/method``."""
+
+    def __init__(self):
+        self.methods: Dict[str, MethodStats] = defaultdict(MethodStats)
+        self.batches = 0
+        self.batched_rows = 0
+        self.padded_rows = 0
+
+    def record(self, kind: str, method: str, latency_s: float,
+               cache_hit: bool) -> None:
+        name = f"{kind}/{method}" if method else kind
+        self.methods[name].record(latency_s, cache_hit)
+
+    def record_batch(self, live: int, padded: int) -> None:
+        self.batches += 1
+        self.batched_rows += live
+        self.padded_rows += padded
+
+    def requests(self) -> int:
+        return sum(m.count for m in self.methods.values())
+
+    def snapshot(self) -> dict:
+        return {
+            "requests": self.requests(),
+            "batches": self.batches,
+            "mean_occupancy": (self.batched_rows / max(self.padded_rows, 1)),
+            "methods": {k: v.snapshot()
+                        for k, v in sorted(self.methods.items())},
+        }

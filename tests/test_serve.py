@@ -1,0 +1,393 @@
+"""repro.serve subsystem: registry dispatch parity, micro-batcher
+round-trips, residual-cache hit path, and the end-to-end server loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attribution
+from repro.models import cnn
+from repro.serve import (CNNAdapter, ExplanationServer, MicroBatcher,
+                         Request, ResidualCache, bucket_key, registry,
+                         residual_bits)
+from repro.serve.api import EXPLAIN, PREDICT
+from repro.serve.residual_cache import CacheEntry
+
+CFG = cnn.CNNConfig(in_hw=(8, 8), channels=(4, 4), fc=(16,))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = cnn.init(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 8, 3))
+    return params, CNNAdapter(params, CFG), x
+
+
+def make_server(adapter, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_delay_s", 0.0)
+    return ExplanationServer(adapter, **kw)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_every_method():
+    names = registry.names()
+    for m in ("saliency", "deconvnet", "guided", "input_x_gradient",
+              "integrated_gradients", "smoothgrad"):
+        assert m in names
+    assert set(registry.mask_reuse_methods()) == {
+        "saliency", "deconvnet", "guided"}
+    assert set(registry.token_methods()) == {
+        "saliency", "deconvnet", "guided"}
+    with pytest.raises(KeyError):
+        registry.get("no_such_method")
+
+
+@pytest.mark.parametrize("method", ["saliency", "deconvnet", "guided"])
+def test_registry_pure_bp_parity(setup, method):
+    """Registry dispatch is bit-exact with the direct core call."""
+    params, adapter, x = setup
+    f = adapter.model_fn(method)
+    expl = registry.make(method, f)
+    logits_r, rel_r = expl.attribute(x)
+    logits_d, rel_d = attribution.attribute(f, x)
+    np.testing.assert_array_equal(np.asarray(rel_r), np.asarray(rel_d))
+    np.testing.assert_array_equal(np.asarray(logits_r), np.asarray(logits_d))
+
+
+def test_registry_composite_parity(setup):
+    params, adapter, x = setup
+    f = adapter.model_fn("saliency")
+    _, ig_r = registry.make("integrated_gradients", f, steps=4).attribute(x)
+    _, ig_d = attribution.integrated_gradients(f, x, steps=4)
+    np.testing.assert_array_equal(np.asarray(ig_r), np.asarray(ig_d))
+
+    key = jax.random.PRNGKey(3)
+    _, sg_r = registry.make("smoothgrad", f, n=3).attribute(x, key=key)
+    _, sg_d = attribution.smoothgrad(f, x, key, n=3)
+    np.testing.assert_array_equal(np.asarray(sg_r), np.asarray(sg_d))
+
+    _, ixg_r = registry.make("input_x_gradient", f).attribute(x)
+    _, ixg_d = attribution.input_x_gradient(f, x)
+    np.testing.assert_array_equal(np.asarray(ixg_r), np.asarray(ixg_d))
+
+
+def test_registry_rejects_duplicates():
+    with pytest.raises(ValueError):
+        @registry.register("saliency")
+        class Dup(registry.Explainer):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# batched IG / SmoothGrad (the lax.map replacement)
+# ---------------------------------------------------------------------------
+
+
+def test_integrated_gradients_batched_equals_sequential(setup):
+    params, adapter, x = setup
+    f = lambda v: cnn.apply(params, v, CFG, method="saliency")
+    _, b = attribution.integrated_gradients(f, x, steps=4)
+    _, s = attribution.integrated_gradients(f, x, steps=4, batched=False)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(s), atol=1e-6)
+
+
+def test_smoothgrad_batched_equals_sequential(setup):
+    params, adapter, x = setup
+    f = lambda v: cnn.apply(params, v, CFG, method="saliency")
+    key = jax.random.PRNGKey(7)
+    _, b = attribution.smoothgrad(f, x, key, n=3)
+    _, s = attribution.smoothgrad(f, x, key, n=3, batched=False)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(s), atol=1e-6)
+
+
+def test_integrated_gradients_batched_pytree(setup):
+    """The fold helper handles pytree inputs (VLM-style dict leaves)."""
+    params, adapter, x = setup
+    g = lambda d: cnn.apply(params, d["img"], CFG, method="saliency")
+    _, b = attribution.integrated_gradients(g, {"img": x}, steps=4)
+    _, s = attribution.integrated_gradients(g, {"img": x}, steps=4,
+                                            batched=False)
+    np.testing.assert_allclose(np.asarray(b["img"]), np.asarray(s["img"]),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_key_separates_incompatible_requests():
+    a = Request(uid="a", kind=EXPLAIN, x=np.zeros((8, 8, 3), np.float32))
+    b = Request(uid="b", kind=EXPLAIN, x=np.zeros((8, 8, 3), np.float32))
+    assert bucket_key(a) == bucket_key(b)
+    for other in [
+            Request(uid="c", kind=PREDICT, x=np.zeros((8, 8, 3), np.float32)),
+            Request(uid="c", kind=EXPLAIN, x=np.zeros((4, 4, 3), np.float32)),
+            Request(uid="c", kind=EXPLAIN, x=np.zeros((8, 8, 3), np.float32),
+                    method="guided"),
+            Request(uid="c", kind=EXPLAIN, x=np.zeros((8, 8, 3), np.float32),
+                    topk=3),
+            Request(uid="c", kind=EXPLAIN, x=np.zeros((8, 8, 3), np.float32),
+                    target=1),
+    ]:
+        assert bucket_key(other) != bucket_key(a)
+    # stochastic methods never coalesce across requests
+    s1 = Request(uid="s1", kind=EXPLAIN, x=np.zeros((8, 8, 3), np.float32),
+                 method="smoothgrad")
+    s2 = Request(uid="s2", kind=EXPLAIN, x=np.zeros((8, 8, 3), np.float32),
+                 method="smoothgrad")
+    assert bucket_key(s1) != bucket_key(s2)
+
+
+def test_batcher_deadline_and_fill():
+    t = [0.0]
+    mb = MicroBatcher(max_batch=2, max_delay_s=1.0, clock=lambda: t[0])
+    mk = lambda u: Request(uid=u, kind=PREDICT,
+                           x=np.zeros((4, 4, 3), np.float32))
+    mb.submit(mk("a"))
+    assert mb.ready() == []                     # neither full nor expired
+    mb.submit(mk("b"))
+    full = mb.ready()
+    assert len(full) == 1 and len(full[0].requests) == 2   # popped on fill
+    mb.submit(mk("c"))
+    assert mb.ready() == []
+    t[0] = 2.0
+    expired = mb.ready()
+    assert len(expired) == 1 and expired[0].requests[0].uid == "c"
+    assert mb.pending() == 0
+
+
+def test_batcher_padding_roundtrip(setup):
+    """Requests served through padded batches == served one at a time."""
+    params, adapter, x = setup
+    # batch of 3 -> padded to 4; per-example results must be unchanged
+    srv_b = make_server(adapter)
+    for i in range(3):      # submit-then-drain so the bucket coalesces
+        srv_b.submit(Request(uid=f"r{i}", kind=EXPLAIN, x=x[i],
+                             method="saliency"))
+    out_b = {r.uid: r for r in srv_b.drain()}
+    assert {r.batch_size for r in out_b.values()} == {4}   # pow2-padded
+    for i in range(3):
+        srv_1 = make_server(adapter, max_batch=1)
+        out_1 = srv_1.serve([Request(uid=f"r{i}", kind=EXPLAIN, x=x[i],
+                                     method="saliency")])
+        np.testing.assert_array_equal(
+            np.asarray(out_b[f"r{i}"].relevance),
+            np.asarray(out_1[f"r{i}"].relevance))
+
+
+# ---------------------------------------------------------------------------
+# residual cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_lru_eviction_and_accounting():
+    cache = ResidualCache(capacity=2)
+    mk = lambda: CacheEntry(logits=jnp.zeros((10,)),
+                            residuals={"m": np.zeros((1, 4), np.uint8)},
+                            rules="saliency")
+    cache.put("a", mk())
+    cache.put("b", mk())
+    assert cache.get("a") is not None           # refreshes recency
+    cache.put("c", mk())                        # evicts b (LRU)
+    assert "b" not in cache and "a" in cache and "c" in cache
+    assert cache.get("b") is None
+    st = cache.stats
+    assert (st.hits, st.misses, st.evictions) == (1, 1, 1)
+    assert st.bits_stored == 2 * 4 * 8
+    assert residual_bits({"m": np.zeros((1, 4), np.uint8)}) == 32
+
+
+def test_cache_entry_bits_match_paper_scale(setup):
+    """Cached residuals are mask-sized (Kb), not activation-sized (Mb)."""
+    params, adapter, x = setup
+    logits, residuals = adapter.predict(x[:1])
+    bits = residual_bits(residuals)
+    act_bits = 32 * sum(np.prod(s) for s in
+                        [(8, 8, 4), (8, 8, 4), (4, 4, 4), (16,)])
+    assert bits < act_bits / 10     # >10x smaller than caching activations
+
+
+def test_explain_after_predict_hits_and_skips_forward(setup):
+    """The tentpole behavior: explain-after-predict = BP phase only,
+    bit-exact with the cold (FP+BP) path."""
+    params, adapter, x = setup
+    cold_srv = make_server(adapter)
+    cold = cold_srv.serve([Request(uid="a", kind=EXPLAIN, x=x[0],
+                                   method="guided")])["a"]
+    assert not cold.cache_hit
+
+    hot_srv = make_server(adapter)
+    out = hot_srv.serve([Request(uid="a", kind=PREDICT, x=x[0]),
+                         Request(uid="a", kind=EXPLAIN, x=x[0],
+                                 method="guided")])
+    hot = out["a"]
+    assert hot.cache_hit and hot.kind == EXPLAIN
+    np.testing.assert_array_equal(np.asarray(hot.relevance),
+                                  np.asarray(cold.relevance))
+    np.testing.assert_array_equal(np.asarray(hot.logits),
+                                  np.asarray(cold.logits))
+    assert hot_srv.cache.stats.hits == 1
+
+
+@pytest.mark.parametrize("method", ["saliency", "deconvnet", "guided"])
+def test_one_predict_serves_every_bp_method(setup, method):
+    """Masks stored once at predict time serve ANY pure-BP method's
+    backward (deconvnet reads only the gradient sign, guided ANDs the
+    mask in) — the paper's store-once / explain-many amortization."""
+    params, adapter, x = setup
+    srv = make_server(adapter)
+    out = srv.serve([Request(uid="a", kind=PREDICT, x=x[1]),
+                     Request(uid="a", kind=EXPLAIN, x=x[1], method=method)])
+    assert out["a"].cache_hit
+    f = adapter.model_fn(method)
+    _, rel = attribution.attribute(f, x[1:2])
+    np.testing.assert_allclose(np.asarray(out["a"].relevance),
+                               np.asarray(rel[0]), atol=1e-6)
+
+
+def test_topk_panel_matches_attribute_classes(setup):
+    """K-class panel rides the seed axis; equals the seed-batched engine."""
+    params, adapter, x = setup
+    srv = make_server(adapter)
+    out = srv.serve([Request(uid="a", kind=PREDICT, x=x[2]),
+                     Request(uid="a", kind=EXPLAIN, x=x[2],
+                             method="saliency", topk=3)])
+    resp = out["a"]
+    assert resp.cache_hit and len(resp.targets) == 3
+    assert resp.relevance.shape == (3, 8, 8, 3)
+    fwd, bwd = cnn.seed_batched_attribution(params, CFG, "saliency")
+    _, panel = attribution.attribute_classes(
+        fwd, x[2:3], jnp.asarray(resp.targets), backward=bwd)
+    np.testing.assert_allclose(np.asarray(resp.relevance),
+                               np.asarray(panel[:, 0]), atol=1e-6)
+    # targets really are the top-3 of the predicted logits
+    top3 = np.argsort(-np.asarray(resp.logits))[:3]
+    assert list(resp.targets) == top3.tolist()
+
+
+def test_lru_eviction_forces_cold_path(setup):
+    params, adapter, x = setup
+    srv = make_server(adapter, cache_capacity=1)
+    out = srv.serve([Request(uid="a", kind=PREDICT, x=x[0]),
+                     Request(uid="b", kind=PREDICT, x=x[1]),
+                     Request(uid="a", kind=EXPLAIN, x=x[0],
+                             method="saliency")])
+    assert not out["a"].cache_hit               # evicted by b's predict
+    # 2 evictions: b's predict evicts a, then a's cold-explain warm evicts b
+    assert srv.cache.stats.evictions == 2
+    assert srv.cache.stats.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# server loop
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_workload_end_to_end(setup):
+    params, adapter, x = setup
+    srv = make_server(adapter, max_batch=2)
+    reqs = [Request(uid=f"p{i}", kind=PREDICT, x=x[i]) for i in range(4)]
+    reqs += [Request(uid=f"p{i}", kind=EXPLAIN, x=x[i], method="guided")
+             for i in range(4)]
+    reqs.append(Request(uid="x0", kind=EXPLAIN, x=x[0],
+                        method="integrated_gradients"))
+    reqs.append(Request(uid="x1", kind=EXPLAIN, x=x[1], method="smoothgrad",
+                        key=jax.random.PRNGKey(5)))
+    out = srv.serve(reqs)
+    assert len(out) == 6                        # 4 ids + x0 + x1
+    assert all(out[f"p{i}"].cache_hit for i in range(4))
+    assert not out["x0"].cache_hit and not out["x1"].cache_hit
+    snap = srv.stats.snapshot()
+    assert snap["requests"] == len(reqs)
+    assert snap["methods"]["explain/guided"]["hit_rate"] == 1.0
+    assert snap["methods"]["predict"]["count"] == 4
+    assert srv.cache.stats.hit_rate() == 1.0    # every reusable explain hit
+
+
+def test_explain_with_explicit_target(setup):
+    params, adapter, x = setup
+    srv = make_server(adapter)
+    out = srv.serve([Request(uid="a", kind=PREDICT, x=x[0]),
+                     Request(uid="a", kind=EXPLAIN, x=x[0],
+                             method="saliency", target=7)])
+    assert out["a"].targets == (7,)
+    f = adapter.model_fn("saliency")
+    _, rel = attribution.attribute(f, x[0:1], target=jnp.asarray([7]))
+    np.testing.assert_allclose(np.asarray(out["a"].relevance),
+                               np.asarray(rel[0]), atol=1e-6)
+
+
+def test_server_rejects_bad_requests(setup):
+    params, adapter, x = setup
+    srv = make_server(adapter)
+    with pytest.raises(KeyError):
+        srv.submit(Request(uid="a", kind=EXPLAIN, x=x[0], method="nope"))
+    with pytest.raises(ValueError):
+        srv.submit(Request(uid="a", kind=EXPLAIN, x=x[0],
+                           method="integrated_gradients", topk=3))
+    with pytest.raises(ValueError):
+        Request(uid="a", kind="unknown", x=x[0])
+    with pytest.raises(ValueError):
+        Request(uid="a", kind=PREDICT, x=x[0], topk=3)
+
+
+def test_smoothgrad_same_uid_requests_never_coalesce(setup):
+    """Two in-flight stochastic requests for ONE uid carry distinct PRNG
+    keys; each must be served alone with its own key."""
+    params, adapter, x = setup
+    srv = make_server(adapter)
+    k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+    srv.submit(Request(uid="u", kind=EXPLAIN, x=x[0], method="smoothgrad",
+                       key=k1))
+    srv.submit(Request(uid="u", kind=EXPLAIN, x=x[0], method="smoothgrad",
+                       key=k2))
+    out = srv.drain()
+    assert len(out) == 2 and {r.batch_size for r in out} == {1}
+    f = adapter.model_fn("saliency")
+    for resp, key in zip(out, [k1, k2]):
+        _, sg = attribution.smoothgrad(f, x[0:1], key)
+        np.testing.assert_array_equal(np.asarray(resp.relevance),
+                                      np.asarray(sg[0]))
+
+
+def test_deconvnet_stored_masks_only_replay_deconvnet(setup):
+    """An adapter storing under deconvnet rules keeps NO ReLU masks; a
+    guided explain must fall back to the cold path, not crash mid-serve."""
+    params, adapter, x = setup
+    adp = type(adapter)(params, CFG, store_rules="deconvnet")
+    srv = make_server(adp)
+    out = srv.serve([Request(uid="a", kind=PREDICT, x=x[0]),
+                     Request(uid="a", kind=EXPLAIN, x=x[0], method="guided"),
+                     Request(uid="a", kind=EXPLAIN, x=x[0],
+                             method="deconvnet")])
+    # dict keeps the last response per uid (deconvnet) — check via stats
+    snap = srv.stats.snapshot()["methods"]
+    assert snap["explain/guided"]["hit_rate"] == 0.0      # unusable masks
+    assert snap["explain/deconvnet"]["hit_rate"] == 1.0   # compatible
+    assert srv.cache.stats.misses == 1
+    assert out["a"].method == "deconvnet"
+    # and the cold guided result equals the direct engine call
+    f = adp.model_fn("guided")
+    _, rel = attribution.attribute(f, x[0:1])
+    cold = srv.serve([Request(uid="g", kind=EXPLAIN, x=x[0],
+                              method="guided")])["g"]
+    np.testing.assert_array_equal(np.asarray(cold.relevance),
+                                  np.asarray(rel[0]))
+
+
+def test_cold_bp_explain_warms_cache(setup):
+    """A cold pure-BP explain stores its forward's masks: the next explain
+    for the same uid (any BP method) skips the forward."""
+    params, adapter, x = setup
+    srv = make_server(adapter)
+    first = srv.serve([Request(uid="w", kind=EXPLAIN, x=x[3],
+                               method="saliency")])["w"]
+    second = srv.serve([Request(uid="w", kind=EXPLAIN, x=x[3],
+                                method="deconvnet")])["w"]
+    assert not first.cache_hit and second.cache_hit
