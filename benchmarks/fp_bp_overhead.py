@@ -40,14 +40,30 @@ def run():
     fp_flops = hlo.analyze(fp.lower(x).compile().as_text()).get("flops", 0)
     rows.append(("latency/fp_us", fp_us, f"hlo_flops={fp_flops:.3e}"))
 
+    # quantized column: the same FP+BP in TRUE int16 fixed point (§IV),
+    # via the manual seed-batched engine (integers have no jax.vjp).
+    def _fxp_fpbp(method):
+        fwd, bwd = cnn.seed_batched_attribution_jittable(params, cfg,
+                                                         method, "fxp16")
+        jf, jb = jax.jit(fwd), jax.jit(bwd)
+
+        def run_one(v):
+            logits, res = jf(v)
+            seeds = jax.nn.one_hot(jnp.argmax(logits, axis=-1),
+                                   cfg.num_classes)[None]
+            return jb(res, seeds)
+        return run_one
+
     for method in ("saliency", "deconvnet", "guided"):
         fpbp = jax.jit(lambda v: attribution.attribute(
             lambda u: cnn.apply(params, u, cfg, method=method), v))
         us = _time(fpbp, x)
         flops = hlo.analyze(fpbp.lower(x).compile().as_text()).get("flops", 0)
+        us_q = _time(_fxp_fpbp(method), x, iters=5)
         rows.append((f"latency/fp_bp_{method}_us", us,
                      f"overhead={(us - fp_us) / fp_us * 100:.0f}%_paper_50-72%"
-                     f"_flops_ratio={flops / max(fp_flops, 1):.2f}"))
+                     f"_flops_ratio={flops / max(fp_flops, 1):.2f}"
+                     f"_fxp16_us={us_q:.1f}"))
     return rows
 
 

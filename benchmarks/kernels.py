@@ -73,11 +73,32 @@ def run():
                  f"tile_dot=[{h * wd}x{k * k * cin}]@[{k * k * cin}x{cout}]"
                  f"_was_{k * k}x[{h * wd}x{cin}]"))
 
+    # int16 fixed point vs bf16 (paper §IV datapath vs TPU-native 16-bit):
+    # identical operand bytes (2B each), int32 vs f32 accumulators.  On CPU
+    # both interpret; the structural row is the dot dtype + requantize step.
+    from repro.core import fixedpoint as fxp
+    from repro.kernels.conv2d.fxp import conv2d_fxp_pallas
+    xq, wq = fxp.to_fixed(x), fxp.to_fixed(w, fxp.WGT_FRAC)
+    us_q = _time(jax.jit(conv2d_fxp_pallas), xq, wq, iters=10)
+    us_b = _time(jax.jit(conv2d_pallas), x.astype(jnp.bfloat16),
+                 w.astype(jnp.bfloat16), iters=10)
+    rows.append(("kernel/conv2d_fxp16_us", us_q,
+                 f"bf16_us={us_b:.1f}_i16xi16_i32acc_one_requantize"))
+
     # vmm (paper FC1: 4096 -> 128)
     xv = jax.random.normal(jax.random.PRNGKey(3), (1, 4096))
     wv = jax.random.normal(jax.random.PRNGKey(4), (4096, 128)) * 0.02
     us = _time(jax.jit(vmm_ref.vmm), xv, wv)
     rows.append(("kernel/vmm_ref_us", us, "tiles=128x512x128_f32acc"))
+
+    from repro.kernels.vmm.fxp import vmm_fxp_pallas
+    from repro.kernels.vmm.vmm import vmm_pallas
+    xvq, wvq = fxp.to_fixed(xv), fxp.to_fixed(wv, fxp.WGT_FRAC)
+    us_q = _time(jax.jit(vmm_fxp_pallas), xvq, wvq, iters=10)
+    us_b = _time(jax.jit(vmm_pallas), xv.astype(jnp.bfloat16),
+                 wv.astype(jnp.bfloat16), iters=10)
+    rows.append(("kernel/vmm_fxp16_us", us_q,
+                 f"bf16_us={us_b:.1f}_i16xi16_i32acc_one_requantize"))
 
     # fused relu+mask
     xr = jax.random.normal(jax.random.PRNGKey(5), (256, 1024))

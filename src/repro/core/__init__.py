@@ -1,7 +1,8 @@
 # The paper's primary contribution: gradient-backprop feature attribution
 # (Saliency / DeconvNet / Guided-BP) as a composable JAX engine with the
 # mask-based residual memory optimization.
-from repro.core import attribution, fixedpoint, masks, residuals, rules
+from repro.core import (attribution, fidelity, fixedpoint, masks, residuals,
+                        rules)
 from repro.core.attribution import (attribute, attribute_classes,
                                     attribute_tokens, contrastive,
                                     fold_batched_gradients, heatmap,
@@ -10,7 +11,7 @@ from repro.core.attribution import (attribute, attribute_classes,
 from repro.core.rules import METHODS, act, maxpool2x2, relu, silu
 
 __all__ = [
-    "attribution", "fixedpoint", "masks", "residuals", "rules",
+    "attribution", "fidelity", "fixedpoint", "masks", "residuals", "rules",
     "attribute", "attribute_tokens", "fold_batched_gradients", "heatmap",
     "input_x_gradient", "integrated_gradients", "smoothgrad", "METHODS",
     "act", "maxpool2x2", "relu", "silu",

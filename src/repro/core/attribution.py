@@ -35,7 +35,8 @@ def output_seed(logits: jnp.ndarray, target: Optional[jnp.ndarray] = None) -> jn
     return jax.nn.one_hot(target, logits.shape[-1], dtype=logits.dtype)
 
 
-def attribute(f: Callable, x, *, target=None, return_logits: bool = True):
+def attribute(f: Callable, x, *, target=None, return_logits: bool = True,
+              backward=None):
     """Relevance of every element of ``x`` for the target logit of ``f(x)``.
 
     ``f`` must already have the attribution method bound (models take a static
@@ -43,7 +44,22 @@ def attribute(f: Callable, x, *, target=None, return_logits: bool = True):
     ``x`` may be a pytree (e.g. {"patches": ..., "tokens_embed": ...}) — each
     leaf gets a relevance tensor of its own shape, the VLM/audio analogue of
     the paper's pixel heatmap.
+
+    ``backward`` selects the MANUAL engine instead of ``jax.vjp``: ``f(x)``
+    must return ``(logits, residuals)`` and ``backward(residuals, seeds)``
+    (seeds carrying a leading S axis) runs the BP phase over the stored
+    masks — e.g. the pair from ``cnn.seed_batched_attribution``, including
+    its ``precision="fxp16"`` true-int16 variant, which autodiff cannot
+    express (integers have no tangents).  Composite methods below thread
+    the same knob, so every explainer can run quantized end-to-end.
     """
+    if backward is not None:
+        logits, residuals = f(x)
+        seed = output_seed(logits, target)
+        rel = backward(residuals, seed[None])[0]
+        if return_logits:
+            return logits, rel
+        return rel
     logits, vjp_fn = jax.vjp(f, x)
     seed = output_seed(logits, target)
     (rel,) = vjp_fn(seed)
@@ -127,13 +143,14 @@ def contrastive(f: Callable, x, target_a, target_b):
 # Beyond-paper attribution methods built on the same FP+BP engine
 # ---------------------------------------------------------------------------
 
-def input_x_gradient(f: Callable, x, *, target=None):
+def input_x_gradient(f: Callable, x, *, target=None, backward=None):
     """Gradient . input — sign-aware refinement of the saliency map."""
-    logits, rel = attribute(f, x, target=target)
+    logits, rel = attribute(f, x, target=target, backward=backward)
     return logits, jax.tree.map(lambda r, v: r * v, rel, x)
 
 
-def fold_batched_gradients(f: Callable, xs, target, batch_shape):
+def fold_batched_gradients(f: Callable, xs, target, batch_shape,
+                           backward=None):
     """Saliency over a stack of S perturbed inputs in ONE FP+BP.
 
     ``xs``: pytree with leaves ``[S, B, ...]`` (S perturbations of a [B, ...]
@@ -152,21 +169,30 @@ def fold_batched_gradients(f: Callable, xs, target, batch_shape):
     tgt = jnp.broadcast_to(target, batch_shape)
     tgt = jnp.broadcast_to(tgt[None], (s,) + batch_shape)
     tgt = tgt.reshape((s * batch_shape[0],) + batch_shape[1:])
-    grads = attribute(f, folded, target=tgt, return_logits=False)
+    grads = attribute(f, folded, target=tgt, return_logits=False,
+                      backward=backward)
     return jax.tree.map(
         lambda g: g.reshape((s, g.shape[0] // s) + g.shape[1:]), grads)
 
 
-def _stacked_gradients(f: Callable, xs, target, batch_shape, batched: bool):
+def _stacked_gradients(f: Callable, xs, target, batch_shape, batched: bool,
+                       backward=None):
     """Dispatch a perturbation stack to the folded or sequential backend."""
     if batched:
-        return fold_batched_gradients(f, xs, target, batch_shape)
+        return fold_batched_gradients(f, xs, target, batch_shape, backward)
     return jax.lax.map(
-        lambda xa: attribute(f, xa, target=target, return_logits=False), xs)
+        lambda xa: attribute(f, xa, target=target, return_logits=False,
+                             backward=backward), xs)
+
+
+def _probe_logits(f: Callable, x, backward):
+    """One plain forward — under the manual engine ``f`` returns a pair."""
+    out = f(x)
+    return out[0] if backward is not None else out
 
 
 def integrated_gradients(f: Callable, x, *, baseline=None, steps: int = 16,
-                         target=None, batched: bool = True):
+                         target=None, batched: bool = True, backward=None):
     """Sundararajan et al. 2017 — Riemann sum of saliency along a path.
 
     Each step is one paper-style FP+BP.  ``batched`` (default) folds the
@@ -177,7 +203,7 @@ def integrated_gradients(f: Callable, x, *, baseline=None, steps: int = 16,
     """
     if baseline is None:
         baseline = jax.tree.map(jnp.zeros_like, x)
-    logits = f(x)
+    logits = _probe_logits(f, x, backward)
     if target is None:
         target = jnp.argmax(logits, axis=-1)
 
@@ -185,20 +211,21 @@ def integrated_gradients(f: Callable, x, *, baseline=None, steps: int = 16,
     xs = jax.tree.map(
         lambda b, v: (b + alphas.reshape((steps,) + (1,) * v.ndim)
                       * (v - b)).astype(v.dtype), baseline, x)
-    grads = _stacked_gradients(f, xs, target, logits.shape[:-1], batched)
+    grads = _stacked_gradients(f, xs, target, logits.shape[:-1], batched,
+                               backward)
     avg = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
     return logits, jax.tree.map(lambda a, v, b: a * (v - b), avg, x, baseline)
 
 
 def smoothgrad(f: Callable, x, key, *, n: int = 8, sigma: float = 0.1,
-               target=None, batched: bool = True):
+               target=None, batched: bool = True, backward=None):
     """Smilkov et al. 2017 — average saliency over Gaussian-perturbed inputs.
 
     ``batched`` (default) folds the ``n`` noise samples into the leading
     batch dimension (one FP+BP over ``[n*B, ...]``) instead of a sequential
     ``jax.lax.map``; the noise draw is identical either way.
     """
-    logits = f(x)
+    logits = _probe_logits(f, x, backward)
     if target is None:
         target = jnp.argmax(logits, axis=-1)
 
@@ -207,7 +234,8 @@ def smoothgrad(f: Callable, x, key, *, n: int = 8, sigma: float = 0.1,
             lambda v: v + sigma * jax.random.normal(k, v.shape, v.dtype), x)
 
     xs = jax.vmap(noisy)(jax.random.split(key, n))
-    grads = _stacked_gradients(f, xs, target, logits.shape[:-1], batched)
+    grads = _stacked_gradients(f, xs, target, logits.shape[:-1], batched,
+                               backward)
     return logits, jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
 
 

@@ -1,0 +1,68 @@
+"""Heatmap-agreement metrics for quantization-fidelity studies (paper §IV).
+
+The paper's claim is that 16-bit fixed point preserves the *explanation*,
+not the logits — the right comparison is between attribution heatmaps, and
+the metrics the XAI-fidelity literature uses for that (ApproXAI,
+arXiv 2504.17929; Pan & Mishra, arXiv 2305.04887) are rank-based, not
+value-based: a heatmap is read by which pixels dominate, not by their
+absolute magnitudes.
+
+All metrics take two same-shape arrays (typically ``attribution.heatmap``
+outputs or raw relevance tensors), flatten them, and return a Python float.
+Pure NumPy — no scipy dependency (CI installs jax+pytest only).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+def _flat(a) -> np.ndarray:
+    return np.asarray(a, np.float64).reshape(-1)
+
+
+def rankdata(a: np.ndarray) -> np.ndarray:
+    """Ranks (1-based) with ties averaged — scipy-free ``rankdata``."""
+    order = np.argsort(a, kind="stable")
+    ranks = np.empty(a.size, np.float64)
+    ranks[order] = np.arange(1, a.size + 1)
+    # average the rank over each tie group
+    sa = a[order]
+    _, start, counts = np.unique(sa, return_index=True, return_counts=True)
+    for s, c in zip(start, counts):
+        if c > 1:
+            ranks[order[s:s + c]] = ranks[order[s:s + c]].mean()
+    return ranks
+
+
+def spearman(a, b) -> float:
+    """Spearman rank correlation in [-1, 1] (ties averaged)."""
+    ra, rb = rankdata(_flat(a)), rankdata(_flat(b))
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = np.sqrt((ra * ra).sum() * (rb * rb).sum())
+    if denom == 0.0:
+        return 1.0 if np.array_equal(ra, rb) else 0.0
+    return float((ra * rb).sum() / denom)
+
+
+def topk_overlap(a, b, k: int) -> float:
+    """|top-k(a) ∩ top-k(b)| / k — do the two maps highlight the same pixels?"""
+    fa, fb = _flat(a), _flat(b)
+    ta = set(np.argpartition(-fa, k - 1)[:k].tolist())
+    tb = set(np.argpartition(-fb, k - 1)[:k].tolist())
+    return len(ta & tb) / k
+
+
+def sign_agreement(a, b) -> float:
+    """Fraction of elements whose sign matches (zeros must match zeros)."""
+    fa, fb = np.sign(_flat(a)), np.sign(_flat(b))
+    return float((fa == fb).mean())
+
+
+def compare(a, b, *, k: int = 32) -> Dict[str, float]:
+    """All three metrics at once — the fidelity row of the README table."""
+    return {"spearman": spearman(a, b),
+            "topk_overlap": topk_overlap(a, b, k),
+            "sign_agreement": sign_agreement(a, b)}

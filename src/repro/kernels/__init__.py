@@ -31,6 +31,15 @@ every stored mask/index load (the paper's mask-reuse amortization; wired
 through ``repro.core.attribution.attribute_classes(backward=...)`` and
 ``repro.models.cnn.seed_batched_attribution``).
 
+TRUE INT16 FIXED POINT (paper §IV): each hot family carries an ``fxp``
+module (``conv2d/fxp.py``, ``vmm/fxp.py``, ``pool/fxp.py``) with the same
+tiling and fused-backward structure but the FPGA's numeric contract —
+Q7.8 int16 operands, Q1.14 int16 weights, int32 MXU accumulation, one
+round-half-up shift requantization with symmetric saturation (contract +
+NumPy mirror in :mod:`repro.core.fixedpoint`; bit-exact oracle tests in
+``tests/test_kernels_fxp.py``).  The mask prologues are bit-domain and
+shared verbatim with the float kernels.
+
 Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling, MXU-aligned
 dots) and are validated on CPU with interpret=True against the ref.py
 oracles.  Every wrapper's ``interpret`` argument defaults to ``None`` ->
@@ -43,3 +52,27 @@ import jax
 def interpret_mode() -> bool:
     """True off-TPU: run kernel bodies in Python for CPU validation."""
     return jax.default_backend() != "tpu"
+
+
+def validate_bp_gates(method: str, gate, relu_mask, out_gate, out_relu_mask):
+    """Shared argument contract of the four fused-BP wrappers (f32 + fxp16).
+
+    ``gate``/``out_gate`` default to mask presence; forcing a gate with no
+    stored mask is only valid for the deconvnet rule (Eq. 4 reads just the
+    gradient sign — Table II stores no mask for it).  Returns the resolved
+    ``(gate, out_gate)`` pair.
+    """
+    if gate is None:
+        gate = relu_mask is not None
+    if out_gate is None:
+        out_gate = out_relu_mask is not None
+    if gate and relu_mask is None and method != "deconvnet":
+        raise ValueError(
+            f"gate=True without relu_mask is only valid for "
+            f"method='deconvnet' (Eq. 4 reads just the gradient sign); "
+            f"method={method!r} needs the stored 1-bit mask")
+    if out_gate and out_relu_mask is None and method != "deconvnet":
+        raise ValueError(
+            f"out_gate=True without out_relu_mask is only valid for "
+            f"method='deconvnet'; method={method!r} needs the stored mask")
+    return gate, out_gate

@@ -1,31 +1,17 @@
-"""Tiled single-dot convolution kernels (paper §III.B, Fig. 4-6) for TPU.
+"""True int16 fixed-point conv kernels (paper §IV: 16b datapath end-to-end).
 
-FPGA -> TPU mapping:
+Same tiling / single-dot im2col dataflow as :mod:`conv2d`, but the numeric
+contract is the FPGA's: **Q7.8 int16** feature maps and gradients,
+**Q1.14 int16** weights, one **int32 MXU contraction** per tile, and a
+single round-half-up right-shift requantization (+ symmetric saturation)
+narrowing the accumulator back to the 16-bit datapath — see
+:mod:`repro.core.fixedpoint` for the contract and the NumPy mirror.
 
-  * DRAM -> BRAM tile loads over AXI  ==>  HBM -> VMEM blocks via BlockSpec.
-  * N_oh x N_ow unrolled MAC array    ==>  ONE MXU contraction per tile:
-    the K*K taps of the already-loaded padded block are gathered in VMEM
-    (im2col) into a [H*W, K*K*Cin] patch matrix and contracted against the
-    [K*K*Cin, Tco] flattened kernel — a single MXU-shaped dot instead of
-    K^2 skinny [H*W, Cin] dots, so the MXU sees one deep contraction and
-    the weights stream through once per tile.
-  * Output-stationary accumulation    ==>  f32 accumulator in VMEM registers,
-    written once per output tile.
-
-Because the paper targets edge CNNs (CIFAR-scale feature maps), a whole
-padded feature map fits easily in VMEM (34*34*128*4B = 0.6 MB << 16 MB), so
-we tile over (batch, Cout) and keep H/W un-tiled — the TPU analogue of the
-FPGA's "maximally use on-chip resources" rule.  Cout tiles are 128-aligned
-for the MXU lane width; Cin is zero-padded to the sublane multiple.
-
-:func:`conv2d_bwd_fused_pallas` is the fused BP dataflow: the 2-bit unpool
-scatter and the 1-bit ReLU mask gating run INSIDE the conv-BP pallas_call as
-prologues on the incoming gradient (optionally a second gate as epilogue on
-the outgoing one), so a CNN layer's whole backward step is one kernel and
-the gradient never touches HBM between the pointwise stages and the dot.
-A leading seeds axis S folds into the sublane dimension of the patch matrix
-([S*H*W, K*K*C]), so explaining S classes shares one mask/index load per
-tile — the paper's mask-reuse amortization.
+The fused backward keeps the f32 kernel's structure exactly: the 2-bit
+unpool scatter and the 1-bit mask gating run unchanged as prologues on the
+incoming int16 gradient (masks are domain-free bits; gating is a select),
+then the flipped-transpose conv dot accumulates in int32 and requantizes
+once.  One ``pallas_call`` per layer backward, int16 end to end.
 """
 from __future__ import annotations
 
@@ -36,44 +22,47 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.fixedpoint import WGT_FRAC, requantize
 from repro.kernels import interpret_mode, validate_bp_gates
+from repro.kernels.conv2d.conv2d import _cout_tiling
 from repro.kernels.pool.pool import unpack_crumbs, unpool_scatter
 from repro.kernels.relu_mask.relu_mask import gate_gradient, unpack_bits
 
 
-def _im2col_dot(xpad, K: int, H: int, W: int, wmat):
-    """[S, H+2p, W+2p, C] -> one [S*H*W, K*K*C] @ [K*K*C, T] f32 dot."""
+def _im2col_dot_i32(xpad, K: int, H: int, W: int, wmat):
+    """[S, H+2p, W+2p, C] int16 -> [S, H, W, T] int32 single-dot im2col."""
     s, _, _, c = xpad.shape
     cols = [xpad[:, i:i + H, j:j + W, :].reshape(s * H * W, c)
             for i in range(K) for j in range(K)]
-    patches = jnp.concatenate(cols, axis=1)              # [S*H*W, K*K*C]
-    acc = jnp.dot(patches, wmat, preferred_element_type=jnp.float32)
+    patches = jnp.concatenate(cols, axis=1)              # [S*H*W, K*K*C] i16
+    acc = jnp.dot(patches, wmat, preferred_element_type=jnp.int32)
     return acc.reshape(s, H, W, wmat.shape[-1])
 
 
-def _conv_kernel(x_ref, w_ref, o_ref, *, K: int, H: int, W: int):
-    """One (batch, cout-tile) grid cell: full-map single-dot conv."""
+def _conv_fxp_kernel(x_ref, w_ref, o_ref, *, K: int, H: int, W: int,
+                     shift: int):
     cin = x_ref.shape[-1]
     tco = o_ref.shape[-1]
     wmat = w_ref[...].reshape(K * K * cin, tco)
-    o_ref[...] = _im2col_dot(x_ref[...], K, H, W, wmat).astype(o_ref.dtype)
+    acc = _im2col_dot_i32(x_ref[...], K, H, W, wmat)
+    o_ref[...] = requantize(acc, shift)
 
 
-def _cout_tiling(cout: int, co_tile: int):
-    tco = min(co_tile, -(-cout // 128) * 128) if cout >= 128 else cout
-    return tco, -(-cout // tco) * tco
+def conv2d_fxp_pallas(x: jnp.ndarray, w: jnp.ndarray, *,
+                      shift: int = WGT_FRAC, co_tile: int = 128,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """int16 [N, H, W, Cin] x int16 [K, K, Cin, Cout] -> int16, stride 1, SAME.
 
-
-def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, *, co_tile: int = 128,
-                  interpret: Optional[bool] = None) -> jnp.ndarray:
-    """[N, H, W, Cin] x [K, K, Cin, Cout] -> [N, H, W, Cout], stride 1, SAME."""
+    ``shift`` is the weight fraction width: products carry scale
+    2^(8+shift) and one requantization returns the Q7.8 activation grid.
+    """
     if interpret is None:
         interpret = interpret_mode()
+    assert x.dtype == jnp.int16 and w.dtype == jnp.int16, (x.dtype, w.dtype)
     n, h, ww, cin = x.shape
     k, _, _, cout = w.shape
     p = (k - 1) // 2
 
-    # Zero-pad: spatial halo (SAME), Cin to sublane multiple, Cout to tile.
     cin_p = -(-cin // 8) * 8
     tco, cout_p = _cout_tiling(cout, co_tile)
     xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, cin_p - cin)))
@@ -81,7 +70,7 @@ def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, *, co_tile: int = 128,
 
     grid = (n, cout_p // tco)
     out = pl.pallas_call(
-        functools.partial(_conv_kernel, K=k, H=h, W=ww),
+        functools.partial(_conv_fxp_kernel, K=k, H=h, W=ww, shift=shift),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, h + 2 * p, ww + 2 * p, cin_p),
@@ -89,20 +78,21 @@ def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, *, co_tile: int = 128,
             pl.BlockSpec((k, k, cin_p, tco), lambda b, c: (0, 0, 0, c)),
         ],
         out_specs=pl.BlockSpec((1, h, ww, tco), lambda b, c: (b, 0, 0, c)),
-        out_shape=jax.ShapeDtypeStruct((n, h, ww, cout_p), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((n, h, ww, cout_p), jnp.int16),
         interpret=interpret,
     )(xp, wp)
     return out[..., :cout]
 
 
 # ---------------------------------------------------------------------------
-# fused backward: [unpool] -> [mask gate] -> conv-BP dot -> [epilogue gate]
+# fused backward, int16: [unpool] -> [mask gate] -> i32 dot -> requantize
 # ---------------------------------------------------------------------------
 
 
-def _conv_bwd_fused_kernel(*refs, K: int, H: int, W: int, method: str,
-                           has_pool: bool, gate_in: bool, has_mask: bool,
-                           gate_out: bool, has_omask: bool):
+def _conv_bwd_fused_fxp_kernel(*refs, K: int, H: int, W: int, method: str,
+                               shift: int, has_pool: bool, gate_in: bool,
+                               has_mask: bool, gate_out: bool,
+                               has_omask: bool):
     it = iter(refs)
     g_ref, w_ref = next(it), next(it)
     i_ref = next(it) if has_pool else None
@@ -115,25 +105,26 @@ def _conv_bwd_fused_kernel(*refs, K: int, H: int, W: int, method: str,
     s = g_ref.shape[0]
     tco = o_ref.shape[-1]
 
-    g = g_ref[:, 0]                                     # [S, Hg, Wg, C]
+    g = g_ref[:, 0]                                     # [S, Hg, Wg, C] i16
     if has_pool:                                        # prologue 1: unpool
         g = unpool_scatter(unpack_crumbs(i_ref[0]), g)  # -> [S, H, W, C]
     if gate_in:                                         # prologue 2: Eq. 3-5
         m = unpack_bits(m_ref[0]) if has_mask else None
         g = gate_gradient(g, m, method)
 
-    # halo-pad in VMEM, then the single im2col dot (flipped-transpose conv)
     gp = jnp.zeros((s, H + 2 * p, W + 2 * p, c), g.dtype)
     gp = gp.at[:, p:p + H, p:p + W, :].set(g)
-    out = _im2col_dot(gp, K, H, W, w_ref[...].reshape(K * K * c, tco))
+    out = requantize(
+        _im2col_dot_i32(gp, K, H, W, w_ref[...].reshape(K * K * c, tco)),
+        shift)
 
     if gate_out:                                        # epilogue: prev ReLU
         om = unpack_bits(om_ref[0]) if has_omask else None
         out = gate_gradient(out, om, method)
-    o_ref[...] = out.reshape(s, 1, H, W, tco).astype(o_ref.dtype)
+    o_ref[...] = out.reshape(s, 1, H, W, tco)
 
 
-def conv2d_bwd_fused_pallas(
+def conv2d_bwd_fused_fxp_pallas(
         g: jnp.ndarray, wt: jnp.ndarray, *,
         pool_idx: Optional[jnp.ndarray] = None,
         relu_mask: Optional[jnp.ndarray] = None,
@@ -141,27 +132,14 @@ def conv2d_bwd_fused_pallas(
         method: str = "saliency",
         out_relu_mask: Optional[jnp.ndarray] = None,
         out_gate: Optional[bool] = None,
-        co_tile: int = 128,
+        shift: int = WGT_FRAC, co_tile: int = 128,
         interpret: Optional[bool] = None) -> jnp.ndarray:
-    """One pallas_call for a conv layer's whole backward step.
-
-    ``g``:        grads w.r.t. the layer output — [N, Hg, Wg, C] or
-                  seed-batched [S, N, Hg, Wg, C] (Hg = H/2 when pooled).
-    ``wt``:       flip-transposed kernel [K, K, C, Cout'] (forward
-                  ``ref.flip_transpose(w)``; Cout' is the forward Cin).
-    ``pool_idx``: [N, Hg, Wg, ceil(C/4)] packed 2-bit argmax (None: no pool).
-    ``relu_mask``: [N, H, W, ceil(C/8)] packed 1-bit mask of the layer's own
-                  ReLU.  ``gate`` forces the rectifier rule on/off — pass
-                  ``gate=True`` with no mask for deconvnet (Eq. 4 reads only
-                  the gradient sign).
-    ``out_relu_mask``/``out_gate``: same, applied as an EPILOGUE on the
-                  outgoing dx (the PREVIOUS layer's rectifier), [N, H, W,
-                  ceil(Cout'/8)].
-    Masks/indices carry no seeds axis: all S seeds share one stored residual
-    load per tile (the paper's mask-reuse amortization).
-    """
+    """int16 twin of :func:`conv2d.conv2d_bwd_fused_pallas` — same fused
+    dataflow and argument contract, Q7.8 gradients / Q1.14 weights, ONE
+    pallas_call per conv layer backward step."""
     if interpret is None:
         interpret = interpret_mode()
+    assert g.dtype == jnp.int16 and wt.dtype == jnp.int16, (g.dtype, wt.dtype)
     gate, out_gate = validate_bp_gates(method, gate, relu_mask, out_gate,
                                        out_relu_mask)
     seeded = g.ndim == 5
@@ -171,11 +149,10 @@ def conv2d_bwd_fused_pallas(
     k, _, cw, cout = wt.shape
     has_pool = pool_idx is not None
     h, w_sp = (2 * hg, 2 * wg) if has_pool else (hg, wg)
-    p = (k - 1) // 2
 
-    cp = -(-c // 8) * 8                      # contraction channels (fwd Cout)
+    cp = -(-c // 8) * 8
     tco, cout_p = _cout_tiling(cout, co_tile)
-    if tco % 8:                              # epilogue mask bytes need /8 tiles
+    if tco % 8:
         tco = -(-tco // 8) * 8
         cout_p = -(-cout // tco) * tco
     gp = jnp.pad(g, ((0, 0),) * 4 + ((0, cp - c),))
@@ -212,14 +189,14 @@ def conv2d_bwd_fused_pallas(
 
     out = pl.pallas_call(
         functools.partial(
-            _conv_bwd_fused_kernel, K=k, H=h, W=w_sp, method=method,
-            has_pool=has_pool, gate_in=gate, has_mask=has_mask,
+            _conv_bwd_fused_fxp_kernel, K=k, H=h, W=w_sp, method=method,
+            shift=shift, has_pool=has_pool, gate_in=gate, has_mask=has_mask,
             gate_out=out_gate, has_omask=has_omask),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((s, 1, h, w_sp, tco),
                                lambda b, co: (0, b, 0, 0, co)),
-        out_shape=jax.ShapeDtypeStruct((s, n, h, w_sp, cout_p), g.dtype),
+        out_shape=jax.ShapeDtypeStruct((s, n, h, w_sp, cout_p), jnp.int16),
         interpret=interpret,
     )(*operands)
     out = out[..., :cout]

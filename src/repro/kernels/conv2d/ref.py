@@ -34,3 +34,32 @@ def conv2d_weight_grad(x: jnp.ndarray, w: jnp.ndarray,
                        w.astype(jnp.float32))
     (dw,) = wgrad(g.astype(jnp.float32))
     return dw.astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int16 fixed-point NumPy oracle (independent of jax; tests pin the Pallas
+# fxp kernels bit-exactly against these in interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_fxp_np(x_q, w_q, shift=None):
+    """int16 NHWC x int16 HWIO -> int16, int32 accumulation, one requantize.
+
+    Pure-NumPy im2col mirror of ``fxp.conv2d_fxp_pallas`` — same SAME
+    padding, same accumulation width, same round-half-up shift.
+    """
+    import numpy as np
+
+    from repro.core.fixedpoint import WGT_FRAC, requantize_np
+    if shift is None:
+        shift = WGT_FRAC
+    x_q, w_q = np.asarray(x_q, np.int32), np.asarray(w_q, np.int32)
+    n, h, w, cin = x_q.shape
+    k, _, _, cout = w_q.shape
+    p = (k - 1) // 2
+    xp = np.pad(x_q, ((0, 0), (p, p), (p, p), (0, 0)))
+    cols = [xp[:, i:i + h, j:j + w, :].reshape(n * h * w, cin)
+            for i in range(k) for j in range(k)]
+    patches = np.concatenate(cols, axis=1)             # [N*H*W, K*K*Cin]
+    acc = patches @ w_q.reshape(k * k * cin, cout)     # int32
+    return requantize_np(acc, shift).reshape(n, h, w, cout)

@@ -1,0 +1,29 @@
+"""int16 entry points for the pool kernel family (paper §IV).
+
+Max-pool is pure comparison/select — no products, no accumulator — so the
+16-bit fixed-point "variant" is the SAME kernel running on int16 blocks
+(argmax and the 2-bit crumb pack are dtype-agnostic); the zero padding the
+wrapper applies is exact in every Q format.  These wrappers only pin the
+dtype contract so the int16 CNN path can't silently mix domains, and give
+the fxp test harness a stable import point.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.pool.pool import maxpool_fwd_pallas, unpool_bwd_pallas
+
+
+def maxpool_fwd_fxp(x: jnp.ndarray, *, interpret: Optional[bool] = None):
+    """int16 [N, H, W, C] -> (int16 pooled, packed 2-bit argmax)."""
+    assert x.dtype == jnp.int16, x.dtype
+    return maxpool_fwd_pallas(x, interpret=interpret)
+
+
+def unpool_bwd_fxp(packed: jnp.ndarray, g: jnp.ndarray, *,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Standalone int16 unpool scatter (the fused conv BP inlines this)."""
+    assert g.dtype == jnp.int16, g.dtype
+    return unpool_bwd_pallas(packed, g, interpret=interpret)

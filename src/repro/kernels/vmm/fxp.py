@@ -1,20 +1,16 @@
-"""Tiled matmul kernel for FC layers (paper §III.C) for TPU.
+"""True int16 fixed-point FC matmul kernels (paper §IV: 16b datapath).
 
-FPGA -> TPU mapping: the input vector / weight-matrix tiles in on-chip
-buffers become (TM, TK) x (TK, TN) VMEM blocks; the unrolled MAC loop
-becomes one MXU dot per grid step; output-stationary accumulation is an f32
-VMEM scratch accumulated across the K grid dimension (the innermost,
-"arbitrary" axis), flushed once per (M, N) tile.
+Same tiling as :mod:`vmm` — (TM, TK) x (TK, TN) VMEM blocks, the K grid
+axis innermost — but with the FPGA's numeric contract: Q7.8 int16 inputs /
+gradients, Q1.14 int16 weights, an **int32 output-stationary accumulator**
+scratch carried across the K steps, and one round-half-up right-shift
+requantization (+ symmetric saturation) at the flush.  Contract and NumPy
+mirror in :mod:`repro.core.fixedpoint`.
 
-The BP phase reuses this kernel on a transposed weight view — the paper's
-"buffers loaded in a transpose manner from DRAM" (§III.E) — see ops.py.
-
-:func:`vmm_bwd_fused_pallas` is the fused BP variant: the 1-bit ReLU mask
-unpack + method gating runs INSIDE the matmul kernel as a prologue on the
-incoming gradient (and optionally as an epilogue on the outgoing one), so an
-FC layer's backward step is one pallas_call and the gated gradient never
-round-trips HBM.  A leading seeds axis S folds into the grid so explaining
-S classes shares one stored mask (the paper's mask-reuse amortization).
+The fused backward keeps the f32 kernel's structure: 1-bit mask unpack +
+method gating as a prologue on the incoming int16 gradient (bits are
+domain-free; gating is a select), optional epilogue gate on the outgoing
+one — ONE ``pallas_call`` per FC layer backward step.
 """
 from __future__ import annotations
 
@@ -26,29 +22,31 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.fixedpoint import WGT_FRAC, requantize
 from repro.kernels import interpret_mode, validate_bp_gates
 from repro.kernels.relu_mask.relu_mask import gate_gradient, unpack_bits
 
 
-def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+def _mm_fxp_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int, shift: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
-                            preferred_element_type=jnp.float32)
+                            preferred_element_type=jnp.int32)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[...] = requantize(acc_ref[...], shift)
 
 
-def vmm_pallas(x: jnp.ndarray, w: jnp.ndarray, *, tm: int = 128,
-               tk: int = 512, tn: int = 128,
-               interpret: Optional[bool] = None) -> jnp.ndarray:
-    """[M, K] @ [K, N] -> [M, N], MXU-aligned VMEM tiles, f32 accumulate."""
+def vmm_fxp_pallas(x: jnp.ndarray, w: jnp.ndarray, *, shift: int = WGT_FRAC,
+                   tm: int = 128, tk: int = 512, tn: int = 128,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """int16 [M, K] @ int16 [K, N] -> int16 [M, N], int32 accumulation."""
     if interpret is None:
         interpret = interpret_mode()
+    assert x.dtype == jnp.int16 and w.dtype == jnp.int16, (x.dtype, w.dtype)
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
@@ -59,28 +57,29 @@ def vmm_pallas(x: jnp.ndarray, w: jnp.ndarray, *, tm: int = 128,
     k_steps = kp // tk_
 
     out = pl.pallas_call(
-        functools.partial(_mm_kernel, k_steps=k_steps),
+        functools.partial(_mm_fxp_kernel, k_steps=k_steps, shift=shift),
         grid=(mp // tm_, np_ // tn_, k_steps),
         in_specs=[
             pl.BlockSpec((tm_, tk_), lambda i, j, s: (i, s)),
             pl.BlockSpec((tk_, tn_), lambda i, j, s: (s, j)),
         ],
         out_specs=pl.BlockSpec((tm_, tn_), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
-        # f32 output-stationary accumulator, persists across the K grid axis
-        scratch_shapes=[pltpu.VMEM((tm_, tn_), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int16),
+        # i32 output-stationary accumulator, persists across the K grid axis
+        scratch_shapes=[pltpu.VMEM((tm_, tn_), jnp.int32)],
         interpret=interpret,
     )(xp, wp)
     return out[:m, :n]
 
 
 # ---------------------------------------------------------------------------
-# fused backward: [mask gate] -> g @ W^T dot -> [epilogue gate]
+# fused backward, int16: [mask gate] -> g @ W^T i32 dot -> requantize
 # ---------------------------------------------------------------------------
 
 
-def _mm_bwd_fused_kernel(*refs, k_steps: int, method: str, gate_in: bool,
-                         has_mask: bool, gate_out: bool, has_omask: bool):
+def _mm_bwd_fused_fxp_kernel(*refs, k_steps: int, shift: int, method: str,
+                             gate_in: bool, has_mask: bool, gate_out: bool,
+                             has_omask: bool):
     it = iter(refs)
     g_ref, w_ref = next(it), next(it)
     m_ref = next(it) if has_mask else None
@@ -95,37 +94,32 @@ def _mm_bwd_fused_kernel(*refs, k_steps: int, method: str, gate_in: bool,
     if gate_in:                                         # prologue: Eq. 3-5
         m = unpack_bits(m_ref[...]) if has_mask else None
         g = gate_gradient(g, m, method)
-    acc_ref[...] += jnp.dot(g, w_ref[...], preferred_element_type=jnp.float32)
+    acc_ref[...] += jnp.dot(g, w_ref[...], preferred_element_type=jnp.int32)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _flush():
-        out = acc_ref[...]
+        out = requantize(acc_ref[...], shift)
         if gate_out:                                    # epilogue: prev ReLU
             om = unpack_bits(om_ref[...]) if has_omask else None
             out = gate_gradient(out, om, method)
-        o_ref[0] = out.astype(o_ref.dtype)
+        o_ref[0] = out
 
 
-def vmm_bwd_fused_pallas(
+def vmm_bwd_fused_fxp_pallas(
         g: jnp.ndarray, w: jnp.ndarray, *,
         relu_mask: Optional[jnp.ndarray] = None,
         gate: Optional[bool] = None,
         method: str = "saliency",
         out_relu_mask: Optional[jnp.ndarray] = None,
         out_gate: Optional[bool] = None,
-        tk: int = 512, tn: int = 128,
+        shift: int = WGT_FRAC, tk: int = 512, tn: int = 128,
         interpret: Optional[bool] = None) -> jnp.ndarray:
-    """One pallas_call for an FC layer's whole backward step.
-
-    ``g``:  [M, K] or seed-batched [S, M, K] grads w.r.t. the FC output.
-    ``w``:  [K, N] — the TRANSPOSED weight view (caller passes ``W.T``).
-    ``relu_mask``: [M, ceil(K/8)] packed 1-bit mask of the layer's ReLU;
-    ``gate=True`` with no mask selects the deconvnet rule (gradient sign
-    only).  ``out_relu_mask``/``out_gate``: epilogue on the outgoing dx,
-    [M, ceil(N/8)].  Masks carry no seeds axis — shared across S.
-    """
+    """int16 twin of :func:`vmm.vmm_bwd_fused_pallas` — same fused dataflow
+    and argument contract, Q7.8 gradients / Q1.14 weights, ONE pallas_call
+    per FC layer backward step."""
     if interpret is None:
         interpret = interpret_mode()
+    assert g.dtype == jnp.int16 and w.dtype == jnp.int16, (g.dtype, w.dtype)
     gate, out_gate = validate_bp_gates(method, gate, relu_mask, out_gate,
                                        out_relu_mask)
     seeded = g.ndim == 3
@@ -166,14 +160,14 @@ def vmm_bwd_fused_pallas(
 
     out = pl.pallas_call(
         functools.partial(
-            _mm_bwd_fused_kernel, k_steps=k_steps, method=method,
-            gate_in=gate, has_mask=has_mask, gate_out=out_gate,
-            has_omask=has_omask),
+            _mm_bwd_fused_fxp_kernel, k_steps=k_steps, shift=shift,
+            method=method, gate_in=gate, has_mask=has_mask,
+            gate_out=out_gate, has_omask=has_omask),
         grid=(s, np_ // tn_, k_steps),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, mp, tn_), lambda si, j, st: (si, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((s, mp, np_), g.dtype),
-        scratch_shapes=[pltpu.VMEM((mp, tn_), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((s, mp, np_), jnp.int16),
+        scratch_shapes=[pltpu.VMEM((mp, tn_), jnp.int32)],
         interpret=interpret,
     )(*operands)
     out = out[:, :m, :n]

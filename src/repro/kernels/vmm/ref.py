@@ -10,3 +10,15 @@ def vmm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 def vmm_input_grad(g: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """BP of FC w.r.t. input: the transposed VMM (paper §III.E)."""
     return jnp.dot(g, w.T, preferred_element_type=jnp.float32).astype(g.dtype)
+
+
+def vmm_fxp_np(x_q, w_q, shift=None):
+    """int16 [M, K] @ int16 [K, N] -> int16 — pure-NumPy mirror of
+    ``fxp.vmm_fxp_pallas``: int32 accumulation, one round-half-up shift."""
+    import numpy as np
+
+    from repro.core.fixedpoint import WGT_FRAC, requantize_np
+    if shift is None:
+        shift = WGT_FRAC
+    acc = np.asarray(x_q, np.int32) @ np.asarray(w_q, np.int32)
+    return requantize_np(acc, shift)

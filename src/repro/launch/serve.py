@@ -71,7 +71,8 @@ def run_lm(args) -> None:
 def run_cnn(args) -> None:
     cfg = cnn_lib.CNNConfig()
     params = cnn_lib.init(jax.random.PRNGKey(0), cfg)
-    server = ExplanationServer(CNNAdapter(params, cfg),
+    server = ExplanationServer(CNNAdapter(params, cfg,
+                                          precision=args.precision),
                                max_batch=args.batch,
                                max_delay_s=args.max_delay_ms / 1e3)
     n = args.requests
@@ -116,6 +117,10 @@ def main():
     # method lists derive from the registry: a newly registered explainer
     # is immediately servable without touching this file.
     ap.add_argument("--method", default="saliency", choices=registry.names())
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "bf16", "fxp16"],
+                    help="cnn workload numeric path; fxp16 = true int16 "
+                         "fixed-point kernels (paper §IV)")
     args = ap.parse_args()
 
     if args.workload == "lm":

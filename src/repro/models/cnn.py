@@ -33,7 +33,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import rules
+from repro.core import fixedpoint, rules
+
+PRECISIONS = ("f32", "bf16", "fxp16")
 
 
 @dataclass(frozen=True)
@@ -232,6 +234,59 @@ def _fc_block_vjp_bwd(method, do_relu, res, g):
 _fc_block.defvjp(_fc_block_vjp_fwd, _fc_block_vjp_bwd)
 
 
+# ---------------------------------------------------------------------------
+# true int16 fixed-point blocks (paper §IV: 16b datapath end-to-end)
+# ---------------------------------------------------------------------------
+
+
+def _conv_block_fwd_res_fxp(xq, wq, bq, method, do_relu, do_pool):
+    """int16 conv->relu->pool forward; residuals = packed masks only.
+
+    Same structure as :func:`_conv_block_fwd_res` but every tensor lives on
+    the Q7.8 grid (weights Q1.14) and the conv is the int32-accumulate fxp
+    kernel.  The 1-bit/2-bit mask emit is dtype-agnostic and unchanged.
+    """
+    from repro.kernels.conv2d.fxp import conv2d_fxp_pallas
+    from repro.kernels.pool.fxp import maxpool_fwd_fxp
+    y = fixedpoint.sat_add(conv2d_fxp_pallas(xq, wq), bq)
+    mask4 = idx = None
+    if do_relu:
+        if method == "deconvnet":          # Table II: no ReLU mask stored
+            y = jnp.maximum(y, 0)
+        else:
+            y, mask4 = _relu_fwd_mask4(y)
+    if do_pool:
+        y, idx = maxpool_fwd_fxp(y)
+    return y, (mask4, idx)
+
+
+def _conv_block_bwd_fused_fxp(wq, mask4, idx, gq, method, do_relu):
+    from repro.kernels.conv2d import ref as conv_ref
+    from repro.kernels.conv2d.fxp import conv2d_bwd_fused_fxp_pallas
+    return conv2d_bwd_fused_fxp_pallas(
+        gq, conv_ref.flip_transpose(wq), pool_idx=idx,
+        relu_mask=mask4, gate=do_relu, method=method)
+
+
+def _fc_block_fwd_res_fxp(xq, wq, bq, method, do_relu):
+    from repro.kernels.relu_mask.relu_mask import relu_fwd_pallas
+    from repro.kernels.vmm.fxp import vmm_fxp_pallas
+    y = fixedpoint.sat_add(vmm_fxp_pallas(xq, wq), bq)
+    mask = None
+    if do_relu:
+        if method == "deconvnet":
+            y = jnp.maximum(y, 0)
+        else:
+            y, mask = relu_fwd_pallas(y)
+    return y, mask
+
+
+def _fc_block_bwd_fused_fxp(wq, mask, gq, method, do_relu):
+    from repro.kernels.vmm.fxp import vmm_bwd_fused_fxp_pallas
+    return vmm_bwd_fused_fxp_pallas(gq, wq.T, relu_mask=mask, gate=do_relu,
+                                    method=method)
+
+
 def _apply_fused(params, x, cfg: CNNConfig, method: str):
     for i, p in enumerate(params["conv"]):
         do_pool = (i + 1) % cfg.pool_every == 0
@@ -244,14 +299,37 @@ def _apply_fused(params, x, cfg: CNNConfig, method: str):
 
 
 def apply(params, x, cfg: CNNConfig, *, method: str = "autodiff",
-          use_pallas: bool = False, fused: Optional[bool] = None):
+          use_pallas: bool = False, fused: Optional[bool] = None,
+          precision: str = "f32"):
     """Forward pass: [N, H, W, Cin] -> logits [N, num_classes].
 
     ``method`` selects the attribution backward rules (static, like the
     paper's HLS design-time configuration).  On the Pallas path with a
     method bound, ``fused`` (default on) runs each layer as a fused block
     whose backward step is a single ``pallas_call``.
+
+    ``precision`` is the numeric knob (paper §IV): ``"f32"`` (default),
+    ``"bf16"`` (operands cast, f32 accumulators as before), or ``"fxp16"``
+    — TRUE int16 fixed point through the fxp Pallas kernels; logits are
+    returned dequantized to f32.  Under fxp16 the ``use_pallas``/``fused``
+    knobs do not apply (the int16 path IS the fused Pallas path; there is
+    no lax reference twin), and the path is integer arithmetic so it
+    cannot be ``jax.vjp``'d — attribution runs through the manual pair of
+    :func:`seed_batched_attribution` instead.
     """
+    if precision not in PRECISIONS:
+        raise ValueError(f"precision={precision!r} not in {PRECISIONS}")
+    if precision == "fxp16":
+        # Logits-only forward: run under the deconvnet rule set, which
+        # stores NO masks (Table II) — the ReLU output itself is
+        # rule-invariant, so the logits are identical for every method and
+        # the 1-bit/2-bit packing work is skipped entirely.
+        logits, _ = forward_with_residuals(params, x, cfg, "deconvnet",
+                                           precision="fxp16")
+        return logits
+    if precision == "bf16":
+        params = jax.tree.map(lambda v: v.astype(jnp.bfloat16), params)
+        x = x.astype(jnp.bfloat16)
     if fused is None:
         fused = use_pallas and method != "autodiff"
     if fused:
@@ -282,13 +360,41 @@ def apply(params, x, cfg: CNNConfig, *, method: str = "autodiff",
 # ---------------------------------------------------------------------------
 
 
-def forward_with_residuals(params, x, cfg: CNNConfig, method: str):
+def forward_with_residuals(params, x, cfg: CNNConfig, method: str,
+                           precision: str = "f32"):
     """Pallas forward that RETURNS the packed residuals (masks + indices).
 
     The residual set is exactly the paper's BRAM store: per conv layer a
     1-bit ReLU mask + 2-bit pool indices, per hidden FC a 1-bit mask —
     no activations.  Feed to :func:`backward_seeds`.
+
+    ``precision="fxp16"`` quantizes params (Q1.14 weights / Q7.8 biases)
+    and input (Q7.8) and runs the int16 fxp blocks: the stored masks are
+    computed IN the quantized domain, so the BP replay sees exactly the
+    rectifier states the quantized forward produced.  Logits come back
+    dequantized to f32 (exact — every grid point is an f32).
     """
+    if precision == "fxp16":
+        qp = fixedpoint.quantize_params_int(params)
+        xq = fixedpoint.to_fixed(x)
+        res_conv, res_fc = [], []
+        for i, p in enumerate(qp["conv"]):
+            do_pool = (i + 1) % cfg.pool_every == 0
+            xq, (mask4, idx) = _conv_block_fwd_res_fxp(
+                xq, p["w"], p["b"], method, cfg.conv_relu, do_pool)
+            res_conv.append((mask4, idx))
+        feat_shape = xq.shape[1:]
+        xq = xq.reshape(xq.shape[0], -1)
+        n_fc = len(qp["fc"])
+        for i, p in enumerate(qp["fc"]):
+            xq, mask = _fc_block_fwd_res_fxp(
+                xq, p["w"], p["b"], method, i < n_fc - 1)
+            res_fc.append(mask)
+        return fixedpoint.from_fixed(xq), {
+            "conv": res_conv, "fc": res_fc, "feat_shape": feat_shape}
+    if precision == "bf16":
+        params = jax.tree.map(lambda v: v.astype(jnp.bfloat16), params)
+        x = x.astype(jnp.bfloat16)
     res_conv, res_fc = [], []
     for i, p in enumerate(params["conv"]):
         do_pool = (i + 1) % cfg.pool_every == 0
@@ -305,13 +411,37 @@ def forward_with_residuals(params, x, cfg: CNNConfig, method: str):
     return x, {"conv": res_conv, "fc": res_fc, "feat_shape": feat_shape}
 
 
-def backward_seeds(params, residuals, seeds, cfg: CNNConfig, method: str):
+def backward_seeds(params, residuals, seeds, cfg: CNNConfig, method: str,
+                   precision: str = "f32"):
     """Seed-batched BP: seeds [S, N, classes] -> relevance [S, N, H, W, Cin].
 
     One fused grid launch per layer for ALL S seeds — the seeds axis folds
     into the sublane dimension of each kernel's dot and every stored
     mask/index block is loaded once and shared across seeds.
+
+    ``precision="fxp16"`` replays the whole BP in int16: the f32 one-hot
+    seeds are quantized to Q7.8 pre-scaled by ``fixedpoint.SEED_GAIN`` (a
+    power of two — a block exponent keeping the shrinking gradients in the
+    high bits of the grid), every layer runs the fused int16 kernel, and
+    the relevance is dequantized with the gain divided back out exactly.
     """
+    if precision == "fxp16":
+        qp = fixedpoint.quantize_params_int(params)
+        g = fixedpoint.to_fixed(seeds * fixedpoint.SEED_GAIN)
+        n_fc = len(qp["fc"])
+        for i in reversed(range(n_fc)):
+            g = _fc_block_bwd_fused_fxp(qp["fc"][i]["w"], residuals["fc"][i],
+                                        g, method, i < n_fc - 1)
+        s, n = g.shape[:2]
+        g = g.reshape((s, n) + tuple(residuals["feat_shape"]))
+        for i in reversed(range(len(qp["conv"]))):
+            mask4, idx = residuals["conv"][i]
+            g = _conv_block_bwd_fused_fxp(qp["conv"][i]["w"], mask4, idx, g,
+                                          method, cfg.conv_relu)
+        return fixedpoint.from_fixed(g) / fixedpoint.SEED_GAIN
+    if precision == "bf16":
+        params = jax.tree.map(lambda v: v.astype(jnp.bfloat16), params)
+        seeds = seeds.astype(jnp.bfloat16)
     g = seeds
     n_fc = len(params["fc"])
     for i in reversed(range(n_fc)):
@@ -326,16 +456,54 @@ def backward_seeds(params, residuals, seeds, cfg: CNNConfig, method: str):
     return g
 
 
-def seed_batched_attribution(params, cfg: CNNConfig, method: str):
+def seed_batched_attribution(params, cfg: CNNConfig, method: str,
+                             precision: str = "f32"):
     """(forward, backward) pair for ``attribution.attribute_classes``.
 
     ``forward(x) -> (logits, residuals)``; ``backward(residuals, seeds)``
     runs the whole multi-class BP as seed-batched fused kernels.
+
+    With ``precision="fxp16"`` both halves run the true int16 kernels —
+    this pair IS the quantized engine: pass it to
+    ``attribution.attribute(..., backward=...)`` / ``attribute_classes`` /
+    the serve registry and every explainer runs quantized end-to-end
+    without touching ``jax.vjp`` (integers cannot be autodiffed).
     """
+    if precision not in PRECISIONS:
+        raise ValueError(f"precision={precision!r} not in {PRECISIONS}")
+
     def forward(x):
-        return forward_with_residuals(params, x, cfg, method)
+        return forward_with_residuals(params, x, cfg, method, precision)
 
     def backward(residuals, seeds):
-        return backward_seeds(params, residuals, seeds, cfg, method)
+        return backward_seeds(params, residuals, seeds, cfg, method,
+                              precision)
+
+    return forward, backward
+
+
+def seed_batched_attribution_jittable(params, cfg: CNNConfig, method: str,
+                                      precision: str = "f32"):
+    """:func:`seed_batched_attribution` in jit-safe form.
+
+    ``forward_with_residuals`` puts the (static, config-derived)
+    ``feat_shape`` tuple inside the residual dict; under ``jax.jit`` that
+    tuple would round-trip as traced scalars and break the backward's
+    reshape.  This variant strips it from the forward's output and
+    re-binds it host-side in the backward — the one protocol every jitted
+    consumer (serve adapter, benchmarks, golden/fidelity harnesses) must
+    follow, kept in this single place.
+    """
+    feat_shape = cfg.feature_hw() + (cfg.channels[-1],)
+
+    def forward(x):
+        logits, res = forward_with_residuals(params, x, cfg, method,
+                                             precision)
+        return logits, {k: v for k, v in res.items() if k != "feat_shape"}
+
+    def backward(residuals, seeds):
+        residuals = dict(residuals, feat_shape=feat_shape)
+        return backward_seeds(params, residuals, seeds, cfg, method,
+                              precision)
 
     return forward, backward

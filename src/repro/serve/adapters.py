@@ -56,11 +56,18 @@ class CNNAdapter:
     input_kind = "image"
 
     def __init__(self, params, cfg: cnn.CNNConfig, *,
-                 store_rules: str = "saliency"):
+                 store_rules: str = "saliency", precision: str = "f32"):
+        if precision not in cnn.PRECISIONS:
+            raise ValueError(
+                f"precision={precision!r} not in {cnn.PRECISIONS}")
         self.params = params
         self.cfg = cfg
         self.store_rules = store_rules
-        self.feat_shape = cfg.feature_hw() + (cfg.channels[-1],)
+        # Numeric knob (paper §IV): "fxp16" serves TRUE int16 fixed-point —
+        # predict stores masks computed in the quantized domain and every
+        # explain (hit, cold pure-BP, or composite via the manual-engine
+        # ``backward``) replays the fused BP in int16.
+        self.precision = precision
         self._predict = jax.jit(self._predict_impl)
         self._backward = {}          # rules -> jitted seed-batched BP
         self._model_fn = {}          # rules -> jitted fused f(x) -> logits
@@ -68,12 +75,11 @@ class CNNAdapter:
     # -- forward with residuals --------------------------------------------
 
     def _predict_impl(self, xb):
-        logits, residuals = cnn.forward_with_residuals(
-            self.params, xb, self.cfg, self.store_rules)
-        # feat_shape is static (config-derived); keep it host-side so the
-        # cached-explain reshape sees Python ints, not traced scalars.
-        residuals = {k: v for k, v in residuals.items() if k != "feat_shape"}
-        return logits, residuals
+        # the jittable pair strips feat_shape (static) from the residuals
+        # and re-binds it host-side in the backward — see cnn's docstring.
+        fwd, _ = cnn.seed_batched_attribution_jittable(
+            self.params, self.cfg, self.store_rules, self.precision)
+        return fwd(xb)
 
     def predict(self, xb) -> Tuple[jnp.ndarray, Any]:
         """[B, H, W, C] -> (logits [B, num_classes], residual pytree)."""
@@ -81,20 +87,42 @@ class CNNAdapter:
 
     # -- BP phase over stored residuals ------------------------------------
 
+    def _backward_fn(self, rules: str):
+        """One jitted seed-batched BP per rule set, shared by the cache-hit
+        path AND the manual engine handed to registry explainers."""
+        if rules not in self._backward:
+            _, bwd = cnn.seed_batched_attribution_jittable(
+                self.params, self.cfg, rules, self.precision)
+            self._backward[rules] = jax.jit(bwd)
+        return self._backward[rules]
+
     def explain_cached(self, method: str, residuals, seeds) -> jnp.ndarray:
         """seeds [S, B, classes] -> relevance [S, B, H, W, Cin]; NO forward."""
-        if method not in self._backward:
-            def backward(res, sds, _m=method):
-                res = dict(res, feat_shape=self.feat_shape)
-                return cnn.backward_seeds(self.params, res, sds, self.cfg, _m)
-            self._backward[method] = jax.jit(backward)
-        return self._backward[method](residuals, seeds)
+        return self._backward_fn(method)(residuals, seeds)
 
     # -- rule-bound model fn for cold explainers ----------------------------
 
     def model_fn(self, rules: str):
+        """Under fxp16 the returned ``f`` is the residual forward (pair
+        output) — cold composite explainers must pair it with
+        :meth:`manual_backward`, since the int16 path has no ``jax.vjp``."""
         if rules not in self._model_fn:
-            self._model_fn[rules] = jax.jit(
-                lambda v, _r=rules: cnn.apply(self.params, v, self.cfg,
-                                              method=_r, use_pallas=True))
+            if self.precision == "fxp16":
+                fwd, _ = cnn.seed_batched_attribution_jittable(
+                    self.params, self.cfg, rules, "fxp16")
+                self._model_fn[rules] = jax.jit(fwd)
+            else:
+                self._model_fn[rules] = jax.jit(
+                    lambda v, _r=rules: cnn.apply(
+                        self.params, v, self.cfg, method=_r, use_pallas=True,
+                        precision=self.precision))
         return self._model_fn[rules]
+
+    def manual_backward(self, rules: str):
+        """Manual BP engine for registry explainers, or None on float paths
+        (where ``jax.vjp`` through :meth:`model_fn` is the engine).  Reuses
+        the same jitted program as :meth:`explain_cached` — no duplicate
+        compilation of an identical backward."""
+        if self.precision != "fxp16":
+            return None
+        return self._backward_fn(rules)

@@ -24,7 +24,7 @@ Class attributes drive server capabilities:
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Type
+from typing import Callable, Dict, List, Optional, Type
 
 from repro.core import attribution
 
@@ -75,8 +75,14 @@ class Explainer:
     token_capable: bool = False
     needs_key: bool = False
 
-    def __init__(self, f: Callable, **opts):
+    def __init__(self, f: Callable, backward: Optional[Callable] = None,
+                 **opts):
         self.f = f
+        # Manual BP engine (attribution.attribute's ``backward=``): set when
+        # ``f`` returns (logits, residuals) and the BP phase runs over the
+        # stored masks — the precision="fxp16" true-int16 pair arrives here,
+        # since integer arithmetic has no jax.vjp.
+        self.backward = backward
         self.opts = opts
 
     def attribute(self, x, *, target=None, key=None):
@@ -94,7 +100,8 @@ class _PureBP(Explainer):
     token_capable = True
 
     def attribute(self, x, *, target=None, key=None):
-        return attribution.attribute(self.f, x, target=target)
+        return attribution.attribute(self.f, x, target=target,
+                                     backward=self.backward)
 
 
 @register("saliency")
@@ -117,7 +124,8 @@ class InputXGradient(Explainer):
     rules = "saliency"
 
     def attribute(self, x, *, target=None, key=None):
-        return attribution.input_x_gradient(self.f, x, target=target)
+        return attribution.input_x_gradient(self.f, x, target=target,
+                                            backward=self.backward)
 
 
 @register("integrated_gradients")
@@ -131,7 +139,8 @@ class IntegratedGradients(Explainer):
             self.f, x, target=target,
             steps=self.opts.get("steps", 16),
             baseline=self.opts.get("baseline"),
-            batched=self.opts.get("batched", True))
+            batched=self.opts.get("batched", True),
+            backward=self.backward)
 
 
 @register("smoothgrad")
@@ -148,4 +157,5 @@ class SmoothGrad(Explainer):
             self.f, x, key, target=target,
             n=self.opts.get("n", 8),
             sigma=self.opts.get("sigma", 0.1),
-            batched=self.opts.get("batched", True))
+            batched=self.opts.get("batched", True),
+            backward=self.backward)

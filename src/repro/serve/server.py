@@ -96,8 +96,12 @@ class ExplanationServer:
     def explainer(self, method: str) -> registry.Explainer:
         if method not in self._explainers:
             cls = registry.get(method)
+            # Quantized adapters expose a manual BP engine (fxp16 has no
+            # jax.vjp); float adapters return None and vjp is used.
+            manual = getattr(self.adapter, "manual_backward", None)
             self._explainers[method] = cls(
                 self.adapter.model_fn(cls.rules),
+                backward=manual(cls.rules) if manual else None,
                 **self.method_opts.get(method, {}))
         return self._explainers[method]
 

@@ -1,5 +1,6 @@
 """Data pipeline: determinism (restart safety) + host-sharding partition."""
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.data import CifarLikeImages, TokenStream, host_shard_bounds
@@ -31,6 +32,7 @@ def test_markov_structure_learnable():
     assert frac > 0.85
 
 
+@pytest.mark.slow
 @given(st.integers(1, 512), st.integers(1, 64))
 @settings(max_examples=50, deadline=None)
 def test_host_shards_partition_batch(global_batch, n_hosts):

@@ -1,0 +1,125 @@
+"""Quantization fidelity: fxp16 attribution vs f32 on the paper CNN.
+
+The acceptance bar for the paper's §IV precision claim, executed rather
+than simulated: true-int16 saliency heatmaps must rank-correlate >= 0.95
+with the f32 reference on the Table III CNN.  Plus unit coverage of the
+:mod:`repro.core.fidelity` metrics themselves.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attribution, fidelity
+from repro.models import cnn
+
+
+# ---------------------------------------------------------------------------
+# metric units
+# ---------------------------------------------------------------------------
+
+
+def test_spearman_perfect_and_reversed():
+    a = np.arange(100, dtype=np.float64)
+    assert fidelity.spearman(a, a) == pytest.approx(1.0)
+    assert fidelity.spearman(a, -a) == pytest.approx(-1.0)
+    assert fidelity.spearman(a, 2.0 * a + 5.0) == pytest.approx(1.0)
+
+
+def test_spearman_matches_scipy_with_ties():
+    scipy_stats = pytest.importorskip("scipy.stats")
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 10, 500).astype(np.float64)   # heavy ties
+    b = a + rng.normal(0, 2.0, 500)
+    want = scipy_stats.spearmanr(a, b).statistic
+    assert fidelity.spearman(a, b) == pytest.approx(want, abs=1e-12)
+
+
+def test_rankdata_averages_ties():
+    np.testing.assert_array_equal(
+        fidelity.rankdata(np.array([10.0, 20.0, 10.0, 30.0])),
+        [1.5, 3.0, 1.5, 4.0])
+
+
+def test_topk_overlap():
+    a = np.array([9.0, 1.0, 8.0, 2.0, 7.0, 3.0])
+    b = np.array([9.0, 8.0, 1.0, 2.0, 7.0, 3.0])   # one of top-3 swapped
+    assert fidelity.topk_overlap(a, a, 3) == 1.0
+    assert fidelity.topk_overlap(a, b, 3) == pytest.approx(2 / 3)
+
+
+def test_sign_agreement():
+    a = np.array([1.0, -2.0, 0.0, 3.0])
+    b = np.array([5.0, -1.0, 0.0, -3.0])
+    assert fidelity.sign_agreement(a, a) == 1.0
+    assert fidelity.sign_agreement(a, b) == pytest.approx(0.75)
+
+
+def test_compare_keys():
+    a = np.random.default_rng(1).normal(size=64)
+    out = fidelity.compare(a, a, k=8)
+    assert set(out) == {"spearman", "topk_overlap", "sign_agreement"}
+    assert all(v == pytest.approx(1.0) for v in out.values())
+
+
+# ---------------------------------------------------------------------------
+# the acceptance test: paper CNN, fxp16 vs f32
+# ---------------------------------------------------------------------------
+
+
+def _attribution_pair(params, cfg, method, precision, x):
+    """(logits, relevance[S=1]) through the seed-batched manual engine."""
+    fwd, bwd = cnn.seed_batched_attribution_jittable(params, cfg, method,
+                                                     precision)
+    logits, res = jax.jit(fwd)(x)
+    seeds = jax.nn.one_hot(jnp.argmax(logits, axis=-1), cfg.num_classes)
+    return logits, jax.jit(bwd)(res, seeds[None])
+
+
+@pytest.mark.parametrize("method", ("saliency", "deconvnet", "guided"))
+def test_fxp16_rank_correlation_on_paper_cnn(method):
+    """fxp16 heatmap Spearman >= 0.95 vs f32 on the Table III CNN — the
+    acceptance bar, asserted for ALL three paper methods (the README
+    fidelity table cites this test)."""
+    cfg = cnn.CNNConfig()                        # the Table III CNN
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3))
+
+    lg_f, rel_f = _attribution_pair(params, cfg, method, "f32", x)
+    lg_q, rel_q = _attribution_pair(params, cfg, method, "fxp16", x)
+
+    # the quantized forward must still pick the same class to explain
+    assert int(jnp.argmax(lg_f)) == int(jnp.argmax(lg_q))
+
+    hm_f = np.asarray(attribution.heatmap(rel_f[0]))
+    hm_q = np.asarray(attribution.heatmap(rel_q[0]))
+    rho = fidelity.spearman(hm_f, hm_q)
+    assert rho >= 0.95, f"fxp16 heatmap rank correlation {rho:.4f} < 0.95"
+
+
+@pytest.mark.parametrize("method", ("deconvnet", "guided"))
+def test_fxp16_fidelity_other_methods(method):
+    """The other two paper methods hold a (slightly looser) rank bar and
+    near-total top-k overlap on a smaller CNN."""
+    cfg = cnn.CNNConfig(in_hw=(16, 16), channels=(16, 16), fc=(32,),
+                        num_classes=8)
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 3))
+    _, rel_f = _attribution_pair(params, cfg, method, "f32", x)
+    _, rel_q = _attribution_pair(params, cfg, method, "fxp16", x)
+    hm_f = np.asarray(attribution.heatmap(rel_f[0]))
+    hm_q = np.asarray(attribution.heatmap(rel_q[0]))
+    out = fidelity.compare(hm_f, hm_q, k=32)
+    assert out["spearman"] >= 0.90, out
+    assert out["topk_overlap"] >= 0.75, out
+
+
+def test_fxp16_logits_close_to_f32():
+    """Forward-path sanity: quantized logits track f32 within Q7.8 slack."""
+    cfg = cnn.CNNConfig(in_hw=(16, 16), channels=(16, 16), fc=(32,),
+                        num_classes=8)
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    lg_f = cnn.apply(params, x, cfg, method="saliency", use_pallas=True)
+    lg_q = cnn.apply(params, x, cfg, method="saliency", precision="fxp16")
+    assert float(jnp.max(jnp.abs(lg_f - lg_q))) < 0.1

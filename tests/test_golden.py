@@ -1,0 +1,51 @@
+"""Golden-file regression: fixed-seed heatmaps must reload EXACTLY.
+
+The stored arrays (tests/golden/cnn_heatmaps.npz, regenerated only via
+tests/golden/generate.py) pin the end-to-end numeric behavior of the
+attribution stack — forward residual kernels, fused BP kernels, f32 and
+true-int16 paths — so a kernel refactor cannot silently shift heatmaps.
+Comparisons are same-program (the generator and this test run the
+identical jitted functions; see the conftest convention), so equality is
+bitwise: any mismatch is a real numeric change, which belongs in a diff
+of the golden file, not hidden under a tolerance.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "golden"))
+
+from generate import GOLDEN_PATH, METHODS, PRECISIONS, compute_heatmaps  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def golden():
+    assert os.path.exists(GOLDEN_PATH), (
+        "golden file missing — run: PYTHONPATH=src python "
+        "tests/golden/generate.py")
+    with np.load(GOLDEN_PATH) as z:
+        return {k: z[k] for k in z.files}
+
+
+@pytest.fixture(scope="module")
+def recomputed():
+    return compute_heatmaps()
+
+
+def test_golden_covers_every_method_precision(golden):
+    assert set(golden) == {f"{m}_{p}" for m in METHODS for p in PRECISIONS}
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_heatmap_matches_golden_exactly(golden, recomputed, method,
+                                        precision):
+    key = f"{method}_{precision}"
+    got, want = recomputed[key], golden[key]
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_array_equal(
+        got, want,
+        err_msg=f"{key} heatmap drifted from golden — if intentional, "
+                f"regenerate via tests/golden/generate.py and commit")

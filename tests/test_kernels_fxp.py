@@ -1,0 +1,318 @@
+"""True int16 fixed-point kernels vs an integer-arithmetic NumPy oracle.
+
+The contract under test (paper §IV / repro.core.fixedpoint): Q7.8 int16
+feature maps and gradients, Q1.14 int16 weights, int32 accumulation, one
+round-half-up right-shift requantization with symmetric saturation.  In
+interpret mode every comparison against the pure-NumPy oracle is BITWISE —
+integer arithmetic has no tolerance to hide behind.
+
+jit-vs-eager parity follows the conftest convention: same-program
+comparisons only — two separate jits of the same function must agree
+bitwise; jitted-vs-eager is compared with a tolerance (for these integer
+kernels it happens to be exact, but the assertion stays tolerance-based so
+the convention is uniform across the suite).
+
+Also asserts the structural guarantee carries over from the f32 kernels:
+a layer's whole int16 backward step lowers to exactly ONE pallas_call.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fixedpoint as fxp
+from repro.core import masks
+from repro.kernels.conv2d import ref as conv_ref
+from repro.kernels.conv2d.fxp import (conv2d_bwd_fused_fxp_pallas,
+                                      conv2d_fxp_pallas)
+from repro.kernels.pool.fxp import maxpool_fwd_fxp, unpool_bwd_fxp
+from repro.kernels.pool.pool import maxpool_fwd_pallas
+from repro.kernels.relu_mask.relu_mask import relu_fwd_pallas
+from repro.kernels.vmm import ref as vmm_ref
+from repro.kernels.vmm.fxp import vmm_bwd_fused_fxp_pallas, vmm_fxp_pallas
+
+METHODS = ("saliency", "deconvnet", "guided")
+
+
+def _qact(key, shape, scale=1.0):
+    return fxp.to_fixed(jax.random.normal(key, shape) * scale)
+
+
+def _qwgt(key, shape, scale=0.1):
+    return fxp.to_fixed(jax.random.normal(key, shape) * scale, fxp.WGT_FRAC)
+
+
+# ---------------------------------------------------------------------------
+# NumPy-side fused-BP oracle pieces (pure integer numpy, no jax)
+# ---------------------------------------------------------------------------
+
+
+def _unpool_np(idx_np, g_np):
+    n, hp, wp, c = g_np.shape
+    out = np.zeros((n, 2 * hp, 2 * wp, c), np.int16)
+    for k, (di, dj) in enumerate(((0, 0), (0, 1), (1, 0), (1, 1))):
+        out[:, di::2, dj::2, :] = np.where(idx_np == k, g_np, 0)
+    return out
+
+
+def _gate_np(g_np, mask_np, method):
+    if method == "deconvnet":
+        return np.where(g_np > 0, g_np, 0).astype(np.int16)
+    if method == "guided":
+        return np.where(mask_np & (g_np > 0), g_np, 0).astype(np.int16)
+    return np.where(mask_np, g_np, 0).astype(np.int16)
+
+
+# ---------------------------------------------------------------------------
+# forward kernels: bit-exact vs the NumPy oracle
+# ---------------------------------------------------------------------------
+
+# (n, h, w, cin, cout, k) — incl. unaligned channel counts
+CONV_SHAPES = [
+    (1, 8, 8, 3, 16, 3),
+    (2, 8, 8, 7, 13, 3),            # both channel counts unaligned
+    (1, 16, 16, 32, 64, 3),         # paper conv3 scale
+    (1, 8, 8, 16, 16, 5),           # K=5 halo
+]
+
+
+@pytest.mark.parametrize("shape", CONV_SHAPES)
+def test_conv_fxp_bitexact_vs_numpy_oracle(shape):
+    n, h, w, cin, cout, k = shape
+    xq = _qact(jax.random.PRNGKey(0), (n, h, w, cin))
+    wq = _qwgt(jax.random.PRNGKey(1), (k, k, cin, cout))
+    got = conv2d_fxp_pallas(xq, wq)
+    assert got.dtype == jnp.int16
+    want = conv_ref.conv2d_fxp_np(np.asarray(xq), np.asarray(wq))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("shape", [(1, 64, 48), (3, 100, 17), (4, 4096, 128)])
+def test_vmm_fxp_bitexact_vs_numpy_oracle(shape):
+    m, k, n = shape
+    xq = _qact(jax.random.PRNGKey(0), (m, k))
+    wq = _qwgt(jax.random.PRNGKey(1), (k, n), 0.05)
+    got = vmm_fxp_pallas(xq, wq)
+    assert got.dtype == jnp.int16
+    want = vmm_ref.vmm_fxp_np(np.asarray(xq), np.asarray(wq))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_vmm_fxp_multi_kstep_accumulation():
+    """K > tk forces the int32 scratch to persist across grid steps; the
+    single final requantization must match one whole-sum rounding."""
+    xq = _qact(jax.random.PRNGKey(0), (2, 1536))
+    wq = _qwgt(jax.random.PRNGKey(1), (1536, 32), 0.05)
+    got = vmm_fxp_pallas(xq, wq, tk=512)       # 3 accumulation steps
+    want = vmm_ref.vmm_fxp_np(np.asarray(xq), np.asarray(wq))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_maxpool_fxp_bitexact():
+    xq = _qact(jax.random.PRNGKey(0), (2, 8, 8, 7))
+    y, idx = maxpool_fwd_fxp(xq)
+    assert y.dtype == jnp.int16
+    xn = np.asarray(xq)
+    wins = np.stack([xn[:, 0::2, 0::2], xn[:, 0::2, 1::2],
+                     xn[:, 1::2, 0::2], xn[:, 1::2, 1::2]])
+    np.testing.assert_array_equal(np.asarray(y), wins.max(axis=0))
+    # routed-back gradient respects the emitted indices
+    gq = _qact(jax.random.PRNGKey(1), (2, 4, 4, 7))
+    up = unpool_bwd_fxp(idx, gq)
+    idx_np = np.asarray(masks.unpack_crumbs(idx, 7))
+    np.testing.assert_array_equal(np.asarray(up),
+                                  _unpool_np(idx_np, np.asarray(gq)))
+
+
+def test_conv_fxp_requantize_saturates_not_wraps():
+    """Accumulators exceeding the int16 range clip at ±(2^15 - 1) at the
+    requantization — they never wrap.  (The int32 accumulator itself is the
+    FPGA's wide-MAC contract: it must merely FIT the sum, which the Q7.8 x
+    Q1.14 scales guarantee for paper-scale fan-ins; here 3*3*128 taps peak
+    at ~1.2e9 < 2^31.)"""
+    xq = jnp.full((1, 4, 4, 128), 64, jnp.int16)            # 0.25 in Q7.8
+    wq = jnp.full((3, 3, 128, 8), 1 << fxp.WGT_FRAC, jnp.int16)   # 1.0
+    got = np.asarray(conv2d_fxp_pallas(xq, wq))
+    assert got.max() == 2 ** 15 - 1                          # 288 >> clip
+    got_neg = np.asarray(conv2d_fxp_pallas(xq, -wq))
+    assert got_neg.min() == -(2 ** 15 - 1)                   # symmetric rail
+
+
+# ---------------------------------------------------------------------------
+# fused backward kernels: bit-exact vs the composed NumPy oracle
+# ---------------------------------------------------------------------------
+
+# (n, h, w, cin, cout, k, pool)
+CONV_BP_CASES = [
+    (2, 8, 8, 7, 13, 3, True),
+    (1, 16, 16, 32, 64, 3, True),
+    (2, 10, 12, 5, 9, 3, False),
+    (1, 8, 8, 16, 16, 5, False),
+]
+
+
+def _conv_bp_setup(case, method, seeds=None):
+    n, h, w, cin, cout, k, pool = case
+    xq = _qact(jax.random.PRNGKey(0), (n, h, w, cin))
+    wq = _qwgt(jax.random.PRNGKey(1), (k, k, cin, cout))
+    y = conv2d_fxp_pallas(xq, wq)
+    mask4 = None
+    if method != "deconvnet":
+        _, m2 = relu_fwd_pallas(y.reshape(-1, cout))
+        mask4 = m2.reshape(n, h, w, -1)
+    idx = None
+    gshape = (n, h, w, cout)
+    if pool:
+        _, idx = maxpool_fwd_pallas(jnp.maximum(y, 0))
+        gshape = (n, h // 2, w // 2, cout)
+    if seeds is not None:
+        gshape = (seeds,) + gshape
+    g = _qact(jax.random.PRNGKey(2), gshape)
+    return wq, mask4, idx, g
+
+
+def _conv_bp_oracle_np(g, wt, mask4, idx, method, cout):
+    g_np = np.asarray(g)
+    if idx is not None:
+        idx_np = np.asarray(masks.unpack_crumbs(idx, cout))
+        g_np = _unpool_np(idx_np, g_np)
+    m_np = (np.asarray(masks.unpack_mask(mask4, cout))
+            if mask4 is not None else None)
+    g_np = _gate_np(g_np, m_np, method)
+    return conv_ref.conv2d_fxp_np(g_np, np.asarray(wt))
+
+
+@pytest.mark.parametrize("case", CONV_BP_CASES)
+@pytest.mark.parametrize("method", METHODS)
+def test_conv_bwd_fused_fxp_bitexact(case, method):
+    cout = case[4]
+    wq, mask4, idx, g = _conv_bp_setup(case, method)
+    wt = conv_ref.flip_transpose(wq)
+    got = conv2d_bwd_fused_fxp_pallas(g, wt, pool_idx=idx, relu_mask=mask4,
+                                      gate=True, method=method)
+    want = _conv_bp_oracle_np(g, wt, mask4, idx, method, cout)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_conv_bwd_fused_fxp_seed_batched():
+    """The seeds axis shares one stored mask/index load — every seed must
+    equal its own single-seed run bitwise."""
+    case = (1, 8, 8, 7, 13, 3, True)
+    wq, mask4, idx, g = _conv_bp_setup(case, "guided", seeds=3)
+    wt = conv_ref.flip_transpose(wq)
+    batched = conv2d_bwd_fused_fxp_pallas(
+        g, wt, pool_idx=idx, relu_mask=mask4, method="guided")
+    for s in range(3):
+        single = conv2d_bwd_fused_fxp_pallas(
+            g[s], wt, pool_idx=idx, relu_mask=mask4, method="guided")
+        np.testing.assert_array_equal(np.asarray(batched[s]),
+                                      np.asarray(single))
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_vmm_bwd_fused_fxp_bitexact(method):
+    m, k, n = 3, 64, 17
+    gq = _qact(jax.random.PRNGKey(0), (m, n))
+    wq = _qwgt(jax.random.PRNGKey(1), (k, n), 0.05)
+    mask = None
+    if method != "deconvnet":
+        _, mask = relu_fwd_pallas(
+            jax.random.normal(jax.random.PRNGKey(2), (m, n)))
+    got = vmm_bwd_fused_fxp_pallas(gq, wq.T, relu_mask=mask, gate=True,
+                                   method=method)
+    m_np = (np.asarray(masks.unpack_mask(mask, n))
+            if mask is not None else None)
+    gated = _gate_np(np.asarray(gq), m_np, method)
+    want = vmm_ref.vmm_fxp_np(gated, np.asarray(wq.T))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_vmm_bwd_fused_fxp_epilogue_gate():
+    m, k, n = 2, 24, 16
+    gq = _qact(jax.random.PRNGKey(0), (m, n))
+    wq = _qwgt(jax.random.PRNGKey(1), (k, n), 0.1)
+    _, mask = relu_fwd_pallas(jax.random.normal(jax.random.PRNGKey(2), (m, n)))
+    _, omask = relu_fwd_pallas(jax.random.normal(jax.random.PRNGKey(3), (m, k)))
+    got = vmm_bwd_fused_fxp_pallas(gq, wq.T, relu_mask=mask,
+                                   out_relu_mask=omask, method="saliency")
+    gated = _gate_np(np.asarray(gq), np.asarray(masks.unpack_mask(mask, n)),
+                     "saliency")
+    out = vmm_ref.vmm_fxp_np(gated, np.asarray(wq.T))
+    want = _gate_np(out, np.asarray(masks.unpack_mask(omask, k)), "saliency")
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ---------------------------------------------------------------------------
+# jit-vs-eager parity (convention documented in tests/conftest.py)
+# ---------------------------------------------------------------------------
+
+
+def test_conv_fxp_jit_vs_jit_bitwise():
+    """Two separate jits of the same program: bitwise equality required."""
+    xq = _qact(jax.random.PRNGKey(0), (2, 8, 8, 7))
+    wq = _qwgt(jax.random.PRNGKey(1), (3, 3, 7, 13))
+    a = jax.jit(conv2d_fxp_pallas)(xq, wq)
+    b = jax.jit(conv2d_fxp_pallas)(xq, wq)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_conv_fxp_jit_vs_eager_tolerance():
+    """Cross-program comparison: tolerance-based per convention (exact here
+    in practice — integer kernels have no fusion sensitivity)."""
+    xq = _qact(jax.random.PRNGKey(0), (2, 8, 8, 7))
+    wq = _qwgt(jax.random.PRNGKey(1), (3, 3, 7, 13))
+    jitted = np.asarray(jax.jit(conv2d_fxp_pallas)(xq, wq), np.float32)
+    eager = np.asarray(conv2d_fxp_pallas(xq, wq), np.float32)
+    np.testing.assert_allclose(jitted, eager, atol=1.0)
+
+
+def test_vmm_fxp_jit_vs_jit_bitwise():
+    xq = _qact(jax.random.PRNGKey(0), (3, 100))
+    wq = _qwgt(jax.random.PRNGKey(1), (100, 17), 0.05)
+    a = jax.jit(vmm_fxp_pallas)(xq, wq)
+    b = jax.jit(vmm_fxp_pallas)(xq, wq)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_vmm_fxp_jit_vs_eager_tolerance():
+    xq = _qact(jax.random.PRNGKey(0), (3, 100))
+    wq = _qwgt(jax.random.PRNGKey(1), (100, 17), 0.05)
+    jitted = np.asarray(jax.jit(vmm_fxp_pallas)(xq, wq), np.float32)
+    eager = np.asarray(vmm_fxp_pallas(xq, wq), np.float32)
+    np.testing.assert_allclose(jitted, eager, atol=1.0)
+
+
+def test_fused_bp_jit_vs_jit_bitwise():
+    case = (1, 8, 8, 7, 13, 3, True)
+    wq, mask4, idx, g = _conv_bp_setup(case, "saliency")
+    wt = conv_ref.flip_transpose(wq)
+    fn = lambda gg: conv2d_bwd_fused_fxp_pallas(     # noqa: E731
+        gg, wt, pool_idx=idx, relu_mask=mask4, method="saliency")
+    np.testing.assert_array_equal(np.asarray(jax.jit(fn)(g)),
+                                  np.asarray(jax.jit(fn)(g)))
+
+
+# ---------------------------------------------------------------------------
+# structural guarantee: still ONE pallas_call per fused backward step
+# ---------------------------------------------------------------------------
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):
+                total += _count_pallas_calls(v.jaxpr)
+    return total
+
+
+def test_conv_fxp_backward_is_single_pallas_call():
+    case = (1, 8, 8, 16, 24, 3, True)
+    wq, mask4, idx, g = _conv_bp_setup(case, "guided")
+    wt = conv_ref.flip_transpose(wq)
+    jaxpr = jax.make_jaxpr(
+        lambda gg: conv2d_bwd_fused_fxp_pallas(
+            gg, wt, pool_idx=idx, relu_mask=mask4, method="guided"))(g)
+    assert _count_pallas_calls(jaxpr.jaxpr) == 1

@@ -1,11 +1,13 @@
 """1-bit / 2-bit packing — the paper's BRAM mask store (unit + property)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import masks
 
 
+@pytest.mark.slow
 @given(st.integers(1, 200), st.integers(0, 2 ** 31 - 1))
 @settings(max_examples=30, deadline=None)
 def test_pack_mask_roundtrip(n, seed):
@@ -18,6 +20,7 @@ def test_pack_mask_roundtrip(n, seed):
     np.testing.assert_array_equal(np.asarray(out), bits)
 
 
+@pytest.mark.slow
 @given(st.integers(1, 100), st.integers(0, 2 ** 31 - 1))
 @settings(max_examples=30, deadline=None)
 def test_pack_crumbs_roundtrip(n, seed):

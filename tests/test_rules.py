@@ -72,6 +72,7 @@ def test_smooth_exact_residual_matches_autodiff(kind):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 @given(st.integers(0, 2 ** 31 - 1))
 @settings(max_examples=20, deadline=None)
 def test_smooth_int8_residual_bounded_error(seed):

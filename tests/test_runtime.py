@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.runtime import (HealthMonitor, compress_int8, decompress_int8,
@@ -40,6 +41,7 @@ def test_remesh_healthy_keeps_two_pods():
     assert plan.axis_names == ("pod", "data", "model")
 
 
+@pytest.mark.slow
 @given(st.integers(0, 2 ** 31 - 1))
 @settings(max_examples=25, deadline=None)
 def test_int8_roundtrip_error_bounded(seed):

@@ -391,3 +391,81 @@ def test_cold_bp_explain_warms_cache(setup):
     second = srv.serve([Request(uid="w", kind=EXPLAIN, x=x[3],
                                 method="deconvnet")])["w"]
     assert not first.cache_hit and second.cache_hit
+
+
+# ---------------------------------------------------------------------------
+# true int16 fixed-point serving (precision="fxp16")
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup_fxp(setup):
+    params, _, x = setup
+    return params, CNNAdapter(params, CFG, precision="fxp16"), x
+
+
+def test_fxp_predict_explain_hit_skips_forward(setup_fxp):
+    """The quantized path keeps the serving contract: explain-after-predict
+    is a cache hit, and hit == cold bitwise (same two int16 programs)."""
+    _, adapter, x = setup_fxp
+    srv = make_server(adapter)
+    srv.serve([Request(uid="q0", kind=PREDICT, x=x[0])])
+    hit = srv.serve([Request(uid="q0", kind=EXPLAIN, x=x[0],
+                             method="guided")])["q0"]
+    assert hit.cache_hit
+    cold = srv.serve([Request(uid="q1", kind=EXPLAIN, x=x[0],
+                              method="guided")])["q1"]
+    assert not cold.cache_hit
+    np.testing.assert_array_equal(np.asarray(hit.relevance),
+                                  np.asarray(cold.relevance))
+    assert hit.relevance.dtype == jnp.float32      # dequantized at the edge
+
+
+def test_fxp_composite_methods_run_via_manual_engine(setup_fxp):
+    """IG / smoothgrad / input-x-gradient run quantized end-to-end through
+    the registry's manual ``backward`` (no jax.vjp of integers)."""
+    _, adapter, x = setup_fxp
+    srv = make_server(adapter)
+    out = srv.serve([
+        Request(uid="ig", kind=EXPLAIN, x=x[1],
+                method="integrated_gradients"),
+        Request(uid="sg", kind=EXPLAIN, x=x[1], method="smoothgrad",
+                key=jax.random.PRNGKey(7)),
+        Request(uid="ixg", kind=EXPLAIN, x=x[1],
+                method="input_x_gradient"),
+    ])
+    for uid in ("ig", "sg", "ixg"):
+        rel = np.asarray(out[uid].relevance)
+        assert rel.shape == (8, 8, 3) and np.isfinite(rel).all()
+        assert np.abs(rel).sum() > 0
+
+
+def test_fxp_topk_panel_rides_seed_axis(setup_fxp):
+    _, adapter, x = setup_fxp
+    srv = make_server(adapter)
+    srv.serve([Request(uid="t", kind=PREDICT, x=x[2])])
+    resp = srv.serve([Request(uid="t", kind=EXPLAIN, x=x[2],
+                              method="saliency", topk=3)])["t"]
+    assert resp.cache_hit and resp.relevance.shape == (3, 8, 8, 3)
+    assert len(resp.targets) == 3
+
+
+def test_fxp_relevance_tracks_f32_ranks(setup, setup_fxp):
+    """Serving-level fidelity: the quantized saliency map rank-correlates
+    with the float one (the core bar is asserted in test_fidelity.py)."""
+    from repro.core import fidelity
+    _, adapter_f, x = setup
+    _, adapter_q, _ = setup_fxp
+    rf = make_server(adapter_f).serve(
+        [Request(uid="a", kind=EXPLAIN, x=x[0], method="saliency")])["a"]
+    rq = make_server(adapter_q).serve(
+        [Request(uid="a", kind=EXPLAIN, x=x[0], method="saliency")])["a"]
+    hm_f = attribution.heatmap(rf.relevance[None])[0]
+    hm_q = attribution.heatmap(rq.relevance[None])[0]
+    assert fidelity.spearman(np.asarray(hm_f), np.asarray(hm_q)) > 0.8
+
+
+def test_adapter_rejects_unknown_precision(setup):
+    params, _, _ = setup
+    with pytest.raises(ValueError):
+        CNNAdapter(params, CFG, precision="int4")

@@ -1,6 +1,7 @@
 """End-to-end system tests: train -> attribute (the paper's full pipeline),
 checkpoint crash-resume bitwise equality, serving loop."""
 import jax
+import pytest
 import jax.numpy as jnp
 import numpy as np
 
@@ -10,6 +11,8 @@ from repro.data import CifarLikeImages, TokenStream
 from repro.launch import steps as steps_lib
 from repro.launch.train import train_loop
 from repro.models import cnn, transformer as tf
+
+pytestmark = pytest.mark.slow
 from repro.optim import adamw_init, adamw_update
 
 
