@@ -50,15 +50,20 @@ def run():
     # multi-class CNN explanation: K=5 top-k classes from ONE forward.
     # seed-batched = one fused grid launch per layer sharing the stored
     # masks; baseline = vmap of K full backward passes over the same vjp.
+    # Both sides construct through the compile-once engine API.
+    from repro import engine as engine_lib
     from repro.core import attribution
     from repro.models import cnn as cnn_lib
     ccfg = cnn_lib.CNNConfig(in_hw=(16, 16), channels=(8, 8), fc=(32,))
     cparams = cnn_lib.init(jax.random.PRNGKey(2), ccfg)
     xc = jax.random.normal(jax.random.PRNGKey(3), (2, 16, 16, 3))
     targets = jnp.arange(5)
-    fwd, bwd = cnn_lib.seed_batched_attribution(cparams, ccfg, "saliency")
+    eng = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.CNNModel(cparams, ccfg), method="saliency"))
+    # ONE jitted program wrapping the engine pair, mirroring the vmap
+    # baseline's single jit so dispatch overhead doesn't skew the ratio.
     batched = jax.jit(lambda v: attribution.attribute_classes(
-        fwd, v, targets, backward=bwd)[1])
+        eng.backend.forward, v, targets, backward=eng.backend.backward)[1])
     us_k = _time(batched, xc, iters=3)
     vmapped = jax.jit(lambda v: attribution.attribute_classes(
         lambda u: cnn_lib.apply(cparams, u, ccfg, method="saliency",
@@ -69,13 +74,37 @@ def run():
                  f"K=5_seed_batched_vs_vmap={us_v / max(us_k, 1):.2f}x"))
     rows.append(("serve/explain_topk_vmap_us", us_v, "K=5_vmap_baseline"))
 
+    # engine lifecycle: spec -> build (host-side resolution, no compile)
+    # vs first explain (jit compile) vs steady-state explain — the
+    # configure-once claim in numbers.
+    bparams = cnn_lib.init(jax.random.PRNGKey(12), ccfg)
+    bspec = engine_lib.EngineSpec(
+        model=engine_lib.CNNModel(bparams, ccfg), method="guided")
+    t0 = time.perf_counter()
+    beng = engine_lib.build(bspec)
+    build_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    jax.block_until_ready(beng.explain(xc)[1])
+    first_us = (time.perf_counter() - t0) * 1e6
+    steady_us = _time(lambda v: beng.explain(v)[1], xc, iters=5)
+    rows.append(("engine/build_us", build_us, "spec_resolution_only"))
+    rows.append(("engine/first_explain_us", first_us, "includes_jit_compile"))
+    rows.append(("engine/steady_explain_us", steady_us,
+                 f"compile_amortization={first_us / max(steady_us, 1):.0f}x"))
+    rows.append(("engine/rebuild_cached_us",
+                 _time(lambda _: engine_lib.build(bspec), xc, iters=10),
+                 "equal_spec_reuses_engine"))
+
     # batched IG / SmoothGrad: fold the steps/noise axis into the leading
     # batch dimension (ONE FP+BP over [steps*B, ...]) vs the sequential
-    # jax.lax.map baseline — same numbers, one launch per layer.
-    fc = lambda v: cnn_lib.apply(cparams, v, ccfg, method="saliency")
+    # jax.lax.map baseline — same numbers, one launch per layer.  The
+    # engine's composite methods ride its compiled model_fn.
+    ceng = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.CNNModel(cparams, ccfg, use_pallas=False),
+        method="saliency"))
+    fc = ceng.model_fn
     steps, nsg = 8, 8
-    ig_b = jax.jit(lambda v: attribution.integrated_gradients(
-        fc, v, steps=steps)[1])
+    ig_b = jax.jit(lambda v: ceng.ig(v, steps=steps)[1])
     ig_s = jax.jit(lambda v: attribution.integrated_gradients(
         fc, v, steps=steps, batched=False)[1])
     us_igb = _time(ig_b, xc, iters=3)
@@ -85,7 +114,7 @@ def run():
     rows.append(("serve/ig_laxmap_us", us_igs, f"steps={steps}_baseline"))
 
     key = jax.random.PRNGKey(11)
-    sg_b = jax.jit(lambda v: attribution.smoothgrad(fc, v, key, n=nsg)[1])
+    sg_b = jax.jit(lambda v: ceng.smoothgrad(v, key, n=nsg)[1])
     sg_s = jax.jit(lambda v: attribution.smoothgrad(
         fc, v, key, n=nsg, batched=False)[1])
     us_sgb = _time(sg_b, xc, iters=3)

@@ -6,7 +6,6 @@ with packed-mask residuals vs. autodiff activation caching.
 """
 from __future__ import annotations
 
-import time
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +43,6 @@ def empirical_rows():
         ma = compiled.memory_analysis()
         return int(getattr(ma, "temp_size_in_bytes", 0))
 
-    base = temp_bytes("saliency")
     for method in ("saliency", "deconvnet", "guided"):
         rows.append((f"memory/xla_temp/{method}_kb", temp_bytes(method) / 1e3,
                      "compiled_attribution_scratch"))

@@ -14,7 +14,7 @@ def load(paths):
     recs = []
     for p in paths:
         with open(p) as f:
-            recs.extend(json.loads(l) for l in f)
+            recs.extend(json.loads(line) for line in f)
     out = {}
     for r in recs:
         key = (r.get("arch"), r.get("shape"), r.get("mesh"), r.get("kind"),

@@ -9,9 +9,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import attribution, fixedpoint, residuals
+from repro import engine as engine_lib
+from repro.core import fixedpoint, residuals
 from repro.data import CifarLikeImages
 from repro.models import cnn
 from repro.optim import adamw_init, adamw_update, cosine_schedule
@@ -74,14 +74,16 @@ def main():
           f" ({led.reduction():.0f}x; paper: 137x)")
     print(f"\n{'method':12s} {'FP+BP ms':>9s} {'overhead':>9s}  (paper: 50-72%)")
     print(f"{'FP only':12s} {fp_ms:9.2f} {'-':>9s}")
+    # one engine per method: configure -> build once -> time steady-state
     for method in ("saliency", "deconvnet", "guided"):
-        fpbp = jax.jit(lambda v: attribution.attribute(
-            lambda u: cnn.apply(params, u, cfg, method=method,
-                                use_pallas=args.use_pallas), v))
-        jax.block_until_ready(fpbp(x1))
+        eng = engine_lib.build(engine_lib.EngineSpec(
+            model=engine_lib.CNNModel(params, cfg,
+                                      use_pallas=args.use_pallas),
+            method=method))
+        jax.block_until_ready(eng.explain(x1)[1])
         t0 = time.perf_counter()
         for _ in range(50):
-            out = fpbp(x1)
+            out = eng.explain(x1)[1]
         jax.block_until_ready(out)
         ms = (time.perf_counter() - t0) / 50 * 1e3
         print(f"{method:12s} {ms:9.2f} {(ms - fp_ms) / fp_ms * 100:8.0f}%")

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine as engine_lib
 from repro.core import attribution, residuals
 from repro.data import CifarLikeImages
 from repro.models import cnn
@@ -61,9 +62,13 @@ def main():
           f"{residuals.kb(led.analytic_bits('saliency')):.1f} Kb "
           f"({led.reduction():.0f}x)")
 
+    # configure -> build -> explain: one engine per method (compiled once,
+    # build-cached); the lax reference path resolves to the vjp backend.
     for method in ("saliency", "deconvnet", "guided"):
-        f = jax.jit(lambda v: cnn.apply(params, v, cfg, method=method))
-        _, rel = attribution.attribute(f, img)
+        eng = engine_lib.build(engine_lib.EngineSpec(
+            model=engine_lib.CNNModel(params, cfg, use_pallas=False),
+            method=method))
+        _, rel = eng.explain(img)
         hm = np.asarray(attribution.heatmap(rel))[0]
         print(f"\n=== {method} heatmap (paper Fig. 3) ===")
         print(ascii_heatmap(hm))

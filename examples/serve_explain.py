@@ -17,11 +17,10 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
-from repro.launch import steps as steps_lib
+from repro import engine as engine_lib
 from repro.launch.serve import explain, generate
 from repro.models import cnn as cnn_lib, transformer as tf
 from repro.serve import CNNAdapter, ExplanationServer, Request, registry
@@ -30,7 +29,10 @@ from repro.serve import CNNAdapter, ExplanationServer, Request, registry
 def demo_cnn_server():
     cfg = cnn_lib.CNNConfig(in_hw=(16, 16), channels=(8, 8), fc=(32,))
     params = cnn_lib.init(jax.random.PRNGKey(0), cfg)
-    server = ExplanationServer(CNNAdapter(params, cfg), max_batch=4,
+    # configure -> build -> serve: one spec decides method/precision/backend
+    eng = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.CNNModel(params, cfg), method="saliency"))
+    server = ExplanationServer(CNNAdapter.from_engine(eng), max_batch=4,
                                max_delay_s=0.0)
     x = jax.random.normal(jax.random.PRNGKey(1), (2,) + cfg.in_hw
                           + (cfg.in_ch,))
@@ -87,8 +89,10 @@ def demo_vlm():
                                           vcfg.vocab),
              "patches": jax.random.normal(jax.random.PRNGKey(3),
                                           (1, vcfg.n_patches, vcfg.d_model))}
-    step = jax.jit(steps_lib.make_attribute_step(vcfg, "saliency"))
-    _, scores = step(vparams, batch)
+    veng = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.LMModel(params=vparams, cfg=vcfg),
+        method="saliency"))
+    _, scores = veng.explain_tokens(batch)
     patch_scores = np.abs(np.asarray(scores)[0, :vcfg.n_patches])
     print(f"[vlm] patch relevance: top patches "
           f"{np.argsort(-patch_scores)[:4].tolist()} "

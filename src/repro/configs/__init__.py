@@ -6,7 +6,7 @@ assignment) and SMOKE (same family, reduced dims, CPU-runnable).
 from __future__ import annotations
 
 import importlib
-from typing import Dict, Tuple
+from typing import Dict
 
 from repro.models.config import ModelConfig
 

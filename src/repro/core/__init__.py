@@ -12,7 +12,8 @@ from repro.core.rules import METHODS, act, maxpool2x2, relu, silu
 
 __all__ = [
     "attribution", "fidelity", "fixedpoint", "masks", "residuals", "rules",
-    "attribute", "attribute_tokens", "fold_batched_gradients", "heatmap",
-    "input_x_gradient", "integrated_gradients", "smoothgrad", "METHODS",
+    "attribute", "attribute_classes", "attribute_tokens", "contrastive",
+    "fold_batched_gradients", "heatmap", "input_x_gradient",
+    "integrated_gradients", "smoothgrad", "METHODS",
     "act", "maxpool2x2", "relu", "silu",
 ]

@@ -35,7 +35,6 @@ symmetric range (NOT the asymmetric two's-complement [-2^15, 2^15 - 1]);
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,40 @@
+"""repro.engine — the compile-once attribution engine (configure -> build
+-> explain).
+
+The single public API for attribution.  Mirrors the paper's accelerator
+lifecycle: an :class:`EngineSpec` is the design-time configuration
+(model, method, precision, backward backend, target fan-out, batch shape),
+:func:`build` resolves and compiles it exactly once (memoized on spec
+equality), and the returned :class:`Engine` executes with zero per-request
+setup::
+
+    from repro.engine import CNNModel, EngineSpec, TopK, build
+
+    spec = EngineSpec(model=CNNModel(params, cfg), method="guided",
+                      precision="fxp16", targets=TopK(5))
+    eng = build(spec)
+    logits = eng.predict(images)
+    logits, rel = eng.explain(images)            # K-panel via spec.targets
+    logits, ig = eng.ig(images, steps=16)        # composites, same pair
+
+Backends implement :class:`BackwardEngine` (``forward``/``backward`` over a
+leading seeds axis): :class:`ManualSeedBatchedBackward` (fused Pallas pair,
+required and auto-selected for ``precision="fxp16"``) and
+:class:`VjpBackward` (``jax.vjp``-derived, any differentiable model).
+
+The method math itself lives in :mod:`repro.engine.methods`; the legacy
+free functions in :mod:`repro.core.attribution` are deprecation shims over
+it.
+"""
+from repro.engine.backward import (BackwardEngine, ManualSeedBatchedBackward,
+                                   VjpBackward)
+from repro.engine.engine import Engine, build, cache_size, clear_cache
+from repro.engine.spec import (Argmax, CNNModel, EngineSpec, Fixed, FnModel,
+                               LMModel, TopK)
+from repro.engine import methods
+
+__all__ = [
+    "Argmax", "BackwardEngine", "CNNModel", "Engine", "EngineSpec", "Fixed",
+    "FnModel", "LMModel", "ManualSeedBatchedBackward", "TopK", "VjpBackward",
+    "build", "cache_size", "clear_cache", "methods",
+]

@@ -1,0 +1,101 @@
+"""BackwardEngine — the backend protocol behind every attribution method.
+
+The paper's accelerator has exactly two phases: a forward pass that stores
+bit-packed rectifier state, and a seed-driven backward pass replayed over
+that state.  ``BackwardEngine`` is that contract as a Python protocol:
+
+  * ``forward(x) -> (logits, residuals)`` — one inference pass whose side
+    output is whatever the backward phase needs;
+  * ``backward(residuals, seeds) -> rel`` — the BP phase alone; ``seeds``
+    carries a leading S axis ([S, *logits.shape]) so K classes / steps /
+    noise samples replay in ONE launch sharing the stored residuals.
+
+Two implementations:
+
+:class:`ManualSeedBatchedBackward`
+    Wraps an explicit (forward, backward) closure pair — the fused Pallas
+    seed-batched engine of :func:`repro.models.cnn.seed_batched_attribution`
+    in any precision, including the true-int16 ``fxp16`` path that
+    ``jax.vjp`` cannot express.  ``supports_replay`` is True: the residuals
+    are bit-packed masks, cacheable and replayable without the input.
+
+:class:`VjpBackward`
+    Derives the pair from ``jax.vjp`` of a plain ``f(x) -> logits``.  The
+    "residuals" are the input itself — ``backward`` re-runs the forward
+    internally — so it satisfies the same interface for any differentiable
+    model at the cost of no true forward-skipping replay
+    (``supports_replay`` is False).
+
+Both are jitted ONCE at construction; every consumer (Engine methods,
+serve adapters, benchmarks) shares the same compiled callables.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Protocol, Tuple, runtime_checkable
+
+import jax
+
+
+@runtime_checkable
+class BackwardEngine(Protocol):
+    """configure-once forward/backward pair (see module docstring)."""
+
+    #: True when ``residuals`` are self-contained state (bit-packed masks)
+    #: that can be cached and replayed later WITHOUT re-running the forward.
+    supports_replay: bool
+
+    def forward(self, x) -> Tuple[Any, Any]:
+        """One inference pass: ``x -> (logits, residuals)``."""
+        ...
+
+    def backward(self, residuals, seeds):
+        """BP phase: ``seeds [S, *logits.shape] -> relevance [S, *x.shape]``."""
+        ...
+
+
+class ManualSeedBatchedBackward:
+    """The explicit seed-batched pair (fused Pallas kernels, any precision)."""
+
+    supports_replay = True
+
+    def __init__(self, forward_fn: Callable, backward_fn: Callable, *,
+                 jit: bool = True):
+        self.forward = jax.jit(forward_fn) if jit else forward_fn
+        self.backward = jax.jit(backward_fn) if jit else backward_fn
+
+    def __repr__(self):
+        return "<ManualSeedBatchedBackward>"
+
+
+class VjpBackward:
+    """``jax.vjp``-derived pair over a plain ``f(x) -> logits`` callable.
+
+    ``forward`` returns the input as the residual; ``backward`` re-derives
+    the vjp (re-running the forward inside the compiled program) and maps
+    it over the leading seeds axis.  Useful wherever no manual pair exists
+    (generic models, the lax reference CNN path) and as the reference
+    implementation the manual engines are tested against.
+    """
+
+    supports_replay = False
+
+    def __init__(self, f: Callable, *, jit: bool = True):
+        self.f = f
+
+        def fwd(x):
+            return f(x), x
+
+        def bwd(x, seeds):
+            _, vjp_fn = jax.vjp(f, x)
+
+            def back(seed):
+                (rel,) = vjp_fn(seed)
+                return rel
+
+            return jax.vmap(back)(seeds)
+
+        self.forward = jax.jit(fwd) if jit else fwd
+        self.backward = jax.jit(bwd) if jit else bwd
+
+    def __repr__(self):
+        return f"<VjpBackward f={self.f!r}>"

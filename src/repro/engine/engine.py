@@ -1,0 +1,352 @@
+"""The compile-once attribution engine: configure -> build -> explain.
+
+:func:`build` turns an :class:`~repro.engine.spec.EngineSpec` into an
+:class:`Engine` exactly once — backend resolution (manual seed-batched pair
+vs ``jax.vjp``), precision routing, and jit of the forward/backward pair all
+happen here, never at a call site — and memoizes on spec equality: two
+``build()`` calls with equal specs return the SAME engine (shared compiled
+callables); changing any spec field builds (and compiles) afresh.
+
+Steady state, every request is pure execution::
+
+    eng = build(EngineSpec(model=CNNModel(params, cfg), method="guided",
+                           precision="fxp16", targets=TopK(5)))
+    logits = eng.predict(x)                     # forward only
+    logits, rel = eng.explain(x)                # FP + seed-batched BP
+    logits, rel, res = eng.predict_then_explain(x)   # ...keeping residuals
+    rel2 = eng.replay(res, seeds)               # BP phase alone (§III.F)
+    logits, ig = eng.ig(x, steps=16)            # composites ride the pair
+
+``fxp16`` needs no ``backward=`` hand-threading anywhere: the spec resolves
+to the manual int16 pair automatically (integers have no ``jax.vjp``).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import methods
+from repro.engine.backward import (BackwardEngine, ManualSeedBatchedBackward,
+                                   VjpBackward)
+from repro.engine.spec import EngineSpec, Fixed, TopK
+
+
+class Engine:
+    """A built attribution engine — all knobs resolved, all programs jitted.
+
+    Construct via :func:`build` (direct construction skips the cache).
+    """
+
+    def __init__(self, spec: EngineSpec):
+        self.spec = spec
+        model = spec.model
+        if hasattr(model, "token_step"):
+            # LM token-attribution engine: one jitted FP+BP step program.
+            self._token_step = jax.jit(model.token_step(spec.method))
+            self._backend: Optional[BackwardEngine] = None
+            self._model_fn = None
+            return
+        self._token_step = None
+        self._fused_explain: Dict[Tuple[bool, Optional[int]], Any] = {}
+        kind = spec.resolve_backward()
+        if kind == "seed_batched":
+            if not getattr(model, "has_pair", False):
+                raise ValueError(
+                    f"model {model!r} exposes no seed-batched pair; "
+                    f"use backward='vjp'")
+            self._backend = ManualSeedBatchedBackward(
+                *model.pair(spec.method, spec.precision))
+        else:
+            self._backend = VjpBackward(
+                model.logits_fn(spec.method, spec.precision))
+        # Rule-bound logits program: shared by predict, the composite
+        # methods, and registry explainers.  Under fxp16 this IS the pair
+        # forward (pair-returning) — the manual backward is mandatory there.
+        if spec.precision == "fxp16":
+            self._model_fn = self._backend.forward
+        else:
+            self._model_fn = jax.jit(
+                model.logits_fn(spec.method, spec.precision))
+
+    # -- resolved surfaces ---------------------------------------------------
+
+    @property
+    def backend(self) -> BackwardEngine:
+        """The resolved :class:`BackwardEngine` (manual pair or vjp)."""
+        return self._backend
+
+    @property
+    def supports_replay(self) -> bool:
+        return self._backend is not None and self._backend.supports_replay
+
+    @property
+    def model_fn(self):
+        """Rule-bound ``f`` for registry explainers / direct method calls.
+
+        Float precisions: ``f(x) -> logits`` (differentiable).  ``fxp16``:
+        the pair forward ``f(x) -> (logits, residuals)`` — combine with
+        :attr:`composite_backward` (there is no integer ``jax.vjp``).
+        """
+        return self._model_fn
+
+    @property
+    def composite_backward(self):
+        """Manual BP engine for the composite/free-function ``backward=``
+        knob, or None on float paths where ``jax.vjp`` through
+        :attr:`model_fn` is the (equivalent, program-shared) engine."""
+        if self.spec.precision == "fxp16":
+            return self._backend.backward
+        return None
+
+    # -- the two phases ------------------------------------------------------
+
+    def predict(self, x):
+        """Forward only: ``x -> logits`` (no residual work on float paths)."""
+        self._require_array_engine("predict")
+        x, live = self._pad(x)
+        logits = self._model_fn(x)
+        if self.spec.precision == "fxp16":
+            logits = logits[0]
+        return self._unpad(logits, live)
+
+    def forward(self, x):
+        """Residual-returning forward: ``x -> (logits, residuals)``.
+
+        The residuals are whatever :meth:`replay` needs — bit-packed masks
+        on the manual pair (cacheable, §III.F), the input itself on vjp.
+        Unpadded/unsliced: this is the serving hot path; batching discipline
+        belongs to the caller (see :mod:`repro.serve.batcher`).
+        """
+        self._require_array_engine("forward")
+        return self._backend.forward(x)
+
+    def replay(self, residuals, seeds):
+        """BP phase alone: ``seeds [S, B, C] -> relevance [S, B, ...]`` over
+        stored residuals — the forward-skipping explain (§III.F)."""
+        self._require_array_engine("replay")
+        return self._backend.backward(residuals, seeds)
+
+    # -- explain -------------------------------------------------------------
+
+    def explain(self, x, *, target=None, topk: Optional[int] = None):
+        """One FP + one seed-batched BP: ``-> (logits, relevance)``.
+
+        Fan-out defaults to ``spec.targets``; ``target``/``topk`` override
+        per call.  Scalar fan-out returns ``rel [B, ...]``; top-K returns a
+        ``rel [K, B, ...]`` panel (K seeds, one launch, masks shared).
+
+        On the manual pair this is forward + replay (two programs, the same
+        two the serving cache uses, so hit == cold by construction); on the
+        vjp backend it compiles ONE fused FP+BP program so the forward is
+        never run twice.
+        """
+        self._require_array_engine("explain")
+        if self.supports_replay:
+            logits, rel, _ = self.predict_then_explain(x, target=target,
+                                                       topk=topk)
+            return logits, rel
+        target, topk = self._fanout(target, topk)
+        x, live = self._pad(x)
+        target = self._pad_target(target, live)
+        run = self._fused(target is not None, topk)
+        logits, rel = run(x, target) if target is not None else run(x)
+        return (self._unpad(logits, live),
+                self._unpad(rel, live, axis=0 if topk is None else 1))
+
+    def predict_then_explain(self, x, *, target=None,
+                             topk: Optional[int] = None):
+        """The explicit two-phase form: ``-> (logits, relevance, residuals)``.
+
+        One forward; the returned residuals can :meth:`replay` further
+        targets later without another forward (the serving cache's
+        contract).  On the vjp backend the "residuals" are the padded input
+        and replay re-runs the forward inside the compiled program.
+        """
+        self._require_array_engine("predict_then_explain")
+        target, topk = self._fanout(target, topk)
+        x, live = self._pad(x)
+        target = self._pad_target(target, live)
+        logits, residuals = self._backend.forward(x)
+        seeds, squeeze = self._seeds(logits, target, topk)
+        rel = self._backend.backward(residuals, seeds)
+        rel = rel[0] if squeeze else rel
+        return (self._unpad(logits, live),
+                self._unpad(rel, live, axis=0 if squeeze else 1),
+                residuals)
+
+    # -- composite methods riding the same compiled pair ---------------------
+
+    def ig(self, x, *, steps: int = 16, baseline=None, target=None,
+           batched: bool = True):
+        """Integrated gradients (steps axis folded into the batch dim)."""
+        return methods.integrated_gradients(
+            self._model_fn, x, steps=steps, baseline=baseline, target=target,
+            batched=batched, backward=self.composite_backward)
+
+    def smoothgrad(self, x, key, *, n: int = 8, sigma: float = 0.1,
+                   target=None, batched: bool = True):
+        """SmoothGrad (noise axis folded into the batch dim)."""
+        return methods.smoothgrad(
+            self._model_fn, x, key, n=n, sigma=sigma, target=target,
+            batched=batched, backward=self.composite_backward)
+
+    def input_x_gradient(self, x, *, target=None):
+        """Gradient . input refinement."""
+        return methods.input_x_gradient(
+            self._model_fn, x, target=target,
+            backward=self.composite_backward)
+
+    def contrastive(self, x, target_a, target_b):
+        """Why A rather than B — one difference-seeded BP pass."""
+        return methods.contrastive(
+            self._model_fn, x, target_a, target_b,
+            backward=self.composite_backward)
+
+    def attribute_classes(self, x, targets):
+        """K explicit classes from one forward (seed-batched when manual)."""
+        if self.supports_replay:
+            return methods.attribute_classes(self._backend.forward, x,
+                                             targets,
+                                             backward=self._backend.backward)
+        return methods.attribute_classes(self._model_fn, x, targets)
+
+    # -- LM token attribution ------------------------------------------------
+
+    def explain_tokens(self, batch):
+        """LM engines: ``batch -> (last-position logits [B, V], scores
+        [B, S])`` — per-prompt-position relevance of the next-token
+        prediction (the paper's heatmap over tokens)."""
+        if self._token_step is None:
+            raise ValueError(
+                f"{type(self.spec.model).__name__} engines explain arrays; "
+                f"explain_tokens needs an LMModel spec")
+        return self._token_step(batch)
+
+    # -- internals -----------------------------------------------------------
+
+    def _require_array_engine(self, op: str):
+        if self._token_step is not None:
+            raise ValueError(f"{op}() is not available on LM token engines; "
+                             f"use explain_tokens(batch)")
+
+    def _fanout(self, target, topk) -> Tuple[Any, Optional[int]]:
+        """Apply ``spec.targets`` defaults to per-call overrides."""
+        if topk is None and target is None:
+            tspec = self.spec.targets
+            if isinstance(tspec, TopK):
+                topk = tspec.k
+            elif isinstance(tspec, Fixed):
+                target = tspec.target
+        return target, topk
+
+    def _fused(self, with_target: bool, topk: Optional[int]):
+        """One-program FP+BP for non-replay (vjp) backends, cached per
+        fan-out shape — the forward runs exactly once per explain."""
+        key = (with_target, topk)
+        if key not in self._fused_explain:
+            f = self._model_fn
+
+            def run(x, target=None):
+                logits, vjp_fn = jax.vjp(f, x)
+                seeds, squeeze = self._seeds(logits, target, topk)
+                if squeeze:
+                    (rel,) = vjp_fn(seeds[0])
+                else:
+                    rel = jax.vmap(lambda s: vjp_fn(s)[0])(seeds)
+                return logits, rel
+
+            self._fused_explain[key] = jax.jit(run)
+        return self._fused_explain[key]
+
+    def _seeds(self, logits, target, topk) -> Tuple[jnp.ndarray, bool]:
+        """Fan-out (already spec-resolved) to seeds [S, B, C]; True =
+        squeeze the S=1 axis after the backward."""
+        nc = logits.shape[-1]
+        if topk is not None:
+            _, idx = jax.lax.top_k(logits, topk)           # [B, K]
+            return jax.nn.one_hot(idx.T, nc, dtype=logits.dtype), False
+        if target is None:
+            target = jnp.argmax(logits, axis=-1)
+        target = jnp.broadcast_to(jnp.asarray(target), logits.shape[:-1])
+        return jax.nn.one_hot(target, nc, dtype=logits.dtype)[None], True
+
+    def _pad(self, x):
+        """Pad the leading batch dim up to ``spec.batch`` (row-0 repeats)."""
+        b = self.spec.batch
+        if b is None:
+            return x, None
+        n = jax.tree_util.tree_leaves(x)[0].shape[0]
+        if n > b:
+            raise ValueError(f"batch {n} exceeds spec.batch={b}")
+        if n == b:
+            return x, n
+        return jax.tree.map(
+            lambda v: jnp.concatenate(
+                [v, jnp.broadcast_to(v[:1], (b - n,) + v.shape[1:])]), x), n
+
+    def _pad_target(self, target, live):
+        """Pad a per-example [live] target array alongside the padded batch
+        (padding rows explain class 0 and are sliced off with the batch)."""
+        if live is None or target is None:
+            return target
+        t = jnp.asarray(target)
+        if t.ndim == 0 or t.shape[0] != live or live == self.spec.batch:
+            return t
+        pad = jnp.zeros((self.spec.batch - live,) + t.shape[1:], t.dtype)
+        return jnp.concatenate([t, pad])
+
+    @staticmethod
+    def _unpad(out, live, axis: int = 0):
+        if live is None:
+            return out
+        return jax.tree.map(
+            lambda v: jax.lax.slice_in_dim(v, 0, live, axis=axis), out)
+
+    def __repr__(self):
+        return f"<Engine {self.spec!r}>"
+
+
+# ---------------------------------------------------------------------------
+# the build cache: equal specs share one engine (and its compiled programs)
+# ---------------------------------------------------------------------------
+
+_BUILD_CACHE: "OrderedDict[EngineSpec, Engine]" = OrderedDict()
+
+#: LRU bound on memoized engines.  Specs hold strong references to their
+#: params trees, so an unbounded cache would pin every params object a
+#: long-lived process ever built (e.g. periodic weight refreshes); evicted
+#: engines keep working for whoever still holds them — only the sharing via
+#: ``build()`` lapses.
+MAX_CACHED_ENGINES = 64
+
+
+def build(spec: EngineSpec) -> Engine:
+    """Resolve + compile an engine for ``spec``, memoized on spec equality.
+
+    Model handles hash by params identity (see :mod:`repro.engine.spec`),
+    so rebuilding with the same params/config/knobs is free and shares the
+    jitted forward/backward pair across every consumer (serve adapters,
+    benchmarks, examples); changing ANY field — method, precision, backward,
+    targets, batch, model — produces a fresh engine.  The memo is an LRU
+    bounded at ``MAX_CACHED_ENGINES``.
+    """
+    eng = _BUILD_CACHE.get(spec)
+    if eng is None:
+        _BUILD_CACHE[spec] = eng = Engine(spec)
+        while len(_BUILD_CACHE) > MAX_CACHED_ENGINES:
+            _BUILD_CACHE.popitem(last=False)
+    else:
+        _BUILD_CACHE.move_to_end(spec)
+    return eng
+
+
+def clear_cache() -> None:
+    """Drop every memoized engine (tests / params turnover)."""
+    _BUILD_CACHE.clear()
+
+
+def cache_size() -> int:
+    return len(_BUILD_CACHE)

@@ -1,0 +1,292 @@
+"""Attribution method math — the paper's FP+BP dataflow (§II, Fig. 2).
+
+This module is the SINGLE implementation of every attribution method; the
+legacy free functions in :mod:`repro.core.attribution` are thin deprecation
+shims over it, and :class:`repro.engine.Engine` binds these functions to a
+compiled forward/backward pair (see :mod:`repro.engine.backward`).
+
+Attribution = one forward pass (inference) + one backward pass that carries
+*activation* gradients from the chosen output logit back to the input
+features.  Crucially there is NO weight-update phase, so we differentiate
+w.r.t. the *inputs only*: ``jax.vjp(f, x)`` with parameters closed over.  XLA
+dead-code-eliminates everything that exists solely for weight gradients, and
+the custom rules in :mod:`repro.core.rules` pin the remaining residuals to
+bit-packed masks / int8 values — together these reproduce the paper's
+memory-footprint claim (3.4 Mb -> 24.7 Kb on the Table III CNN).
+
+Every entry point takes an optional ``backward=``: the MANUAL seed-batched
+engine (``f(x)`` returns ``(logits, residuals)`` and
+``backward(residuals, seeds)`` replays the BP phase over the stored masks,
+seeds carrying a leading S axis).  This is how the true-int16 ``fxp16``
+path runs — integers have no ``jax.vjp`` — and how a serving cache replays
+explanations without re-running the forward.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+METHODS = ("saliency", "deconvnet", "guided")
+
+
+def output_seed(logits: jnp.ndarray, target: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """One-hot cotangent seed at the explained logit.
+
+    ``logits``: [..., C].  ``target``: int array broadcastable to
+    ``logits.shape[:-1]``, or None to explain the argmax class (the paper's
+    "maximum output value at the last layer", §III.F).
+    """
+    if target is None:
+        target = jnp.argmax(logits, axis=-1)
+    return jax.nn.one_hot(target, logits.shape[-1], dtype=logits.dtype)
+
+
+def attribute(f: Callable, x, *, target=None, return_logits: bool = True,
+              backward=None):
+    """Relevance of every element of ``x`` for the target logit of ``f(x)``.
+
+    ``f`` must already have the attribution method bound (models take a static
+    ``method=`` argument which selects the rules of :mod:`repro.core.rules`).
+    ``x`` may be a pytree (e.g. {"patches": ..., "tokens_embed": ...}) — each
+    leaf gets a relevance tensor of its own shape, the VLM/audio analogue of
+    the paper's pixel heatmap.
+
+    ``backward`` selects the MANUAL engine instead of ``jax.vjp``: ``f(x)``
+    must return ``(logits, residuals)`` and ``backward(residuals, seeds)``
+    (seeds carrying a leading S axis) runs the BP phase over the stored
+    masks — e.g. the pair from ``cnn.seed_batched_attribution``, including
+    its ``precision="fxp16"`` true-int16 variant, which autodiff cannot
+    express (integers have no tangents).  Composite methods below thread
+    the same knob, so every explainer can run quantized end-to-end.
+    """
+    if backward is not None:
+        logits, residuals = f(x)
+        seed = output_seed(logits, target)
+        rel = backward(residuals, seed[None])[0]
+        if return_logits:
+            return logits, rel
+        return rel
+    logits, vjp_fn = jax.vjp(f, x)
+    seed = output_seed(logits, target)
+    (rel,) = vjp_fn(seed)
+    if return_logits:
+        return logits, rel
+    return rel
+
+
+def attribute_tokens(f: Callable, embeds: jnp.ndarray, *, position=-1,
+                     target=None, backward=None):
+    """LM attribution: relevance of input embeddings for one output token.
+
+    ``f(embeds) -> logits [B, S, V]``.  Explains the logit of ``target`` (or
+    the argmax) at ``position``.  Returns (logits, relevance [B, S, D],
+    per-token scores [B, S]) where scores = sum_d rel * embed  (the
+    "input x gradient" reduction, the standard way to visualize the paper's
+    heatmap over tokens).
+
+    ``backward`` selects the manual engine (see :func:`attribute`): ``f``
+    returns ``(logits, residuals)`` and the one-hot seed at ``position``
+    replays through ``backward(residuals, seeds)`` — required under
+    ``precision="fxp16"`` where the token stack has no ``jax.vjp``.
+    """
+    if backward is not None:
+        logits, residuals = f(embeds)
+    else:
+        logits, vjp_fn = jax.vjp(f, embeds)
+    at = logits[:, position, :]
+    if target is None:
+        target = jnp.argmax(at, axis=-1)
+    seed_at = jax.nn.one_hot(target, logits.shape[-1], dtype=logits.dtype)
+    seed = jnp.zeros_like(logits).at[:, position, :].set(seed_at)
+    if backward is not None:
+        rel = backward(residuals, seed[None])[0]
+    else:
+        (rel,) = vjp_fn(seed)
+    scores = jnp.sum(rel.astype(jnp.float32) * embeds.astype(jnp.float32), axis=-1)
+    return logits, rel, scores
+
+
+def attribute_classes(f: Callable, x, targets, *, backward=None):
+    """Relevance maps for SEVERAL classes from ONE forward pass.
+
+    The paper's FPGA stores the ReLU/pool masks once per input; re-running
+    only the BP phase per output class amortizes the FP cost across
+    explanations.  ``targets``: int array [K]; returns (logits, rel [K, ...]).
+
+    Two backends:
+
+    * default — one ``jax.vjp`` (one forward, residuals held), then a vmap
+      over cotangent seeds: K backward passes, zero extra forwards.
+    * ``backward`` given (e.g. from ``cnn.seed_batched_attribution``) —
+      ``f(x)`` must return ``(logits, residuals)`` and
+      ``backward(residuals, seeds)`` consumes ALL K one-hot seeds at once
+      with a leading seeds axis folded into the kernels' sublane dimension:
+      one grid launch per layer, every stored mask loaded once and shared
+      across the K explanations (the paper's mask-reuse amortization).
+    """
+    if backward is not None:
+        logits, residuals = f(x)
+        seeds = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+        seeds = jnp.broadcast_to(seeds[:, None, :],
+                                 (seeds.shape[0],) + logits.shape)
+        return logits, backward(residuals, seeds)
+
+    logits, vjp_fn = jax.vjp(f, x)
+    seeds = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    seeds = jnp.broadcast_to(seeds[:, None, :],
+                             (seeds.shape[0],) + logits.shape)
+
+    def back(seed):
+        (rel,) = vjp_fn(seed)
+        return rel
+
+    return logits, jax.vmap(back)(seeds)
+
+
+def contrastive(f: Callable, x, target_a, target_b, *, backward=None):
+    """Why class A rather than class B? — seed with e_A - e_B.
+
+    Gradient-backprop methods are linear in the seed, so the contrastive
+    map is a single BP pass (Gu et al. / Selvaraju-style contrast).
+
+    ``backward`` selects the manual engine (see :func:`attribute`): the
+    difference seed replays through ``backward(residuals, seeds)`` in one
+    seed-batched launch — this is what makes contrastive explanations work
+    under ``precision="fxp16"``, where ``jax.vjp`` does not exist.
+    """
+    if backward is not None:
+        logits, residuals = f(x)
+    else:
+        logits, vjp_fn = jax.vjp(f, x)
+    seed = (jax.nn.one_hot(target_a, logits.shape[-1], dtype=logits.dtype)
+            - jax.nn.one_hot(target_b, logits.shape[-1], dtype=logits.dtype))
+    if backward is not None:
+        rel = backward(residuals, seed[None])[0]
+    else:
+        (rel,) = vjp_fn(seed)
+    return logits, rel
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper attribution methods built on the same FP+BP engine
+# ---------------------------------------------------------------------------
+
+def input_x_gradient(f: Callable, x, *, target=None, backward=None):
+    """Gradient . input — sign-aware refinement of the saliency map."""
+    logits, rel = attribute(f, x, target=target, backward=backward)
+    return logits, jax.tree.map(lambda r, v: r * v, rel, x)
+
+
+def fold_batched_gradients(f: Callable, xs, target, batch_shape,
+                           backward=None):
+    """Saliency over a stack of S perturbed inputs in ONE FP+BP.
+
+    ``xs``: pytree with leaves ``[S, B, ...]`` (S perturbations of a [B, ...]
+    input).  The S axis folds into the leading batch dimension — a single
+    ``jax.vjp`` over ``[S*B, ...]`` — so the whole stack shares one kernel
+    launch per layer instead of S sequential passes (the serving-path
+    amortization the paper's tiled dataflow rewards: bigger sublane fill,
+    one weight stream).  ``target`` must broadcast to ``batch_shape``
+    (= logits.shape[:-1] of a single un-stacked call).  Returns grads with
+    the S axis restored: leaves ``[S, B, ...]``.
+    """
+    leaves = jax.tree.leaves(xs)
+    s = leaves[0].shape[0]
+    folded = jax.tree.map(
+        lambda v: v.reshape((s * v.shape[1],) + v.shape[2:]), xs)
+    tgt = jnp.broadcast_to(target, batch_shape)
+    tgt = jnp.broadcast_to(tgt[None], (s,) + batch_shape)
+    tgt = tgt.reshape((s * batch_shape[0],) + batch_shape[1:])
+    grads = attribute(f, folded, target=tgt, return_logits=False,
+                      backward=backward)
+    return jax.tree.map(
+        lambda g: g.reshape((s, g.shape[0] // s) + g.shape[1:]), grads)
+
+
+def _stacked_gradients(f: Callable, xs, target, batch_shape, batched: bool,
+                       backward=None):
+    """Dispatch a perturbation stack to the folded or sequential backend."""
+    if batched:
+        return fold_batched_gradients(f, xs, target, batch_shape, backward)
+    return jax.lax.map(
+        lambda xa: attribute(f, xa, target=target, return_logits=False,
+                             backward=backward), xs)
+
+
+def _probe_logits(f: Callable, x, backward):
+    """One plain forward — under the manual engine ``f`` returns a pair."""
+    out = f(x)
+    return out[0] if backward is not None else out
+
+
+def integrated_gradients(f: Callable, x, *, baseline=None, steps: int = 16,
+                         target=None, batched: bool = True, backward=None):
+    """Sundararajan et al. 2017 — Riemann sum of saliency along a path.
+
+    Each step is one paper-style FP+BP.  ``batched`` (default) folds the
+    ``steps`` axis into the leading batch dimension — one FP+BP over
+    ``[steps*B, ...]`` — instead of a sequential ``jax.lax.map``; results
+    are identical, the folded form just fills the kernels' sublane/batch
+    grid (see ``benchmarks/attribution_serving.py`` for the speedup).
+    """
+    if baseline is None:
+        baseline = jax.tree.map(jnp.zeros_like, x)
+    logits = _probe_logits(f, x, backward)
+    if target is None:
+        target = jnp.argmax(logits, axis=-1)
+
+    alphas = (jnp.arange(steps, dtype=jnp.float32) + 0.5) / steps
+    xs = jax.tree.map(
+        lambda b, v: (b + alphas.reshape((steps,) + (1,) * v.ndim)
+                      * (v - b)).astype(v.dtype), baseline, x)
+    grads = _stacked_gradients(f, xs, target, logits.shape[:-1], batched,
+                               backward)
+    avg = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+    return logits, jax.tree.map(lambda a, v, b: a * (v - b), avg, x, baseline)
+
+
+def smoothgrad(f: Callable, x, key, *, n: int = 8, sigma: float = 0.1,
+               target=None, batched: bool = True, backward=None):
+    """Smilkov et al. 2017 — average saliency over Gaussian-perturbed inputs.
+
+    ``batched`` (default) folds the ``n`` noise samples into the leading
+    batch dimension (one FP+BP over ``[n*B, ...]``) instead of a sequential
+    ``jax.lax.map``; the noise draw is identical either way.
+    """
+    logits = _probe_logits(f, x, backward)
+    if target is None:
+        target = jnp.argmax(logits, axis=-1)
+
+    def noisy(k):
+        return jax.tree.map(
+            lambda v: v + sigma * jax.random.normal(k, v.shape, v.dtype), x)
+
+    xs = jax.vmap(noisy)(jax.random.split(key, n))
+    grads = _stacked_gradients(f, xs, target, logits.shape[:-1], batched,
+                               backward)
+    return logits, jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+
+
+def _heatmap_leaf(rel: jnp.ndarray, absolute: bool) -> jnp.ndarray:
+    r = jnp.abs(rel) if absolute else rel
+    if r.ndim >= 3:           # NHWC -> NHW
+        r = jnp.sum(r, axis=-1)
+    lo = jnp.min(r, axis=tuple(range(1, r.ndim)), keepdims=True)
+    hi = jnp.max(r, axis=tuple(range(1, r.ndim)), keepdims=True)
+    return (r - lo) / jnp.maximum(hi - lo, 1e-12)
+
+
+def heatmap(rel, *, absolute: bool = True):
+    """Collapse relevance tensors to [H, W] (or [S]) heatmaps in [0, 1].
+
+    ``rel`` may be a single array OR a pytree of relevance tensors (what
+    :func:`attribute` returns for pytree inputs, e.g. a VLM's
+    ``{"patches": ..., "tokens_embed": ...}``) — each leaf is normalized
+    independently into its own heatmap, mirroring the per-leaf relevance
+    contract.
+    """
+    if hasattr(rel, "ndim"):
+        return _heatmap_leaf(rel, absolute)
+    return jax.tree.map(lambda r: _heatmap_leaf(r, absolute), rel)

@@ -171,7 +171,6 @@ def conv2d_bwd_fused_pallas(
     k, _, cw, cout = wt.shape
     has_pool = pool_idx is not None
     h, w_sp = (2 * hg, 2 * wg) if has_pool else (hg, wg)
-    p = (k - 1) // 2
 
     cp = -(-c // 8) * 8                      # contraction channels (fwd Cout)
     tco, cout_p = _cout_tiling(cout, co_tile)

@@ -8,7 +8,6 @@ is the serving/prefill hot-path).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.ssm_scan import ref
 from repro.kernels.ssm_scan.ssm_scan import selective_scan_pallas

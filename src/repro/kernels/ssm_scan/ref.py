@@ -14,7 +14,6 @@ import jax.numpy as jnp
 
 def selective_scan(dt, x, bmat, cmat, a, h0):
     b, s, d = x.shape
-    n = a.shape[1]
     h = h0.astype(jnp.float32)
     ys = []
     dt = dt.astype(jnp.float32)

@@ -38,8 +38,6 @@ def main():
 
     cfg = cnn.CNNConfig()
     mesh = make_production_mesh(multi_pod=args.multi_pod)
-    n_chips = mesh.devices.size
-    bd = ("pod", "data") if args.multi_pod else ("data",)
     # batch-parallel over EVERY axis: the CNN is tiny, so the whole model
     # replicates and the batch shards 256/512 ways (the paper's edge unit,
     # fleet-parallel)

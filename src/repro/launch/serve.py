@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
+from repro import engine as engine_lib
 from repro.launch import steps as steps_lib
 from repro.models import cnn as cnn_lib, transformer as tf
 from repro.serve import (CNNAdapter, ExplanationServer, Request, registry)
@@ -44,9 +45,14 @@ def generate(cfg, params, prompt_tokens, *, max_new: int = 16):
 
 
 def explain(cfg, params, prompt_tokens, *, method: str = "saliency"):
-    """Per-prompt-token relevance for the model's next-token prediction."""
-    step = jax.jit(steps_lib.make_attribute_step(cfg, method))
-    logits, scores = step(params, {"tokens": prompt_tokens})
+    """Per-prompt-token relevance for the model's next-token prediction.
+
+    Built once through the engine (build-cached: repeated calls for the
+    same params/method reuse the compiled FP+BP token step).
+    """
+    eng = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.LMModel(params, cfg), method=method))
+    logits, scores = eng.explain_tokens({"tokens": prompt_tokens})
     return logits, scores
 
 
@@ -71,8 +77,12 @@ def run_lm(args) -> None:
 def run_cnn(args) -> None:
     cfg = cnn_lib.CNNConfig()
     params = cnn_lib.init(jax.random.PRNGKey(0), cfg)
-    server = ExplanationServer(CNNAdapter(params, cfg,
-                                          precision=args.precision),
+    # configure-once: the spec decides precision x store-rules x backend;
+    # the server/adapter only ever execute the built engine.
+    eng = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.CNNModel(params, cfg), method="saliency",
+        precision=args.precision))
+    server = ExplanationServer(CNNAdapter.from_engine(eng),
                                max_batch=args.batch,
                                max_delay_s=args.max_delay_ms / 1e3)
     n = args.requests

@@ -10,8 +10,7 @@ pod scale.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, NamedTuple, Optional
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,6 @@ from repro.dist.sharding import physical_spec
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_schedule
-from repro.launch import shapes as shape_lib
 
 _KEEP_F32 = ("A_log", "dt_bias", "D")   # SSM dynamics: stay f32 in compute
 

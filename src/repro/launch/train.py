@@ -16,7 +16,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 import repro.configs as configs
 from repro.checkpoint import CheckpointManager

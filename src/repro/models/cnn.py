@@ -26,7 +26,7 @@ Layout is NHWC / HWIO (TPU-native); the FPGA's CHW is a host-side transpose.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 from typing import Optional, Tuple
 
@@ -458,52 +458,43 @@ def backward_seeds(params, residuals, seeds, cfg: CNNConfig, method: str,
 
 def seed_batched_attribution(params, cfg: CNNConfig, method: str,
                              precision: str = "f32"):
-    """(forward, backward) pair for ``attribution.attribute_classes``.
+    """DEPRECATED shim: the eager seed-batched (forward, backward) pair.
 
+    New code should configure an engine instead — the pair, backend
+    selection, and jit now live behind ``repro.engine``::
+
+        eng = repro.engine.build(repro.engine.EngineSpec(
+            model=repro.engine.CNNModel(params, cfg), method=method,
+            precision=precision))
+
+    This shim returns the engine's RAW (unjitted) pair with the legacy
+    contract (``feat_shape`` carried inside the residual dict):
     ``forward(x) -> (logits, residuals)``; ``backward(residuals, seeds)``
-    runs the whole multi-class BP as seed-batched fused kernels.
-
-    With ``precision="fxp16"`` both halves run the true int16 kernels —
-    this pair IS the quantized engine: pass it to
-    ``attribution.attribute(..., backward=...)`` / ``attribute_classes`` /
-    the serve registry and every explainer runs quantized end-to-end
-    without touching ``jax.vjp`` (integers cannot be autodiffed).
+    runs the whole multi-class BP as seed-batched fused kernels.  With
+    ``precision="fxp16"`` both halves run the true int16 kernels — pass the
+    pair to ``attribution.attribute(..., backward=...)`` and every
+    explainer runs quantized end-to-end without touching ``jax.vjp``.
     """
+    from repro.engine.spec import CNNModel
     if precision not in PRECISIONS:
         raise ValueError(f"precision={precision!r} not in {PRECISIONS}")
-
-    def forward(x):
-        return forward_with_residuals(params, x, cfg, method, precision)
-
-    def backward(residuals, seeds):
-        return backward_seeds(params, residuals, seeds, cfg, method,
-                              precision)
-
-    return forward, backward
+    return CNNModel(params, cfg).pair(method, precision, jittable=False)
 
 
 def seed_batched_attribution_jittable(params, cfg: CNNConfig, method: str,
                                       precision: str = "f32"):
-    """:func:`seed_batched_attribution` in jit-safe form.
+    """DEPRECATED shim: :func:`seed_batched_attribution` in jit-safe form.
 
     ``forward_with_residuals`` puts the (static, config-derived)
     ``feat_shape`` tuple inside the residual dict; under ``jax.jit`` that
     tuple would round-trip as traced scalars and break the backward's
-    reshape.  This variant strips it from the forward's output and
-    re-binds it host-side in the backward — the one protocol every jitted
-    consumer (serve adapter, benchmarks, golden/fidelity harnesses) must
-    follow, kept in this single place.
+    reshape.  The jittable pair strips it from the forward's output and
+    re-binds it host-side in the backward — the protocol now kept in ONE
+    place, :meth:`repro.engine.spec.CNNModel.pair`, which every jitted
+    consumer (engines, serve adapters, benchmarks, golden/fidelity
+    harnesses) shares.
     """
-    feat_shape = cfg.feature_hw() + (cfg.channels[-1],)
-
-    def forward(x):
-        logits, res = forward_with_residuals(params, x, cfg, method,
-                                             precision)
-        return logits, {k: v for k, v in res.items() if k != "feat_shape"}
-
-    def backward(residuals, seeds):
-        residuals = dict(residuals, feat_shape=feat_shape)
-        return backward_seeds(params, residuals, seeds, cfg, method,
-                              precision)
-
-    return forward, backward
+    from repro.engine.spec import CNNModel
+    if precision not in PRECISIONS:
+        raise ValueError(f"precision={precision!r} not in {PRECISIONS}")
+    return CNNModel(params, cfg).pair(method, precision, jittable=True)

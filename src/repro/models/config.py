@@ -6,7 +6,7 @@ one backbone implementation serves all ten architectures.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Tuple
 
 import jax.numpy as jnp

@@ -20,7 +20,7 @@ assigned arch; see DESIGN.md §7).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -205,7 +205,6 @@ def _sdpa_chunked(q, k, v, *, q_pos, k_pos, causal: bool, window: int,
         kk = k[:, t_lo: t_lo + nk * kc] if t_lo + nk * kc <= t else k[:, t_lo:]
         vv = v[:, t_lo: t_lo + nk * kc] if t_lo + nk * kc <= t else v[:, t_lo:]
         kpos_band = k_pos[t_lo: t_lo + kk.shape[1]]
-        tk = kk.shape[1]
 
         def body(carry, j):
             m, l, acc = carry

@@ -22,7 +22,7 @@ at prefill, so decode never re-touches the encoder.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,13 +8,20 @@ so an explain request that follows a predict for the same input skips the
 forward pass entirely — the serving-time realization of the paper's
 compute-block reuse (§III.F).
 
+Adapters are engine-backed: every compiled program comes from
+``repro.engine.build(EngineSpec(...))``, so method x precision x backend
+is decided by the spec in one place and shared with any other consumer.
+
 Quickstart::
 
+    from repro import engine
     from repro.models import cnn
     from repro.serve import CNNAdapter, ExplanationServer, Request
 
     cfg = cnn.CNNConfig()
-    server = ExplanationServer(CNNAdapter(cnn.init(key, cfg), cfg))
+    eng = engine.build(engine.EngineSpec(
+        model=engine.CNNModel(cnn.init(key, cfg), cfg), method="saliency"))
+    server = ExplanationServer(CNNAdapter.from_engine(eng))
     server.submit(Request(uid="r0", kind="predict", x=image))
     server.submit(Request(uid="r0", kind="explain", x=image,
                           method="guided", topk=5))

@@ -1,28 +1,32 @@
-"""Model adapters: the narrow waist between the server and an engine.
+"""Model adapters: the narrow waist between the server and the engine.
 
-An adapter owns the jitted programs the dispatch loop calls:
+An adapter owns per-rule-set :class:`repro.engine.Engine` instances —
+built once via ``repro.engine.build(EngineSpec(...))`` and shared through
+the global build cache — and exposes the three programs the dispatch loop
+calls:
 
-  * ``predict(xb)`` — forward pass that RETURNS the bit-packed residuals
-    (ReLU sign bits, 2-bit pool argmax) alongside the logits, so the server
-    can park them in the :class:`~repro.serve.residual_cache.ResidualCache`;
-  * ``explain_cached(method, residuals, seeds)`` — the BP phase alone,
-    seed-batched over stored masks (paper §III.F: explanation = backward
-    over the already-stored compute-block state);
-  * ``model_fn(rules)`` — a rule-bound ``f(x) -> logits`` for the registry's
-    cold (full FP+BP) explainers.
+  * ``predict(xb)`` — residual-returning forward (``Engine.forward``): the
+    bit-packed residuals (ReLU sign bits, 2-bit pool argmax) come back with
+    the logits so the server can park them in the
+    :class:`~repro.serve.residual_cache.ResidualCache`;
+  * ``explain_cached(method, residuals, seeds)`` — the BP phase alone
+    (``Engine.replay``), seed-batched over stored masks (paper §III.F);
+  * ``engine_for(rules)`` / ``model_fn(rules)`` — the engine (and its
+    rule-bound callable) for the registry's cold explainers.
 
-:class:`CNNAdapter` wires the paper's Table III CNN through the fused Pallas
-blocks of :mod:`repro.models.cnn`; both cold and cached paths run the SAME
-fused backward kernels, so a cache hit is bit-exact with a cold explain —
-it just skips the forward pass.
+:class:`CNNAdapter` wires the paper's Table III CNN; both cold and cached
+paths run the SAME compiled pair, so a cache hit is bit-exact with a cold
+explain — it just skips the forward pass.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from dataclasses import replace
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import engine as engine_lib
 from repro.models import cnn
 
 
@@ -32,7 +36,8 @@ def slice_example(tree, i: int):
     Non-array leaves (e.g. static shape ints) pass through unchanged.
     """
     return jax.tree.map(
-        lambda l: l[i:i + 1] if hasattr(l, "ndim") and l.ndim else l, tree)
+        lambda lf: lf[i:i + 1] if hasattr(lf, "ndim") and lf.ndim else lf,
+        tree)
 
 
 def concat_examples(trees):
@@ -51,6 +56,11 @@ class CNNAdapter:
     method can consume (guided ANDs the mask with the gradient sign,
     deconvnet reads only the sign — neither needs masks beyond it), so one
     predict serves follow-up explains of ANY registered mask-reuse method.
+
+    All compiled programs come from ``repro.engine.build``: one engine per
+    rule set, derived from the base spec with ``dataclasses.replace`` so
+    precision/model/backend are decided exactly once (and shared with any
+    other consumer building the same spec).
     """
 
     input_kind = "image"
@@ -65,64 +75,63 @@ class CNNAdapter:
         self.store_rules = store_rules
         # Numeric knob (paper §IV): "fxp16" serves TRUE int16 fixed-point —
         # predict stores masks computed in the quantized domain and every
-        # explain (hit, cold pure-BP, or composite via the manual-engine
+        # explain (hit, cold pure-BP, or composite via the engine's manual
         # ``backward``) replays the fused BP in int16.
         self.precision = precision
-        self._predict = jax.jit(self._predict_impl)
-        self._backward = {}          # rules -> jitted seed-batched BP
-        self._model_fn = {}          # rules -> jitted fused f(x) -> logits
+        self.engine = engine_lib.build(engine_lib.EngineSpec(
+            model=engine_lib.CNNModel(params, cfg), method=store_rules,
+            precision=precision))
+        self._engines: Dict[str, engine_lib.Engine] = {store_rules: self.engine}
 
-    # -- forward with residuals --------------------------------------------
+    @classmethod
+    def from_engine(cls, eng: engine_lib.Engine) -> "CNNAdapter":
+        """Adapt an already-built engine AS CONFIGURED; its method is the
+        store rule set, and every other spec field (model flags, backend,
+        targets, batch) is preserved — per-rule sibling engines derive from
+        this spec via ``replace(spec, method=...)``."""
+        spec = eng.spec
+        self = cls.__new__(cls)
+        self.params = spec.model.params
+        self.cfg = spec.model.cfg
+        self.store_rules = spec.method
+        self.precision = spec.precision
+        self.engine = eng
+        self._engines = {spec.method: eng}
+        return self
 
-    def _predict_impl(self, xb):
-        # the jittable pair strips feat_shape (static) from the residuals
-        # and re-binds it host-side in the backward — see cnn's docstring.
-        fwd, _ = cnn.seed_batched_attribution_jittable(
-            self.params, self.cfg, self.store_rules, self.precision)
-        return fwd(xb)
+    # -- engines -------------------------------------------------------------
+
+    def engine_for(self, rules: str) -> engine_lib.Engine:
+        """The (cached) engine whose backward runs under ``rules`` — same
+        spec as the base engine with only the method field changed."""
+        if rules not in self._engines:
+            self._engines[rules] = engine_lib.build(
+                replace(self.engine.spec, method=rules))
+        return self._engines[rules]
+
+    # -- forward with residuals ----------------------------------------------
 
     def predict(self, xb) -> Tuple[jnp.ndarray, Any]:
         """[B, H, W, C] -> (logits [B, num_classes], residual pytree)."""
-        return self._predict(xb)
+        return self.engine.forward(xb)
 
-    # -- BP phase over stored residuals ------------------------------------
-
-    def _backward_fn(self, rules: str):
-        """One jitted seed-batched BP per rule set, shared by the cache-hit
-        path AND the manual engine handed to registry explainers."""
-        if rules not in self._backward:
-            _, bwd = cnn.seed_batched_attribution_jittable(
-                self.params, self.cfg, rules, self.precision)
-            self._backward[rules] = jax.jit(bwd)
-        return self._backward[rules]
+    # -- BP phase over stored residuals --------------------------------------
 
     def explain_cached(self, method: str, residuals, seeds) -> jnp.ndarray:
         """seeds [S, B, classes] -> relevance [S, B, H, W, Cin]; NO forward."""
-        return self._backward_fn(method)(residuals, seeds)
+        return self.engine_for(method).replay(residuals, seeds)
 
-    # -- rule-bound model fn for cold explainers ----------------------------
+    # -- rule-bound model fn for cold explainers -----------------------------
 
     def model_fn(self, rules: str):
         """Under fxp16 the returned ``f`` is the residual forward (pair
         output) — cold composite explainers must pair it with
         :meth:`manual_backward`, since the int16 path has no ``jax.vjp``."""
-        if rules not in self._model_fn:
-            if self.precision == "fxp16":
-                fwd, _ = cnn.seed_batched_attribution_jittable(
-                    self.params, self.cfg, rules, "fxp16")
-                self._model_fn[rules] = jax.jit(fwd)
-            else:
-                self._model_fn[rules] = jax.jit(
-                    lambda v, _r=rules: cnn.apply(
-                        self.params, v, self.cfg, method=_r, use_pallas=True,
-                        precision=self.precision))
-        return self._model_fn[rules]
+        return self.engine_for(rules).model_fn
 
     def manual_backward(self, rules: str):
         """Manual BP engine for registry explainers, or None on float paths
         (where ``jax.vjp`` through :meth:`model_fn` is the engine).  Reuses
-        the same jitted program as :meth:`explain_cached` — no duplicate
+        the same compiled program as :meth:`explain_cached` — no duplicate
         compilation of an identical backward."""
-        if self.precision != "fxp16":
-            return None
-        return self._backward_fn(rules)
+        return self.engine_for(rules).composite_backward

@@ -76,14 +76,28 @@ class Explainer:
     needs_key: bool = False
 
     def __init__(self, f: Callable, backward: Optional[Callable] = None,
-                 **opts):
+                 *, engine=None, **opts):
         self.f = f
         # Manual BP engine (attribution.attribute's ``backward=``): set when
         # ``f`` returns (logits, residuals) and the BP phase runs over the
         # stored masks — the precision="fxp16" true-int16 pair arrives here,
         # since integer arithmetic has no jax.vjp.
         self.backward = backward
+        # The repro.engine.Engine this explainer rides, when constructed via
+        # :meth:`from_engine` (the server path) — ``f``/``backward`` are then
+        # that engine's compiled model_fn / composite_backward.
+        self.engine = engine
         self.opts = opts
+
+    @classmethod
+    def from_engine(cls, eng, **opts) -> "Explainer":
+        """Bind the method to a built :class:`repro.engine.Engine`: the
+        engine's rule-bound ``model_fn`` is ``f`` and its
+        ``composite_backward`` (the manual int16 pair under ``fxp16``, None
+        on float paths) is the ``backward=`` knob — so precision routing is
+        decided by the engine spec, never by the caller."""
+        return cls(eng.model_fn, backward=eng.composite_backward,
+                   engine=eng, **opts)
 
     def attribute(self, x, *, target=None, key=None):
         """-> (logits, relevance) — same contract as the core engine."""

@@ -16,7 +16,7 @@ itself by entry count and reports its exact bit footprint.
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax

@@ -96,13 +96,22 @@ class ExplanationServer:
     def explainer(self, method: str) -> registry.Explainer:
         if method not in self._explainers:
             cls = registry.get(method)
-            # Quantized adapters expose a manual BP engine (fxp16 has no
-            # jax.vjp); float adapters return None and vjp is used.
-            manual = getattr(self.adapter, "manual_backward", None)
-            self._explainers[method] = cls(
-                self.adapter.model_fn(cls.rules),
-                backward=manual(cls.rules) if manual else None,
-                **self.method_opts.get(method, {}))
+            eng_for = getattr(self.adapter, "engine_for", None)
+            if eng_for is not None:
+                # Engine-backed adapters: the explainer rides the built
+                # engine for its rule set — precision/backend (incl. the
+                # fxp16 manual pair) resolved by the spec, in one place.
+                self._explainers[method] = cls.from_engine(
+                    eng_for(cls.rules), **self.method_opts.get(method, {}))
+            else:
+                # Legacy adapters: raw closures.  Quantized ones expose a
+                # manual BP engine (fxp16 has no jax.vjp); float adapters
+                # return None and vjp is used.
+                manual = getattr(self.adapter, "manual_backward", None)
+                self._explainers[method] = cls(
+                    self.adapter.model_fn(cls.rules),
+                    backward=manual(cls.rules) if manual else None,
+                    **self.method_opts.get(method, {}))
         return self._explainers[method]
 
     # -- dispatch -----------------------------------------------------------

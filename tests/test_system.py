@@ -11,9 +11,9 @@ from repro.data import CifarLikeImages, TokenStream
 from repro.launch import steps as steps_lib
 from repro.launch.train import train_loop
 from repro.models import cnn, transformer as tf
+from repro.optim import adamw_init, adamw_update
 
 pytestmark = pytest.mark.slow
-from repro.optim import adamw_init, adamw_update
 
 
 def test_cnn_trains_and_heatmap_finds_the_blob():
