@@ -145,6 +145,34 @@ def run():
     rows.append(("kernel/conv_bp_unfused_us", us_u,
                  f"hbm_bytes={unfused_b}_3_calls_"
                  f"fused_saves={1 - fused_b / unfused_b:.0%}"))
+
+    # planned vs legacy-default tiles (repro.plan resource model): the
+    # planner keeps FC1's whole K in one VMEM block on the detected
+    # profile (grid 1 k-step vs 8), and fits a constrained edge budget by
+    # splitting it — planned-vs-default is the bench trajectory's new axis.
+    import functools
+
+    from repro.plan import get_profile, plan_vmm, vmm_fwd_footprint
+    xb = jax.random.normal(jax.random.PRNGKey(10), (256, 4096))
+    wb = jax.random.normal(jax.random.PRNGKey(11), (4096, 128)) * 0.02
+    det = get_profile("detected")
+    t = plan_vmm(256, 4096, 128, profile=det)
+    us_p = _time(jax.jit(functools.partial(
+        vmm_pallas, tm=t.tm, tk=t.tk, tn=t.tn)), xb, wb, iters=10)
+    us_d = _time(jax.jit(vmm_pallas), xb, wb, iters=10)
+    rows.append(("kernel/vmm_planned_us", us_p,
+                 f"default_us={us_d:.1f}_tiles={t.tm}x{t.tk}x{t.tn}"
+                 f"_vs_128x512x128_speedup={us_d / us_p:.2f}x"))
+    edge = get_profile("edge-small")
+    te = plan_vmm(256, 4096, 128, profile=edge)
+    fpe = vmm_fwd_footprint(256, 4096, 128, te.tm, te.tk, te.tn,
+                            mxu=edge.mxu)
+    us_e = _time(jax.jit(functools.partial(
+        vmm_pallas, tm=te.tm, tk=te.tk, tn=te.tn)), xb, wb, iters=10)
+    rows.append(("kernel/vmm_planned_edge_small_us", us_e,
+                 f"tiles={te.tm}x{te.tk}x{te.tn}_vmem_kb="
+                 f"{fpe.vmem_bytes / 1024:.0f}_budget_kb="
+                 f"{edge.vmem_bytes / 1024:.0f}_fits={fpe.fits(edge)}"))
     return rows
 
 

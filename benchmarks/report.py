@@ -1,13 +1,22 @@
-"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from the JSONL artifacts.
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from the JSONL artifacts,
+and gate benchmark regressions.
 
     PYTHONPATH=src python -m benchmarks.report
 prints markdown to stdout; the checked-in EXPERIMENTS.md embeds its output.
+
+    PYTHONPATH=src python -m benchmarks.report --check
+compares the two newest ``benchmarks/results/BENCH_*.json`` snapshots
+(written by ``benchmarks/run.py``) row by row and exits nonzero when any
+``*_us`` latency regressed by more than ``--threshold`` (default 15%) —
+the bench trajectory's tripwire for planned-vs-default tile drift.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
-import sys
+import math
+import os
 
 
 def load(paths):
@@ -87,8 +96,69 @@ def _note(r, t):
     return "MXU-align tiles, raise per-chip batch"
 
 
+# ---------------------------------------------------------------------------
+# benchmark regression gate (BENCH_*.json snapshots from benchmarks/run.py)
+# ---------------------------------------------------------------------------
+
+
+def _latency_rows(bench: dict) -> dict:
+    """{row_name: us} for every ``*_us`` row of a BENCH snapshot."""
+    out = {}
+    for rows in bench.get("suites", {}).values():
+        for name, val, _derived in rows:
+            if name.endswith("_us") and isinstance(val, (int, float)) \
+                    and math.isfinite(val) and val > 0:
+                out[name] = float(val)
+    return out
+
+
+def check(results_dir: str = "benchmarks/results",
+          threshold: float = 0.15) -> int:
+    """Compare the two newest BENCH_*.json; nonzero on >threshold latency
+    regressions.  Date-stamped filenames sort chronologically."""
+    paths = sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json")))
+    if len(paths) < 2:
+        print(f"[report --check] need two BENCH_*.json snapshots in "
+              f"{results_dir} (found {len(paths)}) — nothing to compare")
+        return 0
+    old_path, new_path = paths[-2], paths[-1]
+    with open(old_path) as f:
+        old = _latency_rows(json.load(f))
+    with open(new_path) as f:
+        new = _latency_rows(json.load(f))
+    print(f"[report --check] {os.path.basename(old_path)} -> "
+          f"{os.path.basename(new_path)}: {len(old.keys() & new.keys())} "
+          f"shared latency rows, threshold +{threshold:.0%}")
+    regressions = []
+    for name in sorted(old.keys() & new.keys()):
+        ratio = new[name] / old[name]
+        flag = " REGRESSION" if ratio > 1 + threshold else ""
+        if flag or abs(ratio - 1) > 0.05:
+            print(f"  {name:44s} {old[name]:10.1f} -> {new[name]:10.1f} us "
+                  f"({ratio:5.2f}x){flag}")
+        if flag:
+            regressions.append(name)
+    if regressions:
+        print(f"[report --check] FAIL: {len(regressions)} rows regressed "
+              f">{threshold:.0%}: {regressions}")
+        return 1
+    print("[report --check] OK: no latency regressions")
+    return 0
+
+
 def main():
-    paths = sys.argv[1:] or sorted(glob.glob("benchmarks/results/dryrun*.jsonl"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*",
+                    help="dry-run JSONL artifacts (table mode)")
+    ap.add_argument("--check", action="store_true",
+                    help="regression-gate the two newest BENCH_*.json")
+    ap.add_argument("--results-dir", default="benchmarks/results")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="latency regression tolerance (fraction)")
+    args = ap.parse_args()
+    if args.check:
+        raise SystemExit(check(args.results_dir, args.threshold))
+    paths = args.paths or sorted(glob.glob("benchmarks/results/dryrun*.jsonl"))
     recs = load(paths)
     base = [r for r in recs if not r.get("triangle_skip")
             and r.get("kind") != "attribute"]

@@ -48,9 +48,14 @@ class Engine:
             self._token_step = jax.jit(model.token_step(spec.method))
             self._backend: Optional[BackwardEngine] = None
             self._model_fn = None
+            self._plan = None
             return
         self._token_step = None
         self._fused_explain: Dict[Tuple[bool, Optional[int]], Any] = {}
+        # Resource-aware tile planning happens HERE, before any compile —
+        # the paper's design-time tile sizing: every kernel of the pair and
+        # of the rule-bound logits program runs the planned block shapes.
+        self._plan = spec.resolve_plan()
         kind = spec.resolve_backward()
         if kind == "seed_batched":
             if not getattr(model, "has_pair", False):
@@ -58,10 +63,11 @@ class Engine:
                     f"model {model!r} exposes no seed-batched pair; "
                     f"use backward='vjp'")
             self._backend = ManualSeedBatchedBackward(
-                *model.pair(spec.method, spec.precision))
+                *model.pair(spec.method, spec.precision, plan=self._plan))
         else:
             self._backend = VjpBackward(
-                model.logits_fn(spec.method, spec.precision))
+                model.logits_fn(spec.method, spec.precision,
+                                plan=self._plan))
         # Rule-bound logits program: shared by predict, the composite
         # methods, and registry explainers.  Under fxp16 this IS the pair
         # forward (pair-returning) — the manual backward is mandatory there.
@@ -69,7 +75,8 @@ class Engine:
             self._model_fn = self._backend.forward
         else:
             self._model_fn = jax.jit(
-                model.logits_fn(spec.method, spec.precision))
+                model.logits_fn(spec.method, spec.precision,
+                                plan=self._plan))
 
     # -- resolved surfaces ---------------------------------------------------
 
@@ -77,6 +84,12 @@ class Engine:
     def backend(self) -> BackwardEngine:
         """The resolved :class:`BackwardEngine` (manual pair or vjp)."""
         return self._backend
+
+    @property
+    def plan(self):
+        """The resolved ``repro.plan.TilePlan`` the compiled kernels run
+        (None when the spec names no device/plan — tiling defaults)."""
+        return self._plan
 
     @property
     def supports_replay(self) -> bool:

@@ -102,8 +102,8 @@ class CNNModel(_ParamsIdentity):
     def has_pair(self) -> bool:
         return self.use_pallas
 
-    def pair(self, method: str, precision: str, *,
-             jittable: bool = True) -> Tuple[Callable, Callable]:
+    def pair(self, method: str, precision: str, *, jittable: bool = True,
+             plan=None) -> Tuple[Callable, Callable]:
         """The seed-batched (forward, backward) closure pair.
 
         ``jittable=True`` strips the static ``feat_shape`` tuple from the
@@ -113,6 +113,10 @@ class CNNModel(_ParamsIdentity):
         backward's reshape).  ``jittable=False`` returns the eager pair with
         ``feat_shape`` inline (the legacy ``cnn.seed_batched_attribution``
         contract).
+
+        ``plan`` (a ``repro.plan.TilePlan``) threads planner-chosen block
+        shapes into every fused kernel of both halves; ``None`` keeps the
+        tiling-policy defaults.
         """
         from repro.models import cnn
         if precision not in PRECISIONS:
@@ -121,11 +125,11 @@ class CNNModel(_ParamsIdentity):
         if not jittable:
             def forward(x):
                 return cnn.forward_with_residuals(params, x, cfg, method,
-                                                  precision)
+                                                  precision, plan=plan)
 
             def backward(residuals, seeds):
                 return cnn.backward_seeds(params, residuals, seeds, cfg,
-                                          method, precision)
+                                          method, precision, plan=plan)
 
             return forward, backward
 
@@ -133,17 +137,17 @@ class CNNModel(_ParamsIdentity):
 
         def forward(x):
             logits, res = cnn.forward_with_residuals(params, x, cfg, method,
-                                                     precision)
+                                                     precision, plan=plan)
             return logits, {k: v for k, v in res.items() if k != "feat_shape"}
 
         def backward(residuals, seeds):
             residuals = dict(residuals, feat_shape=feat_shape)
             return cnn.backward_seeds(params, residuals, seeds, cfg, method,
-                                      precision)
+                                      precision, plan=plan)
 
         return forward, backward
 
-    def logits_fn(self, method: str, precision: str) -> Callable:
+    def logits_fn(self, method: str, precision: str, plan=None) -> Callable:
         """Rule-bound differentiable ``f`` for the vjp backend / registry
         explainers.  Float precisions only: under ``fxp16`` there is no
         integer ``jax.vjp`` — the Engine exposes the PAIR forward as its
@@ -158,7 +162,8 @@ class CNNModel(_ParamsIdentity):
 
         def f(v):
             return cnn.apply(params, v, cfg, method=method,
-                             use_pallas=use_pallas, precision=precision)
+                             use_pallas=use_pallas, precision=precision,
+                             plan=plan)
 
         return f
 
@@ -211,7 +216,7 @@ class FnModel(_ParamsIdentity):
     def has_pair(self) -> bool:
         return False
 
-    def logits_fn(self, method: str, precision: str) -> Callable:
+    def logits_fn(self, method: str, precision: str, plan=None) -> Callable:
         if precision == "fxp16":
             raise ValueError("FnModel has no manual pair; precision='fxp16' "
                              "requires a model exposing seed-batched "
@@ -244,6 +249,17 @@ class EngineSpec:
       * ``batch`` — optional static batch size: inputs are padded up to it
         (and outputs sliced back) so one compiled program serves any
         smaller batch, the serving-shape discipline of the micro-batcher.
+      * ``device`` — a ``repro.plan`` device-profile name (``"detected"``,
+        ``"tpu-v4"``, ``"edge-small"``, ...): ``build`` runs the
+        resource-aware tile planner for that profile BEFORE compiling, so
+        every fused kernel executes block shapes fitted to its on-chip
+        budget (the paper's per-FPGA-target resource model).
+      * ``plan`` — an explicit pre-built ``repro.plan.TilePlan`` (overrides
+        ``device``-driven planning; e.g. a plan from another process or a
+        hand-tuned one).
+      * ``autotune`` — refine the analytic tile ranking by measured kernel
+        timings at build time, through the persistent tuning cache (warm
+        builds replan from the cache without re-measuring).
     """
 
     model: Any
@@ -252,6 +268,9 @@ class EngineSpec:
     backward: str = "auto"
     targets: TargetSpec = field(default_factory=Argmax)
     batch: Optional[int] = None
+    device: Optional[str] = None
+    plan: Optional[Any] = None
+    autotune: bool = False
 
     def __post_init__(self):
         if self.method not in RULE_SETS:
@@ -268,6 +287,9 @@ class EngineSpec:
                              "or 'seed_batched'")
         if self.batch is not None and self.batch < 1:
             raise ValueError(f"batch must be >= 1, got {self.batch}")
+        if self.device is not None:
+            from repro.plan import get_profile
+            get_profile(self.device)        # validate the name eagerly
 
     def resolve_backward(self) -> str:
         """The backend ``build`` will actually use (auto-selection rule)."""
@@ -281,3 +303,31 @@ class EngineSpec:
                     "pair (CNNModel(use_pallas=True))")
             return "seed_batched"
         return "seed_batched" if has_pair else "vjp"
+
+    def resolve_plan(self):
+        """The ``TilePlan`` the built engine's kernels will run, or None.
+
+        An explicit ``plan`` wins; otherwise a ``device`` name triggers the
+        resource-aware planner over the model's kernel shapes (CNN handles
+        only — LM/Fn models have no planned Pallas stack yet).  Seed
+        fan-out comes from ``targets`` (TopK rides the seeds axis through
+        every fused backward, so it scales the planned footprints).
+
+        The budget audit covers the spec's declared shapes: ``batch`` (or
+        1) x the targets fan-out.  Composite methods that FOLD extra axes
+        into the batch dim at call time (``ig(steps=)``, ``smoothgrad(n=)``
+        with ``batched=True``) run the same kernels at a larger M than was
+        audited — size ``batch`` for the largest folded shape you will
+        serve (see ROADMAP: per-call re-audit is an open item).
+        """
+        if self.plan is not None:
+            return self.plan
+        if self.device is None or not hasattr(self.model, "cfg") \
+                or not getattr(self.model, "has_pair", False):
+            return None
+        from repro.plan import TuningCache, plan_cnn
+        seeds = self.targets.k if isinstance(self.targets, TopK) else 1
+        cache = TuningCache() if self.autotune else None
+        return plan_cnn(self.model.cfg, device=self.device,
+                        precision=self.precision, batch=self.batch or 1,
+                        seeds=seeds, autotune=self.autotune, cache=cache)

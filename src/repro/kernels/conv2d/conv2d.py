@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import interpret_mode, validate_bp_gates
+from repro.kernels.tiling import SUBLANE, align_up, cout_tiling
 from repro.kernels.pool.pool import unpack_crumbs, unpool_scatter
 from repro.kernels.relu_mask.relu_mask import gate_gradient, unpack_bits
 
@@ -59,14 +60,15 @@ def _conv_kernel(x_ref, w_ref, o_ref, *, K: int, H: int, W: int):
     o_ref[...] = _im2col_dot(x_ref[...], K, H, W, wmat).astype(o_ref.dtype)
 
 
-def _cout_tiling(cout: int, co_tile: int):
-    tco = min(co_tile, -(-cout // 128) * 128) if cout >= 128 else cout
-    return tco, -(-cout // tco) * tco
-
-
-def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, *, co_tile: int = 128,
+def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, *,
+                  co_tile: Optional[int] = None,
                   interpret: Optional[bool] = None) -> jnp.ndarray:
-    """[N, H, W, Cin] x [K, K, Cin, Cout] -> [N, H, W, Cout], stride 1, SAME."""
+    """[N, H, W, Cin] x [K, K, Cin, Cout] -> [N, H, W, Cout], stride 1, SAME.
+
+    ``co_tile=None`` resolves through
+    :func:`repro.kernels.tiling.cout_tiling` (planner tiles override the
+    default policy).
+    """
     if interpret is None:
         interpret = interpret_mode()
     n, h, ww, cin = x.shape
@@ -74,8 +76,8 @@ def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, *, co_tile: int = 128,
     p = (k - 1) // 2
 
     # Zero-pad: spatial halo (SAME), Cin to sublane multiple, Cout to tile.
-    cin_p = -(-cin // 8) * 8
-    tco, cout_p = _cout_tiling(cout, co_tile)
+    cin_p = align_up(cin, SUBLANE)
+    tco, cout_p = cout_tiling(cout, co_tile)
     xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, cin_p - cin)))
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, cin_p - cin), (0, cout_p - cout)))
 
@@ -141,7 +143,7 @@ def conv2d_bwd_fused_pallas(
         method: str = "saliency",
         out_relu_mask: Optional[jnp.ndarray] = None,
         out_gate: Optional[bool] = None,
-        co_tile: int = 128,
+        co_tile: Optional[int] = None,
         interpret: Optional[bool] = None) -> jnp.ndarray:
     """One pallas_call for a conv layer's whole backward step.
 
@@ -172,11 +174,10 @@ def conv2d_bwd_fused_pallas(
     has_pool = pool_idx is not None
     h, w_sp = (2 * hg, 2 * wg) if has_pool else (hg, wg)
 
-    cp = -(-c // 8) * 8                      # contraction channels (fwd Cout)
-    tco, cout_p = _cout_tiling(cout, co_tile)
-    if tco % 8:                              # epilogue mask bytes need /8 tiles
-        tco = -(-tco // 8) * 8
-        cout_p = -(-cout // tco) * tco
+    cp = align_up(c, SUBLANE)                # contraction channels (fwd Cout)
+    # cout_tiling is sublane-aligned, as the epilogue mask bytes (tco // 8
+    # per pixel) require.
+    tco, cout_p = cout_tiling(cout, co_tile)
     gp = jnp.pad(g, ((0, 0),) * 4 + ((0, cp - c),))
     wp = jnp.pad(wt, ((0, 0), (0, 0), (0, cp - cw), (0, cout_p - cout)))
 

@@ -24,7 +24,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.fixedpoint import WGT_FRAC, requantize
 from repro.kernels import interpret_mode, validate_bp_gates
-from repro.kernels.conv2d.conv2d import _cout_tiling
+from repro.kernels.tiling import SUBLANE, align_up, cout_tiling
 from repro.kernels.pool.pool import unpack_crumbs, unpool_scatter
 from repro.kernels.relu_mask.relu_mask import gate_gradient, unpack_bits
 
@@ -49,7 +49,7 @@ def _conv_fxp_kernel(x_ref, w_ref, o_ref, *, K: int, H: int, W: int,
 
 
 def conv2d_fxp_pallas(x: jnp.ndarray, w: jnp.ndarray, *,
-                      shift: int = WGT_FRAC, co_tile: int = 128,
+                      shift: int = WGT_FRAC, co_tile: Optional[int] = None,
                       interpret: Optional[bool] = None) -> jnp.ndarray:
     """int16 [N, H, W, Cin] x int16 [K, K, Cin, Cout] -> int16, stride 1, SAME.
 
@@ -63,8 +63,8 @@ def conv2d_fxp_pallas(x: jnp.ndarray, w: jnp.ndarray, *,
     k, _, _, cout = w.shape
     p = (k - 1) // 2
 
-    cin_p = -(-cin // 8) * 8
-    tco, cout_p = _cout_tiling(cout, co_tile)
+    cin_p = align_up(cin, SUBLANE)
+    tco, cout_p = cout_tiling(cout, co_tile)
     xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, cin_p - cin)))
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, cin_p - cin), (0, cout_p - cout)))
 
@@ -132,7 +132,7 @@ def conv2d_bwd_fused_fxp_pallas(
         method: str = "saliency",
         out_relu_mask: Optional[jnp.ndarray] = None,
         out_gate: Optional[bool] = None,
-        shift: int = WGT_FRAC, co_tile: int = 128,
+        shift: int = WGT_FRAC, co_tile: Optional[int] = None,
         interpret: Optional[bool] = None) -> jnp.ndarray:
     """int16 twin of :func:`conv2d.conv2d_bwd_fused_pallas` — same fused
     dataflow and argument contract, Q7.8 gradients / Q1.14 weights, ONE
@@ -150,11 +150,8 @@ def conv2d_bwd_fused_fxp_pallas(
     has_pool = pool_idx is not None
     h, w_sp = (2 * hg, 2 * wg) if has_pool else (hg, wg)
 
-    cp = -(-c // 8) * 8
-    tco, cout_p = _cout_tiling(cout, co_tile)
-    if tco % 8:
-        tco = -(-tco // 8) * 8
-        cout_p = -(-cout // tco) * tco
+    cp = align_up(c, SUBLANE)
+    tco, cout_p = cout_tiling(cout, co_tile)   # sublane-aligned (mask bytes)
     gp = jnp.pad(g, ((0, 0),) * 4 + ((0, cp - c),))
     wp = jnp.pad(wt, ((0, 0), (0, 0), (0, cp - cw), (0, cout_p - cout)))
 

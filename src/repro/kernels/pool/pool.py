@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import interpret_mode
+from repro.kernels.tiling import CRUMBS_PER_BYTE, align_up, crumb_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -76,7 +77,7 @@ def maxpool_fwd_pallas(x: jnp.ndarray, *, interpret: Optional[bool] = None):
     if interpret is None:
         interpret = interpret_mode()
     n, h, w, c = x.shape
-    cp = -(-c // 4) * 4
+    cp = align_up(c, CRUMBS_PER_BYTE)
     xp = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
     y, idx = pl.pallas_call(
         _pool_fwd_kernel,
@@ -88,7 +89,7 @@ def maxpool_fwd_pallas(x: jnp.ndarray, *, interpret: Optional[bool] = None):
                    jax.ShapeDtypeStruct((n, h // 2, w // 2, cp // 4), jnp.uint8)],
         interpret=interpret,
     )(xp)
-    return y[..., :c], idx[..., : -(-c // 4)]
+    return y[..., :c], idx[..., :crumb_bytes(c)]
 
 
 def unpool_bwd_pallas(packed: jnp.ndarray, g: jnp.ndarray, *,
@@ -97,7 +98,7 @@ def unpool_bwd_pallas(packed: jnp.ndarray, g: jnp.ndarray, *,
     if interpret is None:
         interpret = interpret_mode()
     n, hp, wp, c = g.shape
-    cp = -(-c // 4) * 4
+    cp = align_up(c, CRUMBS_PER_BYTE)
     gp = jnp.pad(g, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
     ip = jnp.pad(packed, ((0, 0), (0, 0), (0, 0), (0, cp // 4 - packed.shape[-1])))
     out = pl.pallas_call(

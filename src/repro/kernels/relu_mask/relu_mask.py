@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import interpret_mode
+from repro.kernels.tiling import LANE, align_up, mask_bytes, row_tiling
 
 
 # ---------------------------------------------------------------------------
@@ -79,18 +80,18 @@ def _relu_bwd_kernel(m_ref, g_ref, r_ref, *, method: str):
 
 def _pad_rows_cols(a, tr, c_mult):
     r, c = a.shape
-    rp, cp = -(-r // tr) * tr, -(-c // c_mult) * c_mult
+    rp, cp = align_up(r, tr), align_up(c, c_mult)
     return jnp.pad(a, ((0, rp - r), (0, cp - c))), rp, cp
 
 
-def relu_fwd_pallas(x2d: jnp.ndarray, *, tr: int = 256,
+def relu_fwd_pallas(x2d: jnp.ndarray, *, tr: Optional[int] = None,
                     interpret: Optional[bool] = None):
     """x2d: [R, C] -> (relu, packed mask [R, ceil(C/8)])."""
     if interpret is None:
         interpret = interpret_mode()
     r, c = x2d.shape
-    xp, rp, cp = _pad_rows_cols(x2d, tr, 128)
-    tr = min(tr, rp)
+    tr, _ = row_tiling(r, tr)
+    xp, rp, cp = _pad_rows_cols(x2d, tr, LANE)
     y, m = pl.pallas_call(
         _relu_fwd_kernel,
         grid=(rp // tr,),
@@ -101,19 +102,19 @@ def relu_fwd_pallas(x2d: jnp.ndarray, *, tr: int = 256,
                    jax.ShapeDtypeStruct((rp, cp // 8), jnp.uint8)],
         interpret=interpret,
     )(xp)
-    return y[:r, :c], m[:r, : -(-c // 8)]
+    return y[:r, :c], m[:r, :mask_bytes(c)]
 
 
 def relu_bwd_pallas(packed: jnp.ndarray, g2d: jnp.ndarray, method: str, *,
-                    tr: int = 256,
+                    tr: Optional[int] = None,
                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """Masked gradient propagation; method is static (design-time config)."""
     if interpret is None:
         interpret = interpret_mode()
     r, c = g2d.shape
-    gp, rp, cp = _pad_rows_cols(g2d, tr, 128)
+    tr, _ = row_tiling(r, tr)
+    gp, rp, cp = _pad_rows_cols(g2d, tr, LANE)
     mp = jnp.pad(packed, ((0, rp - r), (0, cp // 8 - packed.shape[1])))
-    tr = min(tr, rp)
     out = pl.pallas_call(
         functools.partial(_relu_bwd_kernel, method=method),
         grid=(rp // tr,),

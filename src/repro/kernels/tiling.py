@@ -1,0 +1,111 @@
+"""Single source of truth for TPU tile/alignment constants and policies.
+
+Every Pallas wrapper in :mod:`repro.kernels` derives its block shapes from
+here — either from an explicit tile handed down by the resource planner
+(:mod:`repro.plan`) or, when none is given, from the DEFAULT_* policy
+constants below.  Nothing outside this module and ``repro.plan`` may
+hardcode a tile size; the scattered ``-(-x // 8) * 8`` ceiling-align idioms
+are :func:`align_up` calls.
+
+Geometry (TPU f32):
+
+  * SUBLANE = 8  — second-to-last block dim multiple (VPU rows).
+  * LANE = 128   — last block dim multiple (VPU lanes / MXU edge).
+
+The vmm tiling policy enforces LANE alignment on the K/N block dims: a
+requested ``tk``/``tn`` is clamped to the lane-aligned padded dim (never the
+raw dim), so the last axis of every VMEM block is a lane multiple — the old
+``min(tk, k)`` silently produced unaligned blocks whenever K/N was not.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+#: second-to-last block-dim multiple for f32 (VPU sublanes).
+SUBLANE = 8
+#: last block-dim multiple (VPU lanes / MXU systolic edge).
+LANE = 128
+#: 2-bit pool-argmax crumbs per packed byte.
+CRUMBS_PER_BYTE = 4
+#: 1-bit ReLU-mask bits per packed byte.
+BITS_PER_BYTE = 8
+
+# Default tile policy — the ONE place the legacy hardcoded numbers live.
+DEFAULT_CO_TILE = 128           # conv Cout tile (lane width)
+DEFAULT_TM = 128                # vmm M tile
+DEFAULT_TK = 512                # vmm K (contraction) tile
+DEFAULT_TN = 128                # vmm N tile
+DEFAULT_TR = 256                # relu/pointwise row tile
+
+
+def align_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x`` (ceil-align)."""
+    return -(-x // m) * m
+
+
+def is_aligned(x: int, m: int) -> bool:
+    return x % m == 0
+
+
+def pow2_span(unit: int, cap: int) -> Tuple[int, ...]:
+    """Aligned candidate tiles: pow2 multiples of ``unit`` up to ``cap``,
+    plus ``cap`` itself (the full-dim tile).  ``cap`` is assumed aligned."""
+    out = []
+    t = unit
+    while t < cap:
+        out.append(t)
+        t *= 2
+    out.append(cap)
+    return tuple(out)
+
+
+def cout_tiling(cout: int, co_tile: Optional[int] = None) -> Tuple[int, int]:
+    """Conv Cout tiling: ``(tco, cout_p)`` with ``tco | cout_p``.
+
+    ``co_tile=None`` selects :data:`DEFAULT_CO_TILE`.  The tile is
+    sublane-aligned (the fused backward packs epilogue masks at 8 channels
+    per byte) and clamped to the aligned channel count, so small layers get
+    one full tile and large layers honor the requested split.
+    """
+    if co_tile is None:
+        co_tile = DEFAULT_CO_TILE
+    tco = min(align_up(co_tile, SUBLANE), align_up(cout, SUBLANE))
+    return tco, align_up(cout, tco)
+
+
+def vmm_tiling(m: int, k: int, n: int,
+               tm: Optional[int] = None,
+               tk: Optional[int] = None,
+               tn: Optional[int] = None):
+    """FC matmul tiling: ``(tm_, tk_, tn_, mp, kp, np_)``.
+
+    ``None`` tiles select the DEFAULT_* policy.  ``tm`` is clamped to the
+    sublane-aligned M; ``tk``/``tn`` are clamped to the LANE-aligned K/N —
+    the padding is always to a lane multiple (the fused backward also packs
+    1-bit masks along these axes at 8 per byte), never the raw dim.
+    """
+    tm = DEFAULT_TM if tm is None else tm
+    tk = DEFAULT_TK if tk is None else tk
+    tn = DEFAULT_TN if tn is None else tn
+    tm_ = min(align_up(tm, SUBLANE), align_up(m, SUBLANE))
+    tk_ = min(align_up(tk, LANE), align_up(k, LANE))
+    tn_ = min(align_up(tn, LANE), align_up(n, LANE))
+    return (tm_, tk_, tn_,
+            align_up(m, tm_), align_up(k, tk_), align_up(n, tn_))
+
+
+def row_tiling(r: int, tr: Optional[int] = None) -> Tuple[int, int]:
+    """Pointwise row tiling (relu/mask kernels): ``(tr_, rp)``."""
+    tr = DEFAULT_TR if tr is None else tr
+    tr_ = min(align_up(tr, SUBLANE), align_up(r, SUBLANE))
+    return tr_, align_up(r, tr_)
+
+
+def mask_bytes(c: int) -> int:
+    """Packed 1-bit mask bytes for ``c`` channels."""
+    return align_up(c, BITS_PER_BYTE) // BITS_PER_BYTE
+
+
+def crumb_bytes(c: int) -> int:
+    """Packed 2-bit pool-index bytes for ``c`` channels."""
+    return align_up(c, CRUMBS_PER_BYTE) // CRUMBS_PER_BYTE

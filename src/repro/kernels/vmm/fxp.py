@@ -24,6 +24,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.fixedpoint import WGT_FRAC, requantize
 from repro.kernels import interpret_mode, validate_bp_gates
+from repro.kernels.tiling import vmm_tiling
 from repro.kernels.relu_mask.relu_mask import gate_gradient, unpack_bits
 
 
@@ -41,17 +42,21 @@ def _mm_fxp_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int, shift: int):
 
 
 def vmm_fxp_pallas(x: jnp.ndarray, w: jnp.ndarray, *, shift: int = WGT_FRAC,
-                   tm: int = 128, tk: int = 512, tn: int = 128,
+                   tm: Optional[int] = None, tk: Optional[int] = None,
+                   tn: Optional[int] = None,
                    interpret: Optional[bool] = None) -> jnp.ndarray:
-    """int16 [M, K] @ int16 [K, N] -> int16 [M, N], int32 accumulation."""
+    """int16 [M, K] @ int16 [K, N] -> int16 [M, N], int32 accumulation.
+
+    ``tm/tk/tn=None`` resolve through :func:`repro.kernels.tiling.vmm_tiling`
+    (same policy as the f32 twin; int16 operands, int32 accumulator).
+    """
     if interpret is None:
         interpret = interpret_mode()
     assert x.dtype == jnp.int16 and w.dtype == jnp.int16, (x.dtype, w.dtype)
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
-    tm_, tk_, tn_ = min(tm, -(-m // 8) * 8), min(tk, k), min(tn, n)
-    mp, kp, np_ = (-(-m // tm_) * tm_, -(-k // tk_) * tk_, -(-n // tn_) * tn_)
+    tm_, tk_, tn_, mp, kp, np_ = vmm_tiling(m, k, n, tm, tk, tn)
     xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
     wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
     k_steps = kp // tk_
@@ -112,7 +117,8 @@ def vmm_bwd_fused_fxp_pallas(
         method: str = "saliency",
         out_relu_mask: Optional[jnp.ndarray] = None,
         out_gate: Optional[bool] = None,
-        shift: int = WGT_FRAC, tk: int = 512, tn: int = 128,
+        shift: int = WGT_FRAC, tk: Optional[int] = None,
+        tn: Optional[int] = None,
         interpret: Optional[bool] = None) -> jnp.ndarray:
     """int16 twin of :func:`vmm.vmm_bwd_fused_pallas` — same fused dataflow
     and argument contract, Q7.8 gradients / Q1.14 weights, ONE pallas_call
@@ -129,11 +135,7 @@ def vmm_bwd_fused_fxp_pallas(
     k2, n = w.shape
     assert k == k2, (g.shape, w.shape)
 
-    mp = -(-m // 8) * 8
-    tk_ = min(-(-tk // 8) * 8, -(-k // 8) * 8)
-    kp = -(-k // tk_) * tk_
-    tn_ = min(-(-tn // 8) * 8, -(-n // 8) * 8)
-    np_ = -(-n // tn_) * tn_
+    _, tk_, tn_, mp, kp, np_ = vmm_tiling(m, k, n, m, tk, tn)
     k_steps = kp // tk_
 
     gp = jnp.pad(g, ((0, 0), (0, mp - m), (0, kp - k)))

@@ -27,6 +27,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import interpret_mode, validate_bp_gates
+from repro.kernels.tiling import vmm_tiling
 from repro.kernels.relu_mask.relu_mask import gate_gradient, unpack_bits
 
 
@@ -43,17 +44,21 @@ def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def vmm_pallas(x: jnp.ndarray, w: jnp.ndarray, *, tm: int = 128,
-               tk: int = 512, tn: int = 128,
+def vmm_pallas(x: jnp.ndarray, w: jnp.ndarray, *, tm: Optional[int] = None,
+               tk: Optional[int] = None, tn: Optional[int] = None,
                interpret: Optional[bool] = None) -> jnp.ndarray:
-    """[M, K] @ [K, N] -> [M, N], MXU-aligned VMEM tiles, f32 accumulate."""
+    """[M, K] @ [K, N] -> [M, N], MXU-aligned VMEM tiles, f32 accumulate.
+
+    ``tm/tk/tn=None`` resolve through :func:`repro.kernels.tiling.vmm_tiling`
+    (planner-provided tiles override the defaults); K/N padding is always
+    lane-aligned, never the raw dim.
+    """
     if interpret is None:
         interpret = interpret_mode()
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
-    tm_, tk_, tn_ = min(tm, -(-m // 8) * 8), min(tk, k), min(tn, n)
-    mp, kp, np_ = (-(-m // tm_) * tm_, -(-k // tk_) * tk_, -(-n // tn_) * tn_)
+    tm_, tk_, tn_, mp, kp, np_ = vmm_tiling(m, k, n, tm, tk, tn)
     xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
     wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
     k_steps = kp // tk_
@@ -113,7 +118,7 @@ def vmm_bwd_fused_pallas(
         method: str = "saliency",
         out_relu_mask: Optional[jnp.ndarray] = None,
         out_gate: Optional[bool] = None,
-        tk: int = 512, tn: int = 128,
+        tk: Optional[int] = None, tn: Optional[int] = None,
         interpret: Optional[bool] = None) -> jnp.ndarray:
     """One pallas_call for an FC layer's whole backward step.
 
@@ -123,6 +128,7 @@ def vmm_bwd_fused_pallas(
     ``gate=True`` with no mask selects the deconvnet rule (gradient sign
     only).  ``out_relu_mask``/``out_gate``: epilogue on the outgoing dx,
     [M, ceil(N/8)].  Masks carry no seeds axis — shared across S.
+    ``tk/tn=None`` resolve through :func:`repro.kernels.tiling.vmm_tiling`.
     """
     if interpret is None:
         interpret = interpret_mode()
@@ -135,11 +141,7 @@ def vmm_bwd_fused_pallas(
     k2, n = w.shape
     assert k == k2, (g.shape, w.shape)
 
-    mp = -(-m // 8) * 8
-    tk_ = min(-(-tk // 8) * 8, -(-k // 8) * 8)
-    kp = -(-k // tk_) * tk_
-    tn_ = min(-(-tn // 8) * 8, -(-n // 8) * 8)
-    np_ = -(-n // tn_) * tn_
+    _, tk_, tn_, mp, kp, np_ = vmm_tiling(m, k, n, m, tk, tn)
     k_steps = kp // tk_
 
     gp = jnp.pad(g, ((0, 0), (0, mp - m), (0, kp - k)))

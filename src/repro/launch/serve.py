@@ -77,11 +77,18 @@ def run_lm(args) -> None:
 def run_cnn(args) -> None:
     cfg = cnn_lib.CNNConfig()
     params = cnn_lib.init(jax.random.PRNGKey(0), cfg)
-    # configure-once: the spec decides precision x store-rules x backend;
-    # the server/adapter only ever execute the built engine.
+    # configure-once: the spec decides precision x store-rules x backend x
+    # device tile plan; the server/adapter only ever execute the built
+    # engine.
     eng = engine_lib.build(engine_lib.EngineSpec(
         model=engine_lib.CNNModel(params, cfg), method="saliency",
-        precision=args.precision))
+        precision=args.precision, device=args.device_profile,
+        autotune=args.autotune))
+    if eng.plan is not None:
+        print(f"[serve/cnn] planned tiles for device profile "
+              f"{args.device_profile!r}:")
+        for line in eng.plan.summary().splitlines()[1:]:
+            print(f"  {line.strip()}")
     server = ExplanationServer(CNNAdapter.from_engine(eng),
                                max_batch=args.batch,
                                max_delay_s=args.max_delay_ms / 1e3)
@@ -131,6 +138,15 @@ def main():
                     choices=["f32", "bf16", "fxp16"],
                     help="cnn workload numeric path; fxp16 = true int16 "
                          "fixed-point kernels (paper §IV)")
+    from repro.plan import profile_names
+    ap.add_argument("--device-profile", default=None,
+                    choices=profile_names(),
+                    help="cnn workload: plan kernel tiles for this "
+                         "repro.plan device profile before compiling "
+                         "(e.g. edge-small = 2MB on-chip budget)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="refine the tile plan by measured timings "
+                         "(persisted in the repro.plan tuning cache)")
     args = ap.parse_args()
 
     if args.workload == "lm":

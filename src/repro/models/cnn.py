@@ -118,6 +118,22 @@ def _fc(x, w, b, *, use_pallas: bool):
 # ---------------------------------------------------------------------------
 
 
+def _plan_tiles(plan, key: str):
+    """Static tile args for one kernel launch from a ``repro.plan.TilePlan``
+    (duck-typed — conv tiles carry ``co_tile``, matmul tiles ``tm/tk/tn``).
+    ``None`` (no plan / no entry) keeps the tiling-policy defaults."""
+    if plan is None:
+        return None
+    t = plan.get(key)
+    if t is None:
+        return None
+    if hasattr(t, "co_tile"):
+        return t.co_tile
+    if hasattr(t, "tm"):
+        return (t.tm, t.tk, t.tn)
+    return (t.tk, t.tn)
+
+
 def _relu_fwd_mask4(y):
     """relu(y) + NHWC-packed 1-bit mask [N, H, W, ceil(C/8)]."""
     from repro.kernels.relu_mask.relu_mask import relu_fwd_pallas
@@ -138,11 +154,11 @@ def _gate_ref(g, mask4, method):
     return g2.reshape(g.shape)
 
 
-def _conv_block_fwd_res(x, w, b, method, do_relu, do_pool):
+def _conv_block_fwd_res(x, w, b, method, do_relu, do_pool, co_tile=None):
     """Pallas conv->relu->pool forward; residuals = packed masks only."""
     from repro.kernels.conv2d.conv2d import conv2d_pallas
     from repro.kernels.pool.pool import maxpool_fwd_pallas
-    y = conv2d_pallas(x, w) + b
+    y = conv2d_pallas(x, w, co_tile=co_tile) + b
     mask4 = idx = None
     if do_relu:
         if method == "deconvnet":          # Table II: no ReLU mask stored
@@ -154,29 +170,31 @@ def _conv_block_fwd_res(x, w, b, method, do_relu, do_pool):
     return y, (x, w, mask4, idx)
 
 
-def _conv_block_bwd_fused(w, mask4, idx, g, method, do_relu):
+def _conv_block_bwd_fused(w, mask4, idx, g, method, do_relu, co_tile=None):
     """The ONE-pallas_call backward step (also the seed-batched entry)."""
     from repro.kernels.conv2d import ref as conv_ref
     from repro.kernels.conv2d.conv2d import conv2d_bwd_fused_pallas
     return conv2d_bwd_fused_pallas(
         g, conv_ref.flip_transpose(w), pool_idx=idx,
-        relu_mask=mask4, gate=do_relu, method=method)
+        relu_mask=mask4, gate=do_relu, method=method, co_tile=co_tile)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _conv_block(x, w, b, method, do_relu, do_pool):
-    y, _ = _conv_block_fwd_res(x, w, b, method, do_relu, do_pool)
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _conv_block(x, w, b, method, do_relu, do_pool, fwd_tile, bwd_tile):
+    y, _ = _conv_block_fwd_res(x, w, b, method, do_relu, do_pool, fwd_tile)
     return y
 
 
-def _conv_block_vjp_fwd(x, w, b, method, do_relu, do_pool):
-    return _conv_block_fwd_res(x, w, b, method, do_relu, do_pool)
+def _conv_block_vjp_fwd(x, w, b, method, do_relu, do_pool, fwd_tile,
+                        bwd_tile):
+    return _conv_block_fwd_res(x, w, b, method, do_relu, do_pool, fwd_tile)
 
 
-def _conv_block_vjp_bwd(method, do_relu, do_pool, res, g):
+def _conv_block_vjp_bwd(method, do_relu, do_pool, fwd_tile, bwd_tile, res,
+                        g):
     x, w, mask4, idx = res
     # attribution hot path: unpool -> mask gate -> conv-BP, one pallas_call
-    dx = _conv_block_bwd_fused(w, mask4, idx, g, method, do_relu)
+    dx = _conv_block_bwd_fused(w, mask4, idx, g, method, do_relu, bwd_tile)
     # weight/bias grads (training only; DCE'd with x on the attribution path)
     from repro.kernels.conv2d import ref as conv_ref
     from repro.kernels.pool import ref as pool_ref
@@ -191,10 +209,11 @@ def _conv_block_vjp_bwd(method, do_relu, do_pool, res, g):
 _conv_block.defvjp(_conv_block_vjp_fwd, _conv_block_vjp_bwd)
 
 
-def _fc_block_fwd_res(x, w, b, method, do_relu):
+def _fc_block_fwd_res(x, w, b, method, do_relu, tile=None):
     from repro.kernels.relu_mask.relu_mask import relu_fwd_pallas
     from repro.kernels.vmm.vmm import vmm_pallas
-    y = vmm_pallas(x, w) + b
+    tm, tk, tn = tile if tile is not None else (None, None, None)
+    y = vmm_pallas(x, w, tm=tm, tk=tk, tn=tn) + b
     mask = None
     if do_relu:
         if method == "deconvnet":
@@ -204,25 +223,26 @@ def _fc_block_fwd_res(x, w, b, method, do_relu):
     return y, (x, w, mask)
 
 
-def _fc_block_bwd_fused(w, mask, g, method, do_relu):
+def _fc_block_bwd_fused(w, mask, g, method, do_relu, tile=None):
     from repro.kernels.vmm.vmm import vmm_bwd_fused_pallas
+    tk, tn = tile if tile is not None else (None, None)
     return vmm_bwd_fused_pallas(g, w.T, relu_mask=mask, gate=do_relu,
-                                method=method)
+                                method=method, tk=tk, tn=tn)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _fc_block(x, w, b, method, do_relu):
-    y, _ = _fc_block_fwd_res(x, w, b, method, do_relu)
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fc_block(x, w, b, method, do_relu, fwd_tile, bwd_tile):
+    y, _ = _fc_block_fwd_res(x, w, b, method, do_relu, fwd_tile)
     return y
 
 
-def _fc_block_vjp_fwd(x, w, b, method, do_relu):
-    return _fc_block_fwd_res(x, w, b, method, do_relu)
+def _fc_block_vjp_fwd(x, w, b, method, do_relu, fwd_tile, bwd_tile):
+    return _fc_block_fwd_res(x, w, b, method, do_relu, fwd_tile)
 
 
-def _fc_block_vjp_bwd(method, do_relu, res, g):
+def _fc_block_vjp_bwd(method, do_relu, fwd_tile, bwd_tile, res, g):
     x, w, mask = res
-    dx = _fc_block_bwd_fused(w, mask, g, method, do_relu)
+    dx = _fc_block_bwd_fused(w, mask, g, method, do_relu, bwd_tile)
     from repro.kernels.relu_mask import ref as relu_ref
     gg = relu_ref.relu_bwd(mask, g, method) if do_relu else g
     dw = jnp.einsum("mk,mn->kn", x, gg,
@@ -239,7 +259,8 @@ _fc_block.defvjp(_fc_block_vjp_fwd, _fc_block_vjp_bwd)
 # ---------------------------------------------------------------------------
 
 
-def _conv_block_fwd_res_fxp(xq, wq, bq, method, do_relu, do_pool):
+def _conv_block_fwd_res_fxp(xq, wq, bq, method, do_relu, do_pool,
+                            co_tile=None):
     """int16 conv->relu->pool forward; residuals = packed masks only.
 
     Same structure as :func:`_conv_block_fwd_res` but every tensor lives on
@@ -248,7 +269,7 @@ def _conv_block_fwd_res_fxp(xq, wq, bq, method, do_relu, do_pool):
     """
     from repro.kernels.conv2d.fxp import conv2d_fxp_pallas
     from repro.kernels.pool.fxp import maxpool_fwd_fxp
-    y = fixedpoint.sat_add(conv2d_fxp_pallas(xq, wq), bq)
+    y = fixedpoint.sat_add(conv2d_fxp_pallas(xq, wq, co_tile=co_tile), bq)
     mask4 = idx = None
     if do_relu:
         if method == "deconvnet":          # Table II: no ReLU mask stored
@@ -260,18 +281,20 @@ def _conv_block_fwd_res_fxp(xq, wq, bq, method, do_relu, do_pool):
     return y, (mask4, idx)
 
 
-def _conv_block_bwd_fused_fxp(wq, mask4, idx, gq, method, do_relu):
+def _conv_block_bwd_fused_fxp(wq, mask4, idx, gq, method, do_relu,
+                              co_tile=None):
     from repro.kernels.conv2d import ref as conv_ref
     from repro.kernels.conv2d.fxp import conv2d_bwd_fused_fxp_pallas
     return conv2d_bwd_fused_fxp_pallas(
         gq, conv_ref.flip_transpose(wq), pool_idx=idx,
-        relu_mask=mask4, gate=do_relu, method=method)
+        relu_mask=mask4, gate=do_relu, method=method, co_tile=co_tile)
 
 
-def _fc_block_fwd_res_fxp(xq, wq, bq, method, do_relu):
+def _fc_block_fwd_res_fxp(xq, wq, bq, method, do_relu, tile=None):
     from repro.kernels.relu_mask.relu_mask import relu_fwd_pallas
     from repro.kernels.vmm.fxp import vmm_fxp_pallas
-    y = fixedpoint.sat_add(vmm_fxp_pallas(xq, wq), bq)
+    tm, tk, tn = tile if tile is not None else (None, None, None)
+    y = fixedpoint.sat_add(vmm_fxp_pallas(xq, wq, tm=tm, tk=tk, tn=tn), bq)
     mask = None
     if do_relu:
         if method == "deconvnet":
@@ -281,26 +304,31 @@ def _fc_block_fwd_res_fxp(xq, wq, bq, method, do_relu):
     return y, mask
 
 
-def _fc_block_bwd_fused_fxp(wq, mask, gq, method, do_relu):
+def _fc_block_bwd_fused_fxp(wq, mask, gq, method, do_relu, tile=None):
     from repro.kernels.vmm.fxp import vmm_bwd_fused_fxp_pallas
+    tk, tn = tile if tile is not None else (None, None)
     return vmm_bwd_fused_fxp_pallas(gq, wq.T, relu_mask=mask, gate=do_relu,
-                                    method=method)
+                                    method=method, tk=tk, tn=tn)
 
 
-def _apply_fused(params, x, cfg: CNNConfig, method: str):
+def _apply_fused(params, x, cfg: CNNConfig, method: str, plan=None):
     for i, p in enumerate(params["conv"]):
         do_pool = (i + 1) % cfg.pool_every == 0
-        x = _conv_block(x, p["w"], p["b"], method, cfg.conv_relu, do_pool)
+        x = _conv_block(x, p["w"], p["b"], method, cfg.conv_relu, do_pool,
+                        _plan_tiles(plan, f"conv{i}.fwd"),
+                        _plan_tiles(plan, f"conv{i}.bwd"))
     x = x.reshape(x.shape[0], -1)
     n_fc = len(params["fc"])
     for i, p in enumerate(params["fc"]):
-        x = _fc_block(x, p["w"], p["b"], method, i < n_fc - 1)
+        x = _fc_block(x, p["w"], p["b"], method, i < n_fc - 1,
+                      _plan_tiles(plan, f"fc{i}.fwd"),
+                      _plan_tiles(plan, f"fc{i}.bwd"))
     return x
 
 
 def apply(params, x, cfg: CNNConfig, *, method: str = "autodiff",
           use_pallas: bool = False, fused: Optional[bool] = None,
-          precision: str = "f32"):
+          precision: str = "f32", plan=None):
     """Forward pass: [N, H, W, Cin] -> logits [N, num_classes].
 
     ``method`` selects the attribution backward rules (static, like the
@@ -316,6 +344,10 @@ def apply(params, x, cfg: CNNConfig, *, method: str = "autodiff",
     no lax reference twin), and the path is integer arithmetic so it
     cannot be ``jax.vjp``'d — attribution runs through the manual pair of
     :func:`seed_batched_attribution` instead.
+
+    ``plan`` is an optional ``repro.plan.TilePlan``: the fused Pallas
+    blocks run the planner's per-layer block shapes instead of the
+    tiling-policy defaults (the paper's per-target resource fitting).
     """
     if precision not in PRECISIONS:
         raise ValueError(f"precision={precision!r} not in {PRECISIONS}")
@@ -325,7 +357,7 @@ def apply(params, x, cfg: CNNConfig, *, method: str = "autodiff",
         # rule-invariant, so the logits are identical for every method and
         # the 1-bit/2-bit packing work is skipped entirely.
         logits, _ = forward_with_residuals(params, x, cfg, "deconvnet",
-                                           precision="fxp16")
+                                           precision="fxp16", plan=plan)
         return logits
     if precision == "bf16":
         params = jax.tree.map(lambda v: v.astype(jnp.bfloat16), params)
@@ -333,7 +365,7 @@ def apply(params, x, cfg: CNNConfig, *, method: str = "autodiff",
     if fused is None:
         fused = use_pallas and method != "autodiff"
     if fused:
-        return _apply_fused(params, x, cfg, method)
+        return _apply_fused(params, x, cfg, method, plan)
     if use_pallas:
         from repro.kernels.pool import ops as pool_ops
         from repro.kernels.relu_mask import ops as relu_ops
@@ -361,7 +393,7 @@ def apply(params, x, cfg: CNNConfig, *, method: str = "autodiff",
 
 
 def forward_with_residuals(params, x, cfg: CNNConfig, method: str,
-                           precision: str = "f32"):
+                           precision: str = "f32", plan=None):
     """Pallas forward that RETURNS the packed residuals (masks + indices).
 
     The residual set is exactly the paper's BRAM store: per conv layer a
@@ -381,14 +413,16 @@ def forward_with_residuals(params, x, cfg: CNNConfig, method: str,
         for i, p in enumerate(qp["conv"]):
             do_pool = (i + 1) % cfg.pool_every == 0
             xq, (mask4, idx) = _conv_block_fwd_res_fxp(
-                xq, p["w"], p["b"], method, cfg.conv_relu, do_pool)
+                xq, p["w"], p["b"], method, cfg.conv_relu, do_pool,
+                _plan_tiles(plan, f"conv{i}.fwd"))
             res_conv.append((mask4, idx))
         feat_shape = xq.shape[1:]
         xq = xq.reshape(xq.shape[0], -1)
         n_fc = len(qp["fc"])
         for i, p in enumerate(qp["fc"]):
             xq, mask = _fc_block_fwd_res_fxp(
-                xq, p["w"], p["b"], method, i < n_fc - 1)
+                xq, p["w"], p["b"], method, i < n_fc - 1,
+                _plan_tiles(plan, f"fc{i}.fwd"))
             res_fc.append(mask)
         return fixedpoint.from_fixed(xq), {
             "conv": res_conv, "fc": res_fc, "feat_shape": feat_shape}
@@ -399,20 +433,22 @@ def forward_with_residuals(params, x, cfg: CNNConfig, method: str,
     for i, p in enumerate(params["conv"]):
         do_pool = (i + 1) % cfg.pool_every == 0
         x, (_, _, mask4, idx) = _conv_block_fwd_res(
-            x, p["w"], p["b"], method, cfg.conv_relu, do_pool)
+            x, p["w"], p["b"], method, cfg.conv_relu, do_pool,
+            _plan_tiles(plan, f"conv{i}.fwd"))
         res_conv.append((mask4, idx))
     feat_shape = x.shape[1:]
     x = x.reshape(x.shape[0], -1)
     n_fc = len(params["fc"])
     for i, p in enumerate(params["fc"]):
         x, (_, _, mask) = _fc_block_fwd_res(
-            x, p["w"], p["b"], method, i < n_fc - 1)
+            x, p["w"], p["b"], method, i < n_fc - 1,
+            _plan_tiles(plan, f"fc{i}.fwd"))
         res_fc.append(mask)
     return x, {"conv": res_conv, "fc": res_fc, "feat_shape": feat_shape}
 
 
 def backward_seeds(params, residuals, seeds, cfg: CNNConfig, method: str,
-                   precision: str = "f32"):
+                   precision: str = "f32", plan=None):
     """Seed-batched BP: seeds [S, N, classes] -> relevance [S, N, H, W, Cin].
 
     One fused grid launch per layer for ALL S seeds — the seeds axis folds
@@ -431,13 +467,15 @@ def backward_seeds(params, residuals, seeds, cfg: CNNConfig, method: str,
         n_fc = len(qp["fc"])
         for i in reversed(range(n_fc)):
             g = _fc_block_bwd_fused_fxp(qp["fc"][i]["w"], residuals["fc"][i],
-                                        g, method, i < n_fc - 1)
+                                        g, method, i < n_fc - 1,
+                                        _plan_tiles(plan, f"fc{i}.bwd"))
         s, n = g.shape[:2]
         g = g.reshape((s, n) + tuple(residuals["feat_shape"]))
         for i in reversed(range(len(qp["conv"]))):
             mask4, idx = residuals["conv"][i]
             g = _conv_block_bwd_fused_fxp(qp["conv"][i]["w"], mask4, idx, g,
-                                          method, cfg.conv_relu)
+                                          method, cfg.conv_relu,
+                                          _plan_tiles(plan, f"conv{i}.bwd"))
         return fixedpoint.from_fixed(g) / fixedpoint.SEED_GAIN
     if precision == "bf16":
         params = jax.tree.map(lambda v: v.astype(jnp.bfloat16), params)
@@ -446,13 +484,15 @@ def backward_seeds(params, residuals, seeds, cfg: CNNConfig, method: str,
     n_fc = len(params["fc"])
     for i in reversed(range(n_fc)):
         g = _fc_block_bwd_fused(params["fc"][i]["w"], residuals["fc"][i], g,
-                                method, i < n_fc - 1)
+                                method, i < n_fc - 1,
+                                _plan_tiles(plan, f"fc{i}.bwd"))
     s, n = g.shape[:2]
     g = g.reshape((s, n) + tuple(residuals["feat_shape"]))
     for i in reversed(range(len(params["conv"]))):
         mask4, idx = residuals["conv"][i]
         g = _conv_block_bwd_fused(params["conv"][i]["w"], mask4, idx, g,
-                                  method, cfg.conv_relu)
+                                  method, cfg.conv_relu,
+                                  _plan_tiles(plan, f"conv{i}.bwd"))
     return g
 
 

@@ -1,0 +1,52 @@
+"""repro.plan — resource-aware tile planner & autotuner for Pallas kernels.
+
+The paper's central HLS contribution is configurable tile-based computation
+that *maximally uses on-chip resources while adhering to resource
+constraints*: its resource model sizes BRAM tiles per layer, per FPGA
+target.  This package is that design point as a software subsystem:
+
+  * :mod:`repro.plan.profiles` — :class:`DeviceProfile` resource envelopes
+    (VMEM budget, sublane/lane/MXU geometry, HBM bandwidth), with a
+    detected default plus constrained edge budgets mirroring the paper's
+    FPGA targets;
+  * :mod:`repro.plan.model` — the analytic footprint/cost model per kernel
+    family (conv2d im2col, fused BP, vmm, pool; f32/bf16/fxp16): VMEM bytes
+    of every in/out/scratch block, HBM traffic, and MXU utilization as a
+    function of candidate tile shapes — candidates that exceed the profile
+    budget are rejected (the paper's "resource overhead" analysis, in code);
+  * :mod:`repro.plan.planner` — enumerate legal aligned candidates
+    (sublane-/lane-aligned pow2s), rank by the cost model, optionally
+    refine by measured timing (``autotune=True``), return a
+    :class:`TilePlan` mapping each layer/kernel to its block shapes;
+  * :mod:`repro.plan.cache` — persistent JSON tuning cache keyed by
+    (kernel, shapes, dtype, precision, device) so repeated builds replan in
+    microseconds.
+
+Plans thread end-to-end through ``EngineSpec(device=..., autotune=...)`` —
+:func:`repro.engine.build` plans before compiling, and every kernel wrapper
+in :mod:`repro.kernels` consumes the planned block shapes::
+
+    eng = build(EngineSpec(model=CNNModel(params, cfg),
+                           device="edge-small", autotune=True))
+    eng.plan            # the TilePlan the compiled programs run under
+"""
+from repro.plan.cache import TuningCache, cache_key, default_cache_path
+from repro.plan.model import (Footprint, conv2d_bwd_footprint,
+                              conv2d_fwd_footprint, pool_footprint,
+                              vmm_bwd_footprint, vmm_fwd_footprint)
+from repro.plan.planner import (ConvTile, InfeasiblePlanError, TilePlan,
+                                VmmBwdTile, VmmTile, cnn_kernel_shapes,
+                                cnn_plan_footprints, plan_cnn, plan_conv2d,
+                                plan_vmm)
+from repro.plan.profiles import (PROFILES, DeviceProfile, detect,
+                                 get_profile, profile_names)
+
+__all__ = [
+    "ConvTile", "DeviceProfile", "Footprint", "InfeasiblePlanError",
+    "PROFILES", "TilePlan", "TuningCache", "VmmBwdTile", "VmmTile",
+    "cache_key", "cnn_kernel_shapes", "cnn_plan_footprints",
+    "conv2d_bwd_footprint", "conv2d_fwd_footprint", "default_cache_path",
+    "detect", "get_profile", "plan_cnn", "plan_conv2d", "plan_vmm",
+    "pool_footprint", "profile_names", "vmm_bwd_footprint",
+    "vmm_fwd_footprint",
+]

@@ -1,0 +1,116 @@
+"""Persistent JSON tuning cache for the tile planner.
+
+Planning is analytic and cheap, but autotuned plans measure real kernel
+timings — worth doing once per (kernel, shapes, dtype, precision, device)
+and never again.  The cache is a single JSON file (human-diffable, CI
+artifact-able): ``{key: {"tile": [...], "family": ..., "measured_us": ...,
+"planned_at": ...}}``.
+
+Location: ``$REPRO_PLAN_CACHE`` if set, else
+``~/.cache/repro/tileplans.json``.  Writes are atomic (tmp + rename);
+corrupt or missing files read as empty.  ``hits``/``misses`` counters let
+callers (tests, the CI autotune smoke) assert a warm build is a 100% cache
+hit and replans without re-measuring.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Sequence
+
+_ENV_VAR = "REPRO_PLAN_CACHE"
+
+
+def default_cache_path() -> str:
+    """``$REPRO_PLAN_CACHE`` or ``~/.cache/repro/tileplans.json``."""
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return os.path.expanduser(env)
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "tileplans.json")
+
+
+def cache_key(family: str, shapes: Sequence[int], dtype: str,
+              precision: str, device: str) -> str:
+    """The tuning-cache key: kernel family + every shape dim that reaches
+    the tiling policy + numeric contract + planning target."""
+    dims = "x".join(str(int(d)) for d in shapes)
+    return f"{family}|{dims}|{dtype}|{precision}|{device}"
+
+
+class TuningCache:
+    """Lazy-loading, write-through JSON store of planned/measured tiles."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self._data: Optional[Dict[str, Any]] = None
+        self.hits = 0
+        self.misses = 0
+
+    # -- storage -------------------------------------------------------------
+
+    @property
+    def data(self) -> Dict[str, Any]:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    loaded = json.load(f)
+                self._data = loaded if isinstance(loaded, dict) else {}
+            except (OSError, ValueError):
+                self._data = {}
+        return self._data
+
+    def _flush(self) -> None:
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- the lookup contract -------------------------------------------------
+
+    def lookup(self, key: str, *,
+               require_measured: bool = False) -> Optional[Dict[str, Any]]:
+        """Entry for ``key`` (counted as a hit), or None (a miss).
+
+        ``require_measured=True`` treats an entry without a recorded
+        ``measured_us`` as a miss — an analytic-only entry must not
+        suppress a later autotuned (measuring) plan of the same key.
+        """
+        entry = self.data.get(key)
+        if entry is None or (require_measured
+                             and entry.get("measured_us") is None):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return entry
+
+    def store(self, key: str, entry: Dict[str, Any]) -> None:
+        """Write-through insert: the JSON file is updated immediately."""
+        self.data[key] = entry
+        self._flush()
+
+    def reset_counters(self) -> None:
+        self.hits = 0
+        self.misses = 0
+
+    def clear(self) -> None:
+        """Drop every entry (and the file's contents)."""
+        self._data = {}
+        self._flush()
+
+    def __len__(self) -> int:
+        return len(self.data)
+
+    def __repr__(self):
+        return (f"<TuningCache {self.path!r} entries={len(self)} "
+                f"hits={self.hits} misses={self.misses}>")

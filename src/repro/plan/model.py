@@ -1,0 +1,209 @@
+"""Analytic footprint/cost model per Pallas kernel family.
+
+The paper's Table-style resource analysis, in code: for a candidate tile
+shape, how many on-chip bytes does ONE grid cell of the kernel hold
+(input/output blocks, packed residual blocks, accumulator scratch, and the
+im2col patch matrix the conv kernels materialize in VMEM), how many HBM
+bytes does the whole call move, and what fraction of the MAC array do the
+dot shapes occupy.  The planner rejects any candidate whose
+:attr:`Footprint.vmem_bytes` exceeds the profile budget and ranks the rest
+by :meth:`Footprint.est_time_s` — a two-term roofline
+(max of compute time at the utilization-derated peak and memory time at the
+profile bandwidth).
+
+Every formula mirrors the corresponding wrapper in :mod:`repro.kernels`
+exactly — same padding helpers, same blocks — so "analytic footprint fits"
+is a statement about the real kernel, not an idealization.
+
+dtype widths: f32 -> 4 B operands / f32 accumulator; bf16 -> 2 B / f32;
+fxp16 (true int16, paper §IV) -> 2 B / int32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.kernels.tiling import (BITS_PER_BYTE, CRUMBS_PER_BYTE, SUBLANE,
+                                  align_up, cout_tiling, vmm_tiling)
+
+#: operand element bytes per precision.
+ELT_BYTES = {"f32": 4, "bf16": 2, "fxp16": 2}
+#: accumulator element bytes (f32 for floats, int32 for fxp16).
+ACC_BYTES = {"f32": 4, "bf16": 4, "fxp16": 4}
+
+
+def _elt(precision: str) -> int:
+    try:
+        return ELT_BYTES[precision]
+    except KeyError:
+        raise ValueError(f"precision={precision!r} not in "
+                         f"{tuple(ELT_BYTES)}") from None
+
+
+@dataclass(frozen=True)
+class Footprint:
+    """Resource usage of one kernel call under a candidate tile shape."""
+
+    #: peak on-chip bytes of ONE grid cell (blocks + scratch).
+    vmem_bytes: int
+    #: total HBM bytes moved by the whole call (all grid cells).
+    hbm_bytes: int
+    #: total MACs * 2 of the padded computation.
+    flops: int
+    #: fraction of the MAC array the tile's dot shapes occupy (0..1].
+    mxu_util: float
+
+    def fits(self, profile) -> bool:
+        """Does one grid cell fit the profile's on-chip budget?"""
+        return self.vmem_bytes <= profile.vmem_bytes
+
+    def est_time_s(self, profile) -> float:
+        """Two-term roofline estimate: compute at the derated peak vs
+        HBM traffic at the profile bandwidth."""
+        compute = self.flops / (profile.mxu_tflops * 1e12
+                                * max(self.mxu_util, 1e-3))
+        memory = self.hbm_bytes / (profile.hbm_gbps * 1e9)
+        return max(compute, memory)
+
+
+def _dot_util(sub_rows: int, depth: int, lanes: int, mxu: int) -> float:
+    """MAC-array occupancy proxy of an [R, D] @ [D, L] tile dot."""
+    return (min(1.0, sub_rows / mxu) * min(1.0, depth / mxu)
+            * min(1.0, lanes / mxu))
+
+
+# ---------------------------------------------------------------------------
+# conv2d family (single-dot im2col; repro.kernels.conv2d)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_fwd_footprint(n: int, h: int, w: int, k: int, cin: int,
+                         cout: int, co_tile: int, precision: str = "f32",
+                         mxu: int = 128) -> Footprint:
+    """One (batch, cout-tile) grid cell of :func:`conv2d_pallas`.
+
+    VMEM: padded input block + weight block + the [H*W, K*K*Cin] im2col
+    patch matrix gathered in VMEM + the f32/int32 accumulator + the output
+    block.  HBM: the input block reloads once per cout tile.
+    """
+    elt, acc = _elt(precision), ACC_BYTES[precision]
+    p = (k - 1) // 2
+    cin_p = align_up(cin, SUBLANE)
+    tco, cout_p = cout_tiling(cout, co_tile)
+    x_blk = (h + 2 * p) * (w + 2 * p) * cin_p * elt
+    w_blk = k * k * cin_p * tco * elt
+    patches = h * w * k * k * cin_p * elt
+    acc_blk = h * w * tco * acc
+    out_blk = h * w * tco * elt
+    tiles = cout_p // tco
+    return Footprint(
+        vmem_bytes=x_blk + w_blk + patches + acc_blk + out_blk,
+        hbm_bytes=n * tiles * (x_blk + w_blk) + n * h * w * cout_p * elt,
+        flops=2 * n * h * w * k * k * cin_p * cout_p,
+        mxu_util=_dot_util(h * w, k * k * cin_p, tco, mxu))
+
+
+def conv2d_bwd_footprint(s: int, n: int, hg: int, wg: int, k: int, c: int,
+                         cout: int, co_tile: int, *, pooled: bool,
+                         gated: bool = True, precision: str = "f32",
+                         mxu: int = 128) -> Footprint:
+    """One grid cell of the FUSED conv backward
+    (:func:`conv2d_bwd_fused_pallas`): unpool + mask-gate prologues and the
+    flipped-transpose single-dot BP in one call.
+
+    ``s`` seeds share the cell (the seeds axis folds into the sublane dim);
+    ``c`` is the contraction channel count (the forward Cout), ``cout`` the
+    outgoing channels (the forward Cin).  ``hg/wg`` are the INCOMING
+    gradient's spatial dims (post-pool when ``pooled``).
+    """
+    elt, acc = _elt(precision), ACC_BYTES[precision]
+    p = (k - 1) // 2
+    cp = align_up(c, SUBLANE)
+    tco, cout_p = cout_tiling(cout, co_tile)
+    h, w = (2 * hg, 2 * wg) if pooled else (hg, wg)
+    g_blk = s * hg * wg * cp * elt
+    w_blk = k * k * cp * tco * elt
+    idx_blk = hg * wg * cp // CRUMBS_PER_BYTE if pooled else 0
+    mask_blk = h * w * cp // BITS_PER_BYTE if gated else 0
+    # in-kernel scratch: the halo-padded gradient + the im2col patch matrix
+    gp_blk = s * (h + 2 * p) * (w + 2 * p) * cp * elt
+    patches = s * h * w * k * k * cp * elt
+    acc_blk = s * h * w * tco * acc
+    out_blk = s * h * w * tco * elt
+    tiles = cout_p // tco
+    loads = g_blk + w_blk + idx_blk + mask_blk
+    return Footprint(
+        vmem_bytes=(g_blk + w_blk + idx_blk + mask_blk + gp_blk + patches
+                    + acc_blk + out_blk),
+        hbm_bytes=n * tiles * loads + s * n * h * w * cout_p * elt,
+        flops=2 * s * n * h * w * k * k * cp * cout_p,
+        mxu_util=_dot_util(s * h * w, k * k * cp, tco, mxu))
+
+
+# ---------------------------------------------------------------------------
+# vmm family (tiled FC matmul; repro.kernels.vmm)
+# ---------------------------------------------------------------------------
+
+
+def vmm_fwd_footprint(m: int, k: int, n: int, tm: int, tk: int, tn: int,
+                      precision: str = "f32", mxu: int = 128) -> Footprint:
+    """One (M, N, K-step) grid cell of :func:`vmm_pallas`: x/w blocks, the
+    output-stationary accumulator scratch, and the output block."""
+    elt, acc = _elt(precision), ACC_BYTES[precision]
+    tm_, tk_, tn_, mp, kp, np_ = vmm_tiling(m, k, n, tm, tk, tn)
+    x_blk = tm_ * tk_ * elt
+    w_blk = tk_ * tn_ * elt
+    acc_blk = tm_ * tn_ * acc
+    out_blk = tm_ * tn_ * elt
+    cells = (mp // tm_) * (np_ // tn_) * (kp // tk_)
+    return Footprint(
+        vmem_bytes=x_blk + w_blk + acc_blk + out_blk,
+        hbm_bytes=cells * (x_blk + w_blk) + mp * np_ * elt,
+        flops=2 * mp * kp * np_,
+        mxu_util=_dot_util(tm_, tk_, tn_, mxu))
+
+
+def vmm_bwd_footprint(s: int, m: int, k: int, n: int, tk: int, tn: int, *,
+                      gated: bool = True, out_gated: bool = False,
+                      precision: str = "f32", mxu: int = 128) -> Footprint:
+    """One grid cell of the FUSED FC backward
+    (:func:`vmm_bwd_fused_pallas`): the full sublane-padded M rows ride
+    each cell (seeds on the grid), mask unpack + gating fused in."""
+    elt, acc = _elt(precision), ACC_BYTES[precision]
+    _, tk_, tn_, mp, kp, np_ = vmm_tiling(m, k, n, m, tk, tn)
+    g_blk = mp * tk_ * elt
+    w_blk = tk_ * tn_ * elt
+    mask_blk = mp * tk_ // BITS_PER_BYTE if gated else 0
+    omask_blk = mp * tn_ // BITS_PER_BYTE if out_gated else 0
+    acc_blk = mp * tn_ * acc
+    out_blk = mp * tn_ * elt
+    cells = s * (np_ // tn_) * (kp // tk_)
+    loads = g_blk + w_blk + mask_blk + omask_blk
+    return Footprint(
+        vmem_bytes=g_blk + w_blk + mask_blk + omask_blk + acc_blk + out_blk,
+        hbm_bytes=cells * loads + s * mp * np_ * elt,
+        flops=2 * s * mp * kp * np_,
+        mxu_util=_dot_util(mp, tk_, tn_, mxu))
+
+
+# ---------------------------------------------------------------------------
+# pool family (no tile knobs — budget check only)
+# ---------------------------------------------------------------------------
+
+
+def pool_footprint(n: int, h: int, w: int, c: int,
+                   precision: str = "f32") -> Footprint:
+    """One batch cell of :func:`maxpool_fwd_pallas`: feature map in, pooled
+    map + packed 2-bit indices out.  No tile knobs — reported so a plan's
+    budget audit covers every kernel the layer stack launches."""
+    elt = _elt(precision)
+    cp = align_up(c, CRUMBS_PER_BYTE)
+    x_blk = h * w * cp * elt
+    y_blk = (h // 2) * (w // 2) * cp * elt
+    idx_blk = (h // 2) * (w // 2) * cp // CRUMBS_PER_BYTE
+    # the four strided window candidate views materialized for the select
+    cand_blk = 4 * y_blk
+    return Footprint(
+        vmem_bytes=x_blk + cand_blk + y_blk + idx_blk,
+        hbm_bytes=n * (x_blk + y_blk + idx_blk),
+        flops=0,
+        mxu_util=1.0)

@@ -1,0 +1,99 @@
+"""DeviceProfile — the resource envelope the planner fits tiles into.
+
+The paper sizes its BRAM tiles per FPGA target; here the same role is a
+frozen dataclass: an on-chip (VMEM) byte budget, the vector-unit geometry
+every block shape must align to, and the bandwidth/compute peaks the cost
+model converts footprints into time with.
+
+Profiles:
+
+  * ``detected`` — the host we are actually on (TPU: a full ~16 MB/core
+    VMEM; CPU interpret mode adopts the same budget so plans are portable).
+  * ``tpu-v4``   — an explicit full-size TPU core target.
+  * ``edge-large`` / ``edge-small`` / ``edge-tiny`` — constrained 4/2/1 MB
+    on-chip budgets mirroring the paper's edge-FPGA deployment points
+    (large/mid ZU+ class parts down to a small Artix-class part), with
+    proportionally scaled bandwidth and MAC-array peaks.  Under these the
+    planner must split work the default profile keeps whole.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from repro.kernels.tiling import LANE, SUBLANE
+
+MB = 1 << 20
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """A planning target: alignment geometry + resource budget + peaks."""
+
+    name: str
+    #: on-chip working-set budget every kernel invocation must fit (bytes).
+    vmem_bytes: int
+    #: second-to-last block-dim multiple (f32 VPU rows).
+    sublane: int = SUBLANE
+    #: last block-dim multiple (VPU lanes / MXU edge).
+    lane: int = LANE
+    #: MXU/MAC-array edge — tiles at or above this saturate the array.
+    mxu: int = 128
+    #: DRAM/HBM bandwidth the cost model charges traffic against (GB/s).
+    hbm_gbps: float = 100.0
+    #: peak MAC throughput at full utilization (TFLOP/s).
+    mxu_tflops: float = 10.0
+
+    def __post_init__(self):
+        if self.vmem_bytes <= 0:
+            raise ValueError(f"vmem_bytes must be positive, got "
+                             f"{self.vmem_bytes}")
+
+
+PROFILES: Dict[str, DeviceProfile] = {
+    p.name: p for p in (
+        DeviceProfile("tpu-v4", vmem_bytes=16 * MB, mxu=128,
+                      hbm_gbps=1200.0, mxu_tflops=137.5),
+        # Paper-style edge targets: small on-chip budgets, narrow MAC
+        # arrays, DDR-class bandwidth.
+        DeviceProfile("edge-large", vmem_bytes=4 * MB, mxu=64,
+                      hbm_gbps=25.6, mxu_tflops=1.0),
+        DeviceProfile("edge-small", vmem_bytes=2 * MB, mxu=32,
+                      hbm_gbps=12.8, mxu_tflops=0.5),
+        DeviceProfile("edge-tiny", vmem_bytes=1 * MB, mxu=16,
+                      hbm_gbps=6.4, mxu_tflops=0.25),
+    )
+}
+
+
+def detect() -> DeviceProfile:
+    """The profile of the host backend.
+
+    On a real TPU this is the full-core envelope; everywhere else the
+    kernels run in interpret mode, and the planner adopts the same 16 MB
+    budget so a plan made on the CPU harness is the plan the TPU runs.
+    """
+    import jax
+    if jax.default_backend() == "tpu":
+        return PROFILES["tpu-v4"]
+    return DeviceProfile("detected", vmem_bytes=16 * MB, mxu=128,
+                         hbm_gbps=1200.0, mxu_tflops=137.5)
+
+
+def profile_names() -> Tuple[str, ...]:
+    """Names accepted by :func:`get_profile` / ``EngineSpec(device=...)``."""
+    return ("detected",) + tuple(PROFILES)
+
+
+def get_profile(name) -> DeviceProfile:
+    """Resolve a profile by name (``None``/"detected" -> :func:`detect`),
+    or pass a :class:`DeviceProfile` through unchanged."""
+    if isinstance(name, DeviceProfile):
+        return name
+    if name is None or name == "detected":
+        return detect()
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise ValueError(f"unknown device profile {name!r}; "
+                         f"choose from {profile_names()}") from None

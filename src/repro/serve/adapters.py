@@ -66,7 +66,8 @@ class CNNAdapter:
     input_kind = "image"
 
     def __init__(self, params, cfg: cnn.CNNConfig, *,
-                 store_rules: str = "saliency", precision: str = "f32"):
+                 store_rules: str = "saliency", precision: str = "f32",
+                 device: str = None, autotune: bool = False):
         if precision not in cnn.PRECISIONS:
             raise ValueError(
                 f"precision={precision!r} not in {cnn.PRECISIONS}")
@@ -78,9 +79,12 @@ class CNNAdapter:
         # explain (hit, cold pure-BP, or composite via the engine's manual
         # ``backward``) replays the fused BP in int16.
         self.precision = precision
+        # ``device`` names a repro.plan profile: every engine this adapter
+        # builds (and its per-rule siblings, via replace()) serves with
+        # tile shapes planned for that resource budget.
         self.engine = engine_lib.build(engine_lib.EngineSpec(
             model=engine_lib.CNNModel(params, cfg), method=store_rules,
-            precision=precision))
+            precision=precision, device=device, autotune=autotune))
         self._engines: Dict[str, engine_lib.Engine] = {store_rules: self.engine}
 
     @classmethod

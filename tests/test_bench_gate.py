@@ -1,0 +1,48 @@
+"""benchmarks/report.py --check: the >15% latency regression gate."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_report",
+    os.path.join(os.path.dirname(__file__), "..", "benchmarks", "report.py"))
+report = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(report)
+
+
+def _write(tmp_path, name, rows):
+    path = tmp_path / name
+    with open(path, "w") as f:
+        json.dump({"date": name, "suites": {"kernels": rows}}, f)
+    return path
+
+
+def test_check_needs_two_snapshots(tmp_path):
+    assert report.check(str(tmp_path)) == 0
+    _write(tmp_path, "BENCH_2026-07-30.json", [["kernel/a_us", 1.0, "d"]])
+    assert report.check(str(tmp_path)) == 0
+
+
+@pytest.mark.parametrize("new_val,threshold,rc", [
+    (100.0, 0.15, 0),          # flat
+    (114.0, 0.15, 0),          # within tolerance
+    (116.0, 0.15, 1),          # >15% -> regression
+    (160.0, 0.70, 0),          # custom threshold
+    (60.0, 0.15, 0),           # improvement never fails
+])
+def test_check_thresholds(tmp_path, new_val, threshold, rc):
+    _write(tmp_path, "BENCH_2026-07-29.json",
+           [["kernel/a_us", 100.0, "d"], ["kernel/other", 5.0, "d"]])
+    _write(tmp_path, "BENCH_2026-07-30.json",
+           [["kernel/a_us", new_val, "d"]])
+    assert report.check(str(tmp_path), threshold) == rc
+
+
+def test_check_ignores_non_latency_and_nan_rows(tmp_path):
+    _write(tmp_path, "BENCH_2026-07-29.json",
+           [["kernel/a_us", float("nan"), "d"], ["suite/bytes", 10.0, "d"]])
+    _write(tmp_path, "BENCH_2026-07-30.json",
+           [["kernel/a_us", 99.0, "d"], ["suite/bytes", 99999.0, "d"]])
+    assert report.check(str(tmp_path)) == 0

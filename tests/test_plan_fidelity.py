@@ -1,0 +1,132 @@
+"""Planned-tile fidelity: planned block shapes must not move a single bit.
+
+Tile shapes are a pure dataflow/scheduling choice: the contraction of every
+kernel is unchanged (conv tiles split Cout only; the K split stays within
+one accumulation step at these shapes), so heatmaps under a planned
+``TilePlan`` must be BITWISE identical to the default-tile heatmaps — for
+f32 and the true-int16 fxp16 path, across all three rule sets.  Per the
+conftest convention these are same-program jit-vs-jit comparisons (both
+sides jitted the same way, only the plan differs).
+
+Also covers the engine integration acceptance: ``build(EngineSpec(
+device="edge-small"))`` resolves a plan whose analytic footprint fits the
+constrained budget, serves bit-identical explanations, and sibling specs
+share/rebuild engines correctly with the plan in the spec key.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine as engine_lib
+from repro.models import cnn
+from repro.plan import cnn_plan_footprints, get_profile, plan_cnn
+
+CFG = cnn.CNNConfig(in_hw=(8, 8), in_ch=3, channels=(4, 4), kernel=3,
+                    fc=(16,), num_classes=4)
+METHODS = ("saliency", "deconvnet", "guided")
+PRECISIONS = ("f32", "fxp16")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return cnn.init(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_planned_heatmaps_bitwise_equal_default(params, x, method,
+                                                precision):
+    model = engine_lib.CNNModel(params, CFG)
+    plan = plan_cnn(CFG, device="detected", precision=precision, batch=2)
+    fwd_d, bwd_d = model.pair(method, precision)
+    fwd_p, bwd_p = model.pair(method, precision, plan=plan)
+
+    logits_d, res_d = jax.jit(fwd_d)(x)
+    logits_p, res_p = jax.jit(fwd_p)(x)
+    np.testing.assert_array_equal(np.asarray(logits_d),
+                                  np.asarray(logits_p))
+    seeds = jax.nn.one_hot(jnp.argmax(logits_d, axis=-1),
+                           CFG.num_classes)[None]
+    rel_d = jax.jit(bwd_d)(res_d, seeds)
+    rel_p = jax.jit(bwd_p)(res_p, seeds)
+    assert rel_d.dtype == rel_p.dtype and rel_d.shape == rel_p.shape
+    np.testing.assert_array_equal(
+        np.asarray(rel_d), np.asarray(rel_p),
+        err_msg=f"{method}/{precision}: planned tiles drifted from the "
+                f"default-tile heatmap — a tile choice changed numerics")
+
+
+@pytest.mark.parametrize("device", ["edge-small", "edge-large"])
+def test_engine_device_plan_fits_budget_and_matches(params, x, device):
+    engine_lib.clear_cache()
+    profile = get_profile(device)
+    base = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.CNNModel(params, CFG)))
+    eng = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.CNNModel(params, CFG), device=device))
+    assert base.plan is None and eng.plan is not None
+    assert eng.plan.device == profile.name
+    fps = cnn_plan_footprints(CFG, eng.plan, profile=profile, batch=2)
+    assert all(fp.fits(profile) for fp in fps.values())
+
+    l0, r0 = base.explain(x)
+    l1, r1 = eng.explain(x)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+
+
+def test_device_specs_memoize_like_any_field(params):
+    engine_lib.clear_cache()
+    model = engine_lib.CNNModel(params, CFG)
+    a = engine_lib.build(engine_lib.EngineSpec(model=model,
+                                               device="edge-small"))
+    b = engine_lib.build(engine_lib.EngineSpec(model=model,
+                                               device="edge-small"))
+    c = engine_lib.build(engine_lib.EngineSpec(model=model))
+    assert a is b and a is not c                  # device is a spec key
+
+    # an explicit pre-built plan is equivalent to the device that made it
+    plan = a.plan
+    d = engine_lib.build(engine_lib.EngineSpec(model=model, plan=plan))
+    assert d.plan == a.plan
+
+
+def test_fxp16_engine_runs_planned_int16_end_to_end(params, x):
+    engine_lib.clear_cache()
+    base = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.CNNModel(params, CFG), precision="fxp16"))
+    eng = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.CNNModel(params, CFG), precision="fxp16",
+        device="edge-small"))
+    l0, r0 = base.explain(x)
+    l1, r1 = eng.explain(x)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+
+
+def test_serve_adapter_threads_device_plan(params, x):
+    from repro.serve import CNNAdapter
+    engine_lib.clear_cache()
+    ad = CNNAdapter(params, CFG, device="edge-small")
+    assert ad.engine.plan is not None
+    # per-rule sibling engines (replace(spec, method=...)) keep the device
+    guided = ad.engine_for("guided")
+    assert guided.spec.device == "edge-small" and guided.plan is not None
+    logits, res = ad.predict(x)
+    seeds = jax.nn.one_hot(jnp.argmax(logits, axis=-1),
+                           CFG.num_classes)[None]
+    rel = ad.explain_cached("guided", res, seeds)
+    # hit path == cold path, bitwise, under the planned tiles
+    default = CNNAdapter(params, CFG)
+    l2, res2 = default.predict(x)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(l2))
+    np.testing.assert_array_equal(
+        np.asarray(rel),
+        np.asarray(default.explain_cached("guided", res2, seeds)))
