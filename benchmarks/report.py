@@ -7,8 +7,10 @@ prints markdown to stdout; the checked-in EXPERIMENTS.md embeds its output.
     PYTHONPATH=src python -m benchmarks.report --check
 compares the two newest ``benchmarks/results/BENCH_*.json`` snapshots
 (written by ``benchmarks/run.py``) row by row and exits nonzero when any
-``*_us`` latency regressed by more than ``--threshold`` (default 15%) —
-the bench trajectory's tripwire for planned-vs-default tile drift.
+``*_us`` latency regressed by more than ``--threshold`` (default 15%) or
+any ``*_shed_rate`` row of the load-replay suite rose past the relative
+threshold plus a 1%-absolute floor — the bench trajectory's tripwire for
+planned-vs-default tile drift AND admission-policy drift.
 """
 from __future__ import annotations
 
@@ -112,6 +114,19 @@ def _latency_rows(bench: dict) -> dict:
     return out
 
 
+def _shed_rows(bench: dict) -> dict:
+    """{row_name: rate} for every ``*_shed_rate`` row (0 is meaningful —
+    a nominal trace SHOULD shed nothing, so zeros are kept, unlike the
+    latency rows where 0 means 'not measured')."""
+    out = {}
+    for rows in bench.get("suites", {}).values():
+        for name, val, _derived in rows:
+            if name.endswith("_shed_rate") and isinstance(val, (int, float)) \
+                    and math.isfinite(val) and val >= 0:
+                out[name] = float(val)
+    return out
+
+
 def check(results_dir: str = "benchmarks/results",
           threshold: float = 0.15) -> int:
     """Compare the two newest BENCH_*.json; nonzero on >threshold latency
@@ -123,12 +138,15 @@ def check(results_dir: str = "benchmarks/results",
         return 0
     old_path, new_path = paths[-2], paths[-1]
     with open(old_path) as f:
-        old = _latency_rows(json.load(f))
+        old_bench = json.load(f)
     with open(new_path) as f:
-        new = _latency_rows(json.load(f))
+        new_bench = json.load(f)
+    old, new = _latency_rows(old_bench), _latency_rows(new_bench)
+    old_shed, new_shed = _shed_rows(old_bench), _shed_rows(new_bench)
     print(f"[report --check] {os.path.basename(old_path)} -> "
           f"{os.path.basename(new_path)}: {len(old.keys() & new.keys())} "
-          f"shared latency rows, threshold +{threshold:.0%}")
+          f"shared latency rows + {len(old_shed.keys() & new_shed.keys())} "
+          f"shed-rate rows, threshold +{threshold:.0%}")
     regressions = []
     for name in sorted(old.keys() & new.keys()):
         ratio = new[name] / old[name]
@@ -138,11 +156,23 @@ def check(results_dir: str = "benchmarks/results",
                   f"({ratio:5.2f}x){flag}")
         if flag:
             regressions.append(name)
+    # shed rates gate with an absolute floor on top of the relative
+    # threshold: 0.00 -> 0.005 is noise, not a 'infinite-ratio' regression,
+    # but any jump past (old * (1+threshold) + 0.01) means the admission
+    # policy got measurably more trigger-happy on the same trace.
+    for name in sorted(old_shed.keys() & new_shed.keys()):
+        limit = old_shed[name] * (1 + threshold) + 0.01
+        flag = " REGRESSION" if new_shed[name] > limit else ""
+        if flag or abs(new_shed[name] - old_shed[name]) > 0.005:
+            print(f"  {name:44s} {old_shed[name]:10.4f} -> "
+                  f"{new_shed[name]:10.4f} (limit {limit:.4f}){flag}")
+        if flag:
+            regressions.append(name)
     if regressions:
         print(f"[report --check] FAIL: {len(regressions)} rows regressed "
               f">{threshold:.0%}: {regressions}")
         return 1
-    print("[report --check] OK: no latency regressions")
+    print("[report --check] OK: no latency or shed-rate regressions")
     return 0
 
 

@@ -7,6 +7,7 @@
 #   kernels              — paper §III compute blocks (conv/VMM/ReLU/pool)
 #   attribution_serving  — 'real-time XAI' at LM scale (decode vs explain)
 #   serving_queue        — repro.serve queue: p50/p99, cache hits, occupancy
+#   load_replay          — O(100k)-request SLO replay: p99/shed-rate gates
 #   roofline             — §Roofline terms from the dry-run artifacts
 from __future__ import annotations
 
@@ -18,13 +19,15 @@ import traceback
 
 def main() -> None:
     from benchmarks import (attribution_serving, compression, fp_bp_overhead,
-                            kernels, memory_overhead, roofline, serving_queue)
+                            kernels, load_replay, memory_overhead, roofline,
+                            serving_queue)
     suites = [
         ("memory_overhead", memory_overhead.run),
         ("fp_bp_overhead", fp_bp_overhead.run),
         ("kernels", kernels.run),
         ("attribution_serving", attribution_serving.run),
         ("serving_queue", serving_queue.run),
+        ("load_replay", load_replay.run_bench),
         ("compression", compression.run),
         ("roofline", roofline.run),
     ]

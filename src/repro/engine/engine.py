@@ -52,6 +52,9 @@ class Engine:
             return
         self._token_step = None
         self._fused_explain: Dict[Tuple[bool, Optional[int]], Any] = {}
+        # folded-batch audit decisions (composite methods): folded M ->
+        # engine to dispatch through (self when the plan still fits)
+        self._fold_engines: Dict[int, "Engine"] = {}
         # Resource-aware tile planning happens HERE, before any compile —
         # the paper's design-time tile sizing: every kernel of the pair and
         # of the rule-bound logits program runs the planned block shapes.
@@ -194,17 +197,23 @@ class Engine:
 
     def ig(self, x, *, steps: int = 16, baseline=None, target=None,
            batched: bool = True):
-        """Integrated gradients (steps axis folded into the batch dim)."""
+        """Integrated gradients (steps axis folded into the batch dim).
+
+        The folded ``[steps*B, ...]`` launch is re-audited against the
+        resolved plan's budget first (see :meth:`_engine_for_fold`)."""
+        eng = self._engine_for_fold(steps if batched else 1, x)
         return methods.integrated_gradients(
-            self._model_fn, x, steps=steps, baseline=baseline, target=target,
-            batched=batched, backward=self.composite_backward)
+            eng._model_fn, x, steps=steps, baseline=baseline, target=target,
+            batched=batched, backward=eng.composite_backward)
 
     def smoothgrad(self, x, key, *, n: int = 8, sigma: float = 0.1,
                    target=None, batched: bool = True):
-        """SmoothGrad (noise axis folded into the batch dim)."""
+        """SmoothGrad (noise axis folded into the batch dim; folded shape
+        re-audited against the plan budget, see :meth:`_engine_for_fold`)."""
+        eng = self._engine_for_fold(n if batched else 1, x)
         return methods.smoothgrad(
-            self._model_fn, x, key, n=n, sigma=sigma, target=target,
-            batched=batched, backward=self.composite_backward)
+            eng._model_fn, x, key, n=n, sigma=sigma, target=target,
+            batched=batched, backward=eng.composite_backward)
 
     def input_x_gradient(self, x, *, target=None):
         """Gradient . input refinement."""
@@ -239,6 +248,54 @@ class Engine:
         return self._token_step(batch)
 
     # -- internals -----------------------------------------------------------
+
+    def _engine_for_fold(self, factor: int, x) -> "Engine":
+        """The engine a composite's FOLDED launch must dispatch through.
+
+        ``ig(steps=S)`` / ``smoothgrad(n=S)`` with ``batched=True`` fold the
+        S axis into the batch dim, so the planned kernels run at
+        ``M = S * B`` — a shape :meth:`EngineSpec.resolve_plan` never
+        audited (it covers ``spec.batch`` x targets fan-out only).  This
+        closes that gap at call time, memoized per folded M:
+
+          * no plan, or folded M within the audited batch -> ``self``;
+          * planned tiles still fit the profile at folded M (the usual
+            case: conv batch rides the grid, only ``vmm_bwd`` scales with
+            M) -> ``self`` — same program, recompiled at the larger shape;
+          * budget violated -> re-plan at the folded batch and dispatch
+            through a sibling engine built on that plan (shared via the
+            build cache; jit is lazy so an unused sibling never compiles);
+          * no feasible tiling at folded M -> the planner's
+            :class:`~repro.plan.InfeasiblePlanError` propagates, BEFORE a
+            kernel launch that would overrun the device budget.
+        """
+        if factor <= 1 or self._plan is None:
+            return self
+        b = jax.tree_util.tree_leaves(x)[0].shape[0]
+        folded = int(factor) * int(b)
+        if folded <= (self.spec.batch or 1):
+            return self
+        if folded not in self._fold_engines:
+            self._fold_engines[folded] = self._audit_fold(folded)
+        return self._fold_engines[folded]
+
+    def _audit_fold(self, folded: int) -> "Engine":
+        from dataclasses import replace as _replace
+
+        from repro.plan import cnn_plan_footprints, get_profile, plan_cnn
+        spec = self.spec
+        profile = get_profile(spec.device if spec.device is not None
+                              else self._plan.device)
+        # composites backprop ONE seed per folded row, so seeds=1 here even
+        # when spec.targets is TopK (panels ride explain(), not ig()).
+        fps = cnn_plan_footprints(spec.model.cfg, self._plan,
+                                  precision=spec.precision, batch=folded,
+                                  seeds=1, profile=profile)
+        if all(fp.fits(profile) for fp in fps.values()):
+            return self
+        plan = plan_cnn(spec.model.cfg, device=profile.name,
+                        precision=spec.precision, batch=folded, seeds=1)
+        return build(_replace(spec, plan=plan))
 
     def _require_array_engine(self, op: str):
         if self._token_step is not None:

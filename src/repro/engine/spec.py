@@ -317,8 +317,10 @@ class EngineSpec:
         1) x the targets fan-out.  Composite methods that FOLD extra axes
         into the batch dim at call time (``ig(steps=)``, ``smoothgrad(n=)``
         with ``batched=True``) run the same kernels at a larger M than was
-        audited — size ``batch`` for the largest folded shape you will
-        serve (see ROADMAP: per-call re-audit is an open item).
+        audited — ``Engine._engine_for_fold`` closes that gap per call:
+        it re-audits the folded footprint against the profile budget,
+        re-plans (or raises ``InfeasiblePlanError``) when the planned tiles
+        no longer fit, and memoizes the decision per folded size.
         """
         if self.plan is not None:
             return self.plan

@@ -27,7 +27,8 @@ import repro.configs as configs
 from repro import engine as engine_lib
 from repro.launch import steps as steps_lib
 from repro.models import cnn as cnn_lib, transformer as tf
-from repro.serve import (CNNAdapter, ExplanationServer, Request, registry)
+from repro.serve import (AdmissionConfig, CNNAdapter, DegradePolicy,
+                         ExplanationServer, Request, ShedError, registry)
 
 
 def generate(cfg, params, prompt_tokens, *, max_new: int = 16):
@@ -89,9 +90,25 @@ def run_cnn(args) -> None:
               f"{args.device_profile!r}:")
         for line in eng.plan.summary().splitlines()[1:]:
             print(f"  {line.strip()}")
+    admission = None
+    if args.capacity is not None or args.deadline_ms is not None:
+        degrade = None
+        if args.degrade_pressure is not None:
+            # above the occupancy threshold: collapse top-K panels to argmax
+            # and reroute float explains to the int16 sibling engine
+            degrade = DegradePolicy(
+                pressure_threshold=args.degrade_pressure,
+                reroute_precision=("fxp16" if args.precision == "f32"
+                                   else None))
+        admission = AdmissionConfig(
+            capacity=args.capacity if args.capacity is not None else 1024,
+            default_deadline_s=(args.deadline_ms / 1e3
+                                if args.deadline_ms is not None else None),
+            degrade=degrade)
     server = ExplanationServer(CNNAdapter.from_engine(eng),
                                max_batch=args.batch,
-                               max_delay_s=args.max_delay_ms / 1e3)
+                               max_delay_s=args.max_delay_ms / 1e3,
+                               admission=admission)
     n = args.requests
     xs = jax.random.normal(jax.random.PRNGKey(1), (n,) + cfg.in_hw
                            + (cfg.in_ch,))
@@ -105,8 +122,13 @@ def run_cnn(args) -> None:
             key=jax.random.PRNGKey(100 + i) if cls.needs_key else None))
     t0 = time.time()
     responses = []
+    sheds = 0
     for req in reqs:                  # serve()'s dict collapses uids; keep all
-        server.submit(req)
+        try:
+            server.submit(req)
+        except ShedError:             # admission refusal: typed, never a stall
+            sheds += 1
+            continue
         responses.extend(server.poll())
     responses.extend(server.drain())
     dt = time.time() - t0
@@ -115,6 +137,11 @@ def run_cnn(args) -> None:
     print(f"[serve/cnn] {len(responses)} responses in {dt:.2f}s "
           f"({len(responses) / dt:.1f} req/s); cache hits "
           f"{hits}/{n_explain} explains")
+    if admission is not None:
+        snap = server.stats.snapshot()
+        print(f"[serve/cnn] admission: {sheds} shed at submit "
+              f"(by reason {snap['sheds']}), degrades {snap['degrades']}, "
+              f"peak queue {snap['peak_queue_depth']}")
     print(f"[serve/cnn] cache: {server.cache.stats.snapshot()}")
     for name, snap in server.stats.snapshot()["methods"].items():
         print(f"  {name:28s} n={snap['count']:3d} p50={snap['p50_us']:.0f}us "
@@ -131,6 +158,18 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--topk", type=int, default=3)
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    # heavy-traffic hardening knobs (cnn workload); setting either of the
+    # first two enables admission control on the server
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="bounded admission queue: requests beyond this "
+                         "many pending are shed with a typed error")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request latency budget; infeasible or "
+                         "expired requests are shed, never silently late")
+    ap.add_argument("--degrade-pressure", type=float, default=None,
+                    help="queue occupancy in (0,1] above which explains "
+                         "degrade (topk->argmax; f32 reroutes to the int16 "
+                         "sibling) instead of shedding")
     # method lists derive from the registry: a newly registered explainer
     # is immediately servable without touching this file.
     ap.add_argument("--method", default="saliency", choices=registry.names())

@@ -7,19 +7,25 @@ artifact-able): ``{key: {"tile": [...], "family": ..., "measured_us": ...,
 "planned_at": ...}}``.
 
 Location: ``$REPRO_PLAN_CACHE`` if set, else
-``~/.cache/repro/tileplans.json``.  Writes are atomic (tmp + rename);
-corrupt or missing files read as empty.  ``hits``/``misses`` counters let
-callers (tests, the CI autotune smoke) assert a warm build is a 100% cache
-hit and replans without re-measuring.
+``~/.cache/repro/tileplans.json``.  Writes are atomic (tmp + rename).
+A truncated, garbage, or partially-scribbled file must NEVER take the
+planner down — corruption is logged, the offending content (whole file or
+individual malformed entries) is dropped, the cleaned state is atomically
+rewritten, and planning proceeds as a recompute.  ``hits``/``misses``
+counters let callers (tests, the CI autotune smoke) assert a warm build is
+a 100% cache hit and replans without re-measuring.
 """
 from __future__ import annotations
 
 import json
+import logging
 import os
 import tempfile
 from typing import Any, Dict, Optional, Sequence
 
 _ENV_VAR = "REPRO_PLAN_CACHE"
+
+_log = logging.getLogger(__name__)
 
 
 def default_cache_path() -> str:
@@ -53,13 +59,65 @@ class TuningCache:
     @property
     def data(self) -> Dict[str, Any]:
         if self._data is None:
-            try:
-                with open(self.path) as f:
-                    loaded = json.load(f)
-                self._data = loaded if isinstance(loaded, dict) else {}
-            except (OSError, ValueError):
-                self._data = {}
+            self._data = self._load()
         return self._data
+
+    @staticmethod
+    def valid_entry(entry: Any) -> bool:
+        """Schema check for one cache entry: a dict whose ``tile`` is a
+        short list of positive ints (ConvTile=1, VmmBwdTile=2, VmmTile=3).
+        Anything else — a scribbled value, a truncated write, a foreign
+        tool's record — is treated as absent, never decoded."""
+        if not isinstance(entry, dict):
+            return False
+        tile = entry.get("tile")
+        return (isinstance(tile, list) and 1 <= len(tile) <= 3
+                and all(isinstance(t, int) and not isinstance(t, bool)
+                        and t > 0 for t in tile))
+
+    def _load(self) -> Dict[str, Any]:
+        """Read the file; log-and-recover (atomic rewrite) on corruption."""
+        try:
+            with open(self.path) as f:
+                raw = f.read()
+        except FileNotFoundError:
+            return {}
+        except OSError as e:
+            _log.warning("tuning cache %s unreadable (%s); replanning "
+                         "without it", self.path, e)
+            return {}
+        try:
+            loaded = json.loads(raw)
+            if not isinstance(loaded, dict):
+                raise ValueError(
+                    f"top level is {type(loaded).__name__}, not an object")
+        except ValueError as e:
+            _log.warning("tuning cache %s is corrupt (%s); dropping it and "
+                         "recomputing — rewriting a clean empty cache",
+                         self.path, e)
+            self._data = {}
+            self._try_flush()
+            return self._data
+        bad = [k for k, v in loaded.items() if not self.valid_entry(v)]
+        if bad:
+            _log.warning("tuning cache %s: dropping %d malformed entr%s "
+                         "(%s); keeping %d valid", self.path, len(bad),
+                         "y" if len(bad) == 1 else "ies",
+                         ", ".join(sorted(bad)[:3]), len(loaded) - len(bad))
+            for k in bad:
+                del loaded[k]
+            self._data = loaded
+            self._try_flush()
+        return loaded
+
+    def _try_flush(self) -> None:
+        """Persist the cleaned state; failure to rewrite is only a log —
+        the in-memory recovery already happened."""
+        try:
+            self._flush()
+        except OSError as e:
+            _log.warning("could not rewrite tuning cache %s: %s",
+                         self.path, e)
 
     def _flush(self) -> None:
         d = os.path.dirname(self.path) or "."
@@ -85,19 +143,22 @@ class TuningCache:
         ``require_measured=True`` treats an entry without a recorded
         ``measured_us`` as a miss — an analytic-only entry must not
         suppress a later autotuned (measuring) plan of the same key.
+        Entries failing :meth:`valid_entry` (scribbled mid-session) are
+        also misses: the planner recomputes and stores over them.
         """
         entry = self.data.get(key)
-        if entry is None or (require_measured
-                             and entry.get("measured_us") is None):
+        if entry is None or not self.valid_entry(entry) \
+                or (require_measured and entry.get("measured_us") is None):
             self.misses += 1
             return None
         self.hits += 1
         return entry
 
     def store(self, key: str, entry: Dict[str, Any]) -> None:
-        """Write-through insert: the JSON file is updated immediately."""
+        """Write-through insert: the JSON file is updated immediately.
+        An unwritable path costs persistence, never the plan (logged)."""
         self.data[key] = entry
-        self._flush()
+        self._try_flush()
 
     def reset_counters(self) -> None:
         self.hits = 0

@@ -110,8 +110,17 @@ def _encode_tile(tile) -> List[int]:
     return [tile.tk, tile.tn]
 
 
+_TILE_ARITY = {"conv2d_fwd": 1, "conv2d_bwd": 1, "vmm_fwd": 3, "vmm_bwd": 2}
+
+
 def _decode_tile(family: str, blob) -> Any:
+    """Cache blob -> tile, or ``ValueError`` on an arity/shape mismatch
+    (the planner treats that as a cache miss and replans, never crashes)."""
     vals = [int(v) for v in blob]
+    arity = _TILE_ARITY.get(family)
+    if arity is None or len(vals) != arity:
+        raise ValueError(f"cache blob {blob!r} does not decode as a "
+                         f"{family} tile (need {arity} ints)")
     if family in ("conv2d_fwd", "conv2d_bwd"):
         return ConvTile(*vals)
     if family == "vmm_fwd":
@@ -368,8 +377,11 @@ def plan_cnn(cfg, device=None, precision: str = "f32", *, batch: int = 1,
             # an analytic-only entry must not satisfy an autotuned build
             hit = cache.lookup(ck, require_measured=autotune)
             if hit is not None:
-                entries.append((key, _decode_tile(family, hit["tile"])))
-                continue
+                try:
+                    entries.append((key, _decode_tile(family, hit["tile"])))
+                    continue
+                except (KeyError, TypeError, ValueError):
+                    pass        # wrong-family blob: replan + store over it
         tile, measured = _plan_family(family, kw, profile, precision,
                                       autotune)
         if cache is not None:

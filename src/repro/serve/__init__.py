@@ -29,7 +29,11 @@ Quickstart::
     print(server.cache.stats.snapshot(), server.stats.snapshot())
 """
 from repro.serve.adapters import CNNAdapter
-from repro.serve.api import EXPLAIN, PREDICT, Request, Response
+from repro.serve.admission import (AdmissionConfig, AdmissionController,
+                                   DegradePolicy, RateLimit,
+                                   ServiceEstimator, TokenBucket)
+from repro.serve.api import (EXPLAIN, PREDICT, InvalidRequestError, Request,
+                             Response, ServeError, ShedError, shed_response)
 from repro.serve.batcher import Batch, MicroBatcher, bucket_key
 from repro.serve.registry import (Explainer, get, make, mask_reuse_methods,
                                   names, register, token_methods)
@@ -42,4 +46,7 @@ __all__ = [
     "MicroBatcher", "bucket_key", "Explainer", "get", "make",
     "mask_reuse_methods", "names", "register", "token_methods", "CacheEntry",
     "ResidualCache", "residual_bits", "ExplanationServer", "ServerStats",
+    "AdmissionConfig", "AdmissionController", "DegradePolicy", "RateLimit",
+    "ServiceEstimator", "TokenBucket", "ServeError", "ShedError",
+    "InvalidRequestError", "shed_response",
 ]

@@ -103,7 +103,21 @@ class CNNAdapter:
         self._engines = {spec.method: eng}
         return self
 
+    @property
+    def example_shape(self) -> Tuple[int, int, int]:
+        """Expected per-example shape — lets the server reject malformed
+        payloads at submit instead of poisoning a compiled batch."""
+        return (*self.cfg.in_hw, self.cfg.in_ch)
+
     # -- engines -------------------------------------------------------------
+
+    def with_precision(self, precision: str) -> "CNNAdapter":
+        """A sibling adapter serving the SAME weights at another precision
+        (the admission layer's ``reroute_precision`` degradation target).
+        Engines derive from the base spec via ``replace``, so they share the
+        global build cache with any other consumer of that spec."""
+        eng = engine_lib.build(replace(self.engine.spec, precision=precision))
+        return CNNAdapter.from_engine(eng)
 
     def engine_for(self, rules: str) -> engine_lib.Engine:
         """The (cached) engine whose backward runs under ``rules`` — same

@@ -17,6 +17,20 @@ rule set.  The batcher therefore:
     request has waited ``max_delay_s`` — the classic throughput/latency
     micro-batching trade.
 
+Heavy-traffic hardening adds per-REQUEST deadlines on top of the per-BUCKET
+delay cap:
+
+  * within a bucket, requests are kept in **EDF order** (earliest absolute
+    deadline first; deadline-less requests keep FIFO order at the back), so
+    when a bucket pops partially, the most urgent requests ride first;
+  * a bucket also pops **early** when its most urgent deadline would be
+    blown by waiting any longer (``deadline - now <= service estimate``) —
+    a padded, under-full launch beats a blown SLO;
+  * :meth:`MicroBatcher.expire` sweeps out requests that can no longer make
+    their deadline even if launched immediately, so a doomed request never
+    occupies a seat in a padded launch (the server turns the sweepings into
+    structured shed responses).
+
 Stochastic methods (per-request PRNG keys, e.g. smoothgrad) get singleton
 buckets: their noise draw is request-deterministic and must not depend on
 which neighbours happened to share the batch.
@@ -28,7 +42,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -37,6 +51,8 @@ from repro.serve import registry
 from repro.serve.api import EXPLAIN, Request
 
 BucketKey = Tuple
+
+_INF = float("inf")
 
 
 def bucket_key(req: Request) -> BucketKey:
@@ -48,11 +64,14 @@ def bucket_key(req: Request) -> BucketKey:
         return (req.kind, shape, dtype)
     # target-kind keeps a bucket homogeneous: an all-None bucket resolves
     # argmax targets inside the engine, an all-explicit one passes them in.
+    # Degraded (rerouted-precision) requests run different compiled programs
+    # and must not coalesce with primary traffic.
     # Stochastic methods get a per-REQUEST token (not uid: two in-flight
     # requests for one uid carry distinct PRNG keys and must not coalesce).
     needs_key = registry.get(req.method).needs_key
     return (req.kind, req.method, shape, dtype, req.topk,
-            req.target is None, id(req) if needs_key else None)
+            req.target is None, req.degraded,
+            id(req) if needs_key else None)
 
 
 def pad_size(n: int, max_batch: int) -> int:
@@ -72,6 +91,10 @@ def stack_padded(xs: List, size: int) -> jnp.ndarray:
     return batch
 
 
+def _deadline(req: Request) -> float:
+    return req.deadline_t if req.deadline_t is not None else _INF
+
+
 @dataclass
 class Batch:
     """One popped bucket: the requests that will share a launch."""
@@ -81,6 +104,11 @@ class Batch:
     @property
     def kind(self) -> str:
         return self.key[0]
+
+    @property
+    def degraded(self) -> bool:
+        """True when this batch must run on the degraded sibling engine."""
+        return bool(self.requests) and self.requests[0].degraded
 
     def stack(self, max_batch: int) -> Tuple[jnp.ndarray, int]:
         """-> (padded [P, ...] batch, live row count)."""
@@ -94,6 +122,13 @@ class _Bucket:
     requests: List[Request] = field(default_factory=list)
     oldest_t: float = 0.0
 
+    def refresh(self) -> None:
+        self.oldest_t = min((r.arrive_t for r in self.requests),
+                            default=0.0)
+
+    def earliest_deadline(self) -> float:
+        return _deadline(self.requests[0]) if self.requests else _INF
+
 
 class MicroBatcher:
     def __init__(self, *, max_batch: int = 8, max_delay_s: float = 0.002,
@@ -103,29 +138,71 @@ class MicroBatcher:
         self.max_batch = max_batch
         self.max_delay_s = max_delay_s
         self.clock = clock
-        self._buckets: "Dict[BucketKey, _Bucket]" = {}
+        self._buckets: Dict[BucketKey, _Bucket] = {}
 
     def pending(self) -> int:
         return sum(len(b.requests) for b in self._buckets.values())
 
     def submit(self, req: Request) -> None:
-        req.arrive_t = self.clock()
+        if not req.arrive_t:        # replay drivers pre-stamp true arrivals
+            req.arrive_t = self.clock()
         bucket = self._buckets.setdefault(bucket_key(req), _Bucket())
         if not bucket.requests:
             bucket.oldest_t = req.arrive_t
-        bucket.requests.append(req)
+        # EDF insert: keep the bucket ascending by absolute deadline;
+        # deadline-less requests stay FIFO at the back (stable bisect).
+        dl, reqs = _deadline(req), bucket.requests
+        lo, hi = 0, len(reqs)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if _deadline(reqs[mid]) <= dl:
+                lo = mid + 1
+            else:
+                hi = mid
+        reqs.insert(lo, req)
+        bucket.oldest_t = min(bucket.oldest_t, req.arrive_t)
 
     def _pop(self, key: BucketKey, n: int) -> Batch:
         bucket = self._buckets[key]
         popped, bucket.requests = bucket.requests[:n], bucket.requests[n:]
         if bucket.requests:
-            bucket.oldest_t = bucket.requests[0].arrive_t
+            bucket.refresh()
         else:
             del self._buckets[key]
         return Batch(key, popped)
 
-    def ready(self, now: Optional[float] = None) -> List[Batch]:
-        """Pop every full bucket and every deadline-expired bucket."""
+    def expire(self, now: Optional[float] = None,
+               service_est_s: float = 0.0) -> List[Request]:
+        """Remove and return every request that cannot meet its deadline
+        even if launched right now (``deadline < now + service_est_s``).
+
+        Run this BEFORE :meth:`ready`: a doomed request must neither occupy
+        a seat in a padded launch nor hold a bucket open.  The caller turns
+        the sweepings into shed responses and accounts them.
+        """
+        now = self.clock() if now is None else now
+        doomed: List[Request] = []
+        for key in list(self._buckets):
+            bucket = self._buckets[key]
+            keep = []
+            for req in bucket.requests:
+                if _deadline(req) < now + service_est_s:
+                    doomed.append(req)
+                else:
+                    keep.append(req)
+            if len(keep) != len(bucket.requests):
+                if keep:
+                    bucket.requests = keep
+                    bucket.refresh()
+                else:
+                    del self._buckets[key]
+        return doomed
+
+    def ready(self, now: Optional[float] = None,
+              service_est_s: float = 0.0) -> List[Batch]:
+        """Pop every bucket that is full, past the bucket delay cap, or
+        whose most urgent request would blow its deadline by waiting
+        (``earliest deadline - now <= service_est_s``)."""
         now = self.clock() if now is None else now
         out = []
         for key in list(self._buckets):
@@ -133,7 +210,9 @@ class MicroBatcher:
             while bucket and len(bucket.requests) >= self.max_batch:
                 out.append(self._pop(key, self.max_batch))
                 bucket = self._buckets.get(key)
-            if bucket and now - bucket.oldest_t >= self.max_delay_s:
+            if bucket and (now - bucket.oldest_t >= self.max_delay_s
+                           or bucket.earliest_deadline() - now
+                           <= service_est_s):
                 out.append(self._pop(key, len(bucket.requests)))
         return out
 

@@ -1,0 +1,417 @@
+"""Load-replay SLO harness: synthesize traffic, drive the server, measure.
+
+The hardening claims of :mod:`repro.serve.admission` (bounded queues,
+deterministic shedding, deadline envelopes) are only claims until a trace
+of O(100k) mixed requests has been driven through the real dispatch loop.
+This module supplies the three pieces:
+
+  * :func:`synthesize` — deterministic traces of mixed predict/explain
+    traffic: Poisson or bursty (on/off modulated Poisson) arrivals, a
+    configurable method mix (pure-BP, top-K panels, composites,
+    stochastic), explain-after-predict pairs that exercise the residual
+    cache, and per-kind deadline envelopes;
+  * :class:`VirtualClock` + :class:`SimAdapter` / :class:`TimedAdapter` —
+    the server's clock is injectable, so a replay advances *virtual* time:
+    ``SimAdapter`` stubs the model with a deterministic cost model (100k
+    requests replay in seconds, queueing dynamics exact), ``TimedAdapter``
+    wraps a real adapter and advances the clock by measured wall time
+    (honest end-to-end numbers at smaller scale);
+  * :func:`replay` — the driver: submits each event at its arrival time,
+    polls between arrivals, drains at the end, and folds everything into a
+    :class:`ReplayReport` (p50/p99 per kind, shed rate by reason,
+    cache-hit rate, batch occupancy) ready for ``BENCH_*.json`` rows.
+
+Everything is seeded and virtual-clocked: the same (trace, adapter, server
+config) triple replays to the same report, so SLO regressions are real
+regressions, not sampling noise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from time import perf_counter
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.api import EXPLAIN, PREDICT, Request, ShedError
+from repro.serve.stats import percentile
+
+# default (kind, method, topk) mix: weights need not sum to 1
+DEFAULT_MIX: Dict[Tuple[str, str, Optional[int]], float] = {
+    (PREDICT, "", None): 0.35,
+    (EXPLAIN, "saliency", None): 0.25,
+    (EXPLAIN, "guided", None): 0.12,
+    (EXPLAIN, "deconvnet", None): 0.08,
+    (EXPLAIN, "saliency", 5): 0.10,          # top-5 panels
+    (EXPLAIN, "integrated_gradients", None): 0.07,
+    (EXPLAIN, "smoothgrad", None): 0.03,
+}
+
+
+@dataclass(frozen=True)
+class TraceEvent:
+    """One arrival of the synthetic trace (payload generated at replay)."""
+    t: float                        # arrival time (virtual seconds)
+    uid: str
+    kind: str                       # PREDICT | EXPLAIN
+    method: str = "saliency"
+    topk: Optional[int] = None
+    x_id: int = 0                   # index into the replay's example pool
+    deadline_s: Optional[float] = None
+    key_seed: Optional[int] = None  # PRNG seed for stochastic methods
+
+
+def synthesize(n: int, *, rate: float = 2000.0, arrivals: str = "poisson",
+               seed: int = 0,
+               mix: Optional[Dict[Tuple[str, str, Optional[int]], float]] = None,
+               deadline_s: Optional[Dict[str, float]] = None,
+               follow_predict_frac: float = 0.5,
+               burst_factor: float = 8.0, burst_len_s: float = 0.05,
+               idle_len_s: float = 0.2,
+               x_pool: int = 64) -> List[TraceEvent]:
+    """Deterministic trace of ``n`` arrivals at mean ``rate`` req/s.
+
+    ``arrivals="poisson"`` draws exponential inter-arrival gaps;
+    ``"bursty"`` modulates them with an on/off cycle (``burst_len_s`` at
+    ``burst_factor *`` rate, then ``idle_len_s`` at 0.1x) whose MEAN rate is
+    normalized back to ``rate`` — same offered load, spikier shape.
+    ``follow_predict_frac`` of explain events reuse the uid of an earlier
+    predict (residual-cache hit traffic); ``deadline_s`` maps kind ->
+    latency budget (default: none).  Same seed, same trace.
+    """
+    if arrivals not in ("poisson", "bursty"):
+        raise ValueError(f"arrivals must be poisson|bursty, got {arrivals!r}")
+    rng = np.random.RandomState(seed)
+    mix = mix or DEFAULT_MIX
+    classes = list(mix)
+    weights = np.asarray([mix[c] for c in classes], float)
+    weights /= weights.sum()
+    deadline_s = deadline_s or {}
+
+    if arrivals == "bursty":
+        # normalize the on/off cycle so the long-run mean rate stays `rate`
+        cycle = burst_len_s + idle_len_s
+        mean_factor = (burst_factor * burst_len_s + 0.1 * idle_len_s) / cycle
+        burst_rate = rate * burst_factor / mean_factor
+        idle_rate = rate * 0.1 / mean_factor
+
+    events: List[TraceEvent] = []
+    predict_uids: List[str] = []
+    t = 0.0
+    for i in range(n):
+        if arrivals == "poisson":
+            t += rng.exponential(1.0 / rate)
+        else:
+            phase = t % (burst_len_s + idle_len_s)
+            t += rng.exponential(
+                1.0 / (burst_rate if phase < burst_len_s else idle_rate))
+        kind, method, topk = classes[rng.choice(len(classes), p=weights)]
+        uid = f"r{i}"
+        if kind == PREDICT:
+            predict_uids.append(uid)
+        elif predict_uids and rng.rand() < follow_predict_frac:
+            # explain-after-predict traffic has temporal locality: draw
+            # from the most recent predicts so the residual cache (an LRU)
+            # sees realistic hit pressure rather than uniform history.
+            lo = max(0, len(predict_uids) - 64)
+            uid = predict_uids[rng.randint(lo, len(predict_uids))]
+        events.append(TraceEvent(
+            t=t, uid=uid, kind=kind, method=method, topk=topk,
+            x_id=rng.randint(x_pool), deadline_s=deadline_s.get(kind),
+            key_seed=i if method == "smoothgrad" else None))
+    return events
+
+
+class VirtualClock:
+    """Injectable monotonic clock: ``clock()`` reads, ``advance`` moves."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"clock cannot run backwards (dt={dt})")
+        self.t += dt
+
+
+@dataclass(frozen=True)
+class CostModel:
+    """Modeled service times for :class:`SimAdapter` (virtual seconds).
+
+    A dispatch costs ``launch_s`` (compiled-program overhead) plus a
+    per-row term: ``row_s`` per forward row, ``seed_row_s`` per (seed x
+    row) of the BP phase.  ``scale`` derives the cheaper sibling used for
+    the ``fxp16`` degradation reroute.
+    """
+
+    launch_s: float = 200e-6
+    row_s: float = 50e-6
+    seed_row_s: float = 30e-6
+
+    def predict_s(self, rows: int) -> float:
+        return self.launch_s + rows * self.row_s
+
+    def replay_s(self, seeds: int, rows: int) -> float:
+        return self.launch_s + seeds * rows * self.seed_row_s
+
+    def scale(self, factor: float) -> "CostModel":
+        return CostModel(self.launch_s * factor, self.row_s * factor,
+                         self.seed_row_s * factor)
+
+
+class SimAdapter:
+    """Duck-typed serve adapter over a deterministic linear stub model.
+
+    Real dataflow, modeled time: every server path (predict, cached BP
+    replay, cold composite explainers, degradation reroute) runs with
+    correct shapes and deterministic values, while the *cost* of each
+    program advances the shared :class:`VirtualClock` per
+    :class:`CostModel` — so a 100k-request replay resolves the queueing /
+    shedding dynamics exactly without compiling or running kernels.
+
+    The stub is ``logits = flatten(x) @ W`` with seeded ``W`` per input
+    size; its true gradient is ``seed @ W^T``, so relevance maps are
+    consistent across the hit and cold paths (bitwise, like the real
+    engine).  Composite explainers ride :meth:`model_fn`, whose closure
+    advances the clock per (traced) call — IG at S steps pays S-fold row
+    cost through its folded batch, mirroring the real engine's work.
+    """
+
+    input_kind = "image"
+    store_rules = "saliency"
+    num_classes = 4
+
+    def __init__(self, clock: VirtualClock, cost: Optional[CostModel] = None,
+                 *, seed: int = 0, precision: str = "f32"):
+        self.clock = clock
+        self.cost = cost or CostModel()
+        self.seed = seed
+        self.precision = precision
+        self._weights: Dict[int, np.ndarray] = {}
+
+    def _w(self, size: int) -> np.ndarray:
+        if size not in self._weights:
+            rng = np.random.RandomState(self.seed + size)
+            self._weights[size] = rng.randn(size, self.num_classes).astype(
+                np.float32)
+        return self._weights[size]
+
+    def with_precision(self, precision: str) -> "SimAdapter":
+        """Cheaper sibling for the degradation reroute (half-cost model,
+        same weights/seed, shared clock)."""
+        sib = SimAdapter(self.clock, self.cost.scale(0.5), seed=self.seed,
+                         precision=precision)
+        sib._weights = self._weights
+        return sib
+
+    # -- the three server-facing programs ------------------------------------
+
+    def predict(self, xb):
+        xb = np.asarray(xb, np.float32)
+        rows = xb.shape[0]
+        self.clock.advance(self.cost.predict_s(rows))
+        flat = xb.reshape(rows, -1)
+        return flat @ self._w(flat.shape[1]), {"x": xb}
+
+    def explain_cached(self, method: str, residuals, seeds):
+        xb = residuals["x"]
+        seeds = np.asarray(seeds, np.float32)        # [S, B, C]
+        s, b = seeds.shape[0], xb.shape[0]
+        self.clock.advance(self.cost.replay_s(s, b))
+        grad = seeds @ self._w(int(np.prod(xb.shape[1:]))).T   # [S, B, size]
+        return grad.reshape(s, b, *xb.shape[1:])
+
+    def model_fn(self, rules: str):
+        """Rule-bound callable for cold composite explainers.  jnp math so
+        ``jax.vjp`` works; the clock advances per call with the folded
+        batch's row cost (IG/smoothgrad fold steps/samples into rows)."""
+        import jax.numpy as jnp
+
+        def f(xb):
+            rows = int(xb.shape[0])
+            self.clock.advance(self.cost.predict_s(rows)
+                               + self.cost.replay_s(1, rows))
+            flat = xb.reshape(rows, -1)
+            return flat @ jnp.asarray(self._w(int(flat.shape[1])))
+        return f
+
+    def manual_backward(self, rules: str):
+        return None                      # float path: jax.vjp is the engine
+
+
+class TimedAdapter:
+    """Wrap a REAL adapter; advance the virtual clock by measured wall time.
+
+    The replay then reports honest end-to-end service times for the real
+    compiled programs while keeping arrivals on the virtual timeline —
+    used by the ``load_replay`` benchmark's small-scale timed pass.
+    Composite explainers ride the inner adapter's ``model_fn`` (not
+    ``engine_for``) so their wall time is measured here too.
+    """
+
+    def __init__(self, inner, clock: VirtualClock):
+        self.inner = inner
+        self.clock = clock
+        self.store_rules = inner.store_rules
+        self.input_kind = getattr(inner, "input_kind", "image")
+
+    @property
+    def example_shape(self):
+        return getattr(self.inner, "example_shape", None)
+
+    def _timed(self, fn, *args):
+        t0 = perf_counter()
+        out = fn(*args)
+        self.clock.advance(perf_counter() - t0)
+        return out
+
+    def predict(self, xb):
+        return self._timed(self.inner.predict, xb)
+
+    def explain_cached(self, method: str, residuals, seeds):
+        return self._timed(self.inner.explain_cached, method, residuals,
+                           seeds)
+
+    def with_precision(self, precision: str) -> "TimedAdapter":
+        return TimedAdapter(self.inner.with_precision(precision), self.clock)
+
+    def model_fn(self, rules: str):
+        f = self.inner.model_fn(rules)
+
+        def timed_f(xb):
+            t0 = perf_counter()
+            out = f(xb)
+            self.clock.advance(perf_counter() - t0)
+            return out
+        return timed_f
+
+    def manual_backward(self, rules: str):
+        return self.inner.manual_backward(rules)
+
+
+@dataclass
+class ReplayReport:
+    """Everything the SLO gate needs, JSON-ready via :meth:`snapshot`."""
+
+    offered: int = 0
+    completed: int = 0
+    errors: int = 0
+    shed_submit: int = 0                  # refused by admission (raised)
+    shed_queue: int = 0                   # admitted, expired while queued
+    sheds_by_reason: Dict[str, int] = field(default_factory=dict)
+    latencies_by_kind: Dict[str, List[float]] = field(default_factory=dict)
+    deadline_misses: int = 0              # admitted+completed past deadline
+    cache_hit_rate: float = 0.0
+    mean_occupancy: float = 0.0
+    peak_queue_depth: int = 0
+    degrades: Dict[str, int] = field(default_factory=dict)
+    makespan_s: float = 0.0
+
+    @property
+    def shed_total(self) -> int:
+        return self.shed_submit + self.shed_queue
+
+    @property
+    def shed_rate(self) -> float:
+        return self.shed_total / self.offered if self.offered else 0.0
+
+    def p_us(self, kind: str, q: float) -> float:
+        lat = sorted(self.latencies_by_kind.get(kind, []))
+        return 1e6 * percentile(lat, q) if lat else float("nan")
+
+    def snapshot(self) -> dict:
+        out = {
+            "offered": self.offered, "completed": self.completed,
+            "errors": self.errors, "shed_total": self.shed_total,
+            "shed_rate": self.shed_rate,
+            "sheds_by_reason": dict(self.sheds_by_reason),
+            "deadline_misses": self.deadline_misses,
+            "cache_hit_rate": self.cache_hit_rate,
+            "mean_occupancy": self.mean_occupancy,
+            "peak_queue_depth": self.peak_queue_depth,
+            "degrades": dict(self.degrades),
+            "makespan_s": self.makespan_s,
+        }
+        for kind in sorted(self.latencies_by_kind):
+            out[f"{kind}_p50_us"] = self.p_us(kind, 50)
+            out[f"{kind}_p99_us"] = self.p_us(kind, 99)
+        return out
+
+
+def replay(server, trace: List[TraceEvent], *,
+           example_shape: Tuple[int, ...] = (8, 8, 1),
+           x_pool: int = 64, seed: int = 0,
+           make_x: Optional[Callable[[TraceEvent], np.ndarray]] = None
+           ) -> ReplayReport:
+    """Drive ``server`` (whose clock must be a :class:`VirtualClock`)
+    through ``trace``; returns the folded :class:`ReplayReport`.
+
+    Each event advances the clock to its arrival time (service may have
+    pushed time past it — arrivals never move time backwards), pre-stamps
+    ``arrive_t`` with the TRUE arrival, submits, and polls.  Submit-time
+    sheds are counted, never raised out.  Payloads come from a seeded pool
+    of ``x_pool`` distinct examples unless ``make_x`` overrides.
+    """
+    clock = server.clock
+    if not isinstance(clock, VirtualClock):
+        raise TypeError("replay needs a server built on a VirtualClock")
+    import jax
+
+    rng = np.random.RandomState(seed)
+    pool = rng.randn(x_pool, *example_shape).astype(np.float32)
+    rep = ReplayReport()
+    deadlines: Dict[str, float] = {}
+    t_start = clock()
+
+    def account(resp):
+        if resp.error_type == "ShedError":
+            rep.shed_queue += 1
+            reason = resp.meta.get("shed_reason", "expired")
+            rep.sheds_by_reason[reason] = (
+                rep.sheds_by_reason.get(reason, 0) + 1)
+        elif not resp.ok:
+            rep.errors += 1
+        else:
+            rep.completed += 1
+            rep.latencies_by_kind.setdefault(resp.kind, []).append(
+                resp.latency_s)
+            dl = deadlines.get(resp.uid)
+            if dl is not None and resp.latency_s > dl:
+                rep.deadline_misses += 1
+
+    for ev in trace:
+        clock.t = max(clock.t, ev.t)
+        rep.offered += 1
+        req = Request(
+            uid=ev.uid, kind=ev.kind, x=pool[ev.x_id % x_pool]
+            if make_x is None else make_x(ev),
+            method=ev.method, topk=ev.topk, deadline_s=ev.deadline_s,
+            key=(jax.random.PRNGKey(ev.key_seed)
+                 if ev.key_seed is not None else None))
+        req.arrive_t = ev.t
+        try:
+            server.submit(req)
+            if ev.deadline_s is not None:
+                deadlines[ev.uid] = ev.deadline_s
+        except ShedError as e:
+            rep.shed_submit += 1
+            rep.sheds_by_reason[e.reason] = (
+                rep.sheds_by_reason.get(e.reason, 0) + 1)
+            continue
+        for resp in server.poll():
+            account(resp)
+    for resp in server.drain():
+        account(resp)
+
+    snap = server.stats.snapshot()
+    cache = server.cache.stats
+    lookups = cache.hits + cache.misses
+    rep.cache_hit_rate = cache.hits / lookups if lookups else 0.0
+    rep.mean_occupancy = snap["mean_occupancy"]
+    rep.peak_queue_depth = snap["peak_queue_depth"]
+    rep.degrades = snap["degrades"]
+    rep.makespan_s = clock() - t_start
+    return rep

@@ -1,4 +1,4 @@
-"""The dispatch loop: registry -> micro-batcher -> engine -> stats.
+"""The dispatch loop: admission -> registry -> micro-batcher -> engine -> stats.
 
 ``ExplanationServer`` is the subsystem's front door.  Requests go in via
 :meth:`submit`; :meth:`poll` pops every micro-batch that is full or past its
@@ -16,6 +16,24 @@ latency deadline and runs it:
     :mod:`repro.core.attribution` call).  Top-K panel requests ride the same
     seed axis: K one-hot seeds per example, masks loaded once (§III.F).
 
+Heavy-traffic hardening (see :mod:`repro.serve.admission`):
+
+  * an optional :class:`~repro.serve.admission.AdmissionConfig` turns
+    :meth:`submit` into an admission decision — bounded queue, per-method
+    token buckets, and deadline-aware shedding (a typed
+    :class:`~repro.serve.api.ShedError` instead of an unbounded backlog);
+  * :meth:`poll` first sweeps out requests whose deadline can no longer be
+    met (they complete as structured shed responses, never occupying a
+    padded seat), then dispatches batches in EDF order;
+  * dispatch is fault-isolated: a poisoned micro-batch (bad shape, adapter
+    exception) completes as error responses — the worker loop survives and
+    sibling buckets are unaffected; batches that overrun
+    ``dispatch_timeout_s`` are flagged and counted (soft timeout: an XLA
+    call cannot be preempted in-thread, so the flag is the observable);
+  * under degradation pressure, rerouted (``fxp16``) traffic runs cold on a
+    lazily-built sibling adapter — its residuals never enter the primary
+    cache (an int16 forward's masks must not replay under float engines).
+
 Everything is synchronous and deterministic (injectable clock); an async
 transport would wrap ``submit``/``poll`` without touching the dataflow.
 """
@@ -30,7 +48,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve import registry
-from repro.serve.api import EXPLAIN, PREDICT, Request, Response
+from repro.serve.admission import AdmissionConfig, AdmissionController
+from repro.serve.api import (EXPLAIN, PREDICT, SHED_EXPIRED,
+                             InvalidRequestError, Request, Response,
+                             ShedError, shed_response)
 from repro.serve.batcher import Batch, MicroBatcher, pad_size
 from repro.serve.residual_cache import CacheEntry, ResidualCache
 from repro.serve.stats import ServerStats
@@ -41,7 +62,9 @@ class ExplanationServer:
     def __init__(self, adapter, *, cache_capacity: int = 256,
                  max_batch: int = 8, max_delay_s: float = 0.002,
                  clock: Callable[[], float] = time.monotonic,
-                 method_opts: Optional[Dict[str, dict]] = None):
+                 method_opts: Optional[Dict[str, dict]] = None,
+                 admission: Optional[AdmissionConfig] = None,
+                 dispatch_timeout_s: Optional[float] = None):
         self.adapter = adapter
         self.clock = clock
         self.batcher = MicroBatcher(max_batch=max_batch,
@@ -49,7 +72,17 @@ class ExplanationServer:
         self.cache = ResidualCache(cache_capacity)
         self.stats = ServerStats()
         self.method_opts = method_opts or {}
-        self._explainers: Dict[str, registry.Explainer] = {}
+        self.dispatch_timeout_s = dispatch_timeout_s
+        self.admission = (AdmissionController(admission, now=clock())
+                          if admission is not None else None)
+        if (admission is not None and admission.degrade is not None
+                and admission.degrade.reroute_precision is not None
+                and not hasattr(adapter, "with_precision")):
+            raise ValueError(
+                f"degrade.reroute_precision needs an adapter exposing "
+                f"with_precision(); {type(adapter).__name__} does not")
+        self._degraded_adapter = None
+        self._explainers: Dict[tuple, registry.Explainer] = {}
 
     # -- public surface -----------------------------------------------------
 
@@ -58,63 +91,163 @@ class ExplanationServer:
         return registry.names()
 
     def submit(self, req: Request) -> None:
-        if req.kind == EXPLAIN:
-            cls = registry.get(req.method)    # fail fast on unknown methods
-            if req.topk is not None and not (
-                    cls.mask_reuse and self._rules_compatible(
-                        self.adapter.store_rules, req.method)):
+        """Admit ``req`` into the queue, or refuse it with a typed error.
+
+        Raises :class:`~repro.serve.api.InvalidRequestError` for poisoned
+        payloads (non-finite values, wrong example shape when the adapter
+        declares one), ``KeyError`` for unknown methods, and — when
+        admission control is configured —
+        :class:`~repro.serve.api.ShedError` when the request is refused
+        (queue full, rate limited, or its deadline is infeasible given the
+        current queue estimate).  Admitted requests always return
+        immediately; nothing ever blocks here.
+        """
+        self._validate(req)
+        now = self.clock()
+        if self.admission is not None:
+            try:
+                action = self.admission.admit(req, self.batcher.pending(),
+                                              now)
+            except ShedError as e:
+                self.stats.record_shed(e.reason)
+                raise
+            if action is not None:
+                self.stats.record_degrade(action)
+        elif req.deadline_s is not None and req.deadline_t is None:
+            # deadlines work without admission too; anchor at true arrival
+            req.deadline_t = (req.arrive_t or now) + req.deadline_s
+        if req.kind == EXPLAIN and req.topk is not None:
+            cls = registry.get(req.method)
+            if not (cls.mask_reuse and self._rules_compatible(
+                    self.adapter.store_rules, req.method)):
                 raise ValueError(
                     f"topk panels ride the seed-batched BP and need a "
                     f"mask-reuse method {registry.mask_reuse_methods()} "
                     f"whose masks the adapter stores (store_rules="
                     f"{self.adapter.store_rules!r}); got {req.method!r}")
         self.batcher.submit(req)
+        self.stats.record_queue_depth(self.batcher.pending())
 
     def poll(self, now: Optional[float] = None) -> List[Response]:
-        """Run every due micro-batch; returns completed responses."""
-        return list(itertools.chain.from_iterable(
-            self._process(b) for b in self.batcher.ready(now)))
+        """Run every due micro-batch; returns completed responses
+        (including structured shed responses for requests whose deadline
+        expired while queued)."""
+        now = self.clock() if now is None else now
+        est = self._service_estimate()
+        out = [self._finish_shed(r)
+               for r in self.batcher.expire(now, est)]
+        for batch in self.batcher.ready(now, est):
+            out.extend(self._dispatch(batch))
+        return out
 
     def drain(self) -> List[Response]:
         """Flush the queue regardless of deadlines (shutdown / tests)."""
         return list(itertools.chain.from_iterable(
-            self._process(b) for b in self.batcher.flush()))
+            self._dispatch(b) for b in self.batcher.flush()))
 
     def serve(self, requests: List[Request]) -> Dict[str, Response]:
-        """Convenience: submit all, poll to completion, index by uid."""
+        """Convenience: submit all, poll to completion, index by uid.
+
+        Shed-at-submit requests surface as structured responses here (the
+        batch caller has no per-request try/except)."""
         out: Dict[str, Response] = {}
         for req in requests:
-            self.submit(req)
+            try:
+                self.submit(req)
+            except ShedError as e:
+                out[req.uid] = shed_response(req, e.reason, e.detail)
+                continue
             for resp in self.poll():
                 out[resp.uid] = resp
         for resp in self.drain():
             out[resp.uid] = resp
         return out
 
-    # -- explainer construction --------------------------------------------
+    # -- validation / admission helpers -------------------------------------
 
-    def explainer(self, method: str) -> registry.Explainer:
-        if method not in self._explainers:
+    def _validate(self, req: Request) -> None:
+        if req.kind == EXPLAIN:
+            registry.get(req.method)          # fail fast on unknown methods
+        expected = getattr(self.adapter, "example_shape", None)
+        if expected is not None and tuple(np.shape(req.x)) != tuple(expected):
+            raise InvalidRequestError(
+                f"request {req.uid!r}: example shape {np.shape(req.x)} != "
+                f"adapter's {tuple(expected)}")
+        if self.admission is not None and self.admission.config.reject_nonfinite:
+            x = np.asarray(req.x)
+            if np.issubdtype(x.dtype, np.floating) and not np.isfinite(x).all():
+                raise InvalidRequestError(
+                    f"request {req.uid!r}: non-finite values in payload")
+
+    def _service_estimate(self) -> float:
+        if self.admission is None:
+            return 0.0
+        est = self.admission.estimator
+        snap = est.snapshot()
+        return max(snap.values()) if snap else 0.0
+
+    def _finish_shed(self, req: Request) -> Response:
+        self.stats.record_shed(SHED_EXPIRED)
+        resp = shed_response(req, SHED_EXPIRED, "deadline expired in queue")
+        resp.latency_s = self.clock() - req.arrive_t
+        return resp
+
+    # -- adapters / explainer construction -----------------------------------
+
+    def _adapter_for(self, degraded: bool):
+        if not degraded:
+            return self.adapter
+        if self._degraded_adapter is None:
+            precision = self.admission.config.degrade.reroute_precision
+            self._degraded_adapter = self.adapter.with_precision(precision)
+        return self._degraded_adapter
+
+    def explainer(self, method: str,
+                  degraded: bool = False) -> registry.Explainer:
+        key = (method, degraded)
+        if key not in self._explainers:
+            adapter = self._adapter_for(degraded)
             cls = registry.get(method)
-            eng_for = getattr(self.adapter, "engine_for", None)
+            eng_for = getattr(adapter, "engine_for", None)
             if eng_for is not None:
                 # Engine-backed adapters: the explainer rides the built
                 # engine for its rule set — precision/backend (incl. the
                 # fxp16 manual pair) resolved by the spec, in one place.
-                self._explainers[method] = cls.from_engine(
+                self._explainers[key] = cls.from_engine(
                     eng_for(cls.rules), **self.method_opts.get(method, {}))
             else:
                 # Legacy adapters: raw closures.  Quantized ones expose a
                 # manual BP engine (fxp16 has no jax.vjp); float adapters
                 # return None and vjp is used.
-                manual = getattr(self.adapter, "manual_backward", None)
-                self._explainers[method] = cls(
-                    self.adapter.model_fn(cls.rules),
+                manual = getattr(adapter, "manual_backward", None)
+                self._explainers[key] = cls(
+                    adapter.model_fn(cls.rules),
                     backward=manual(cls.rules) if manual else None,
                     **self.method_opts.get(method, {}))
-        return self._explainers[method]
+        return self._explainers[key]
 
     # -- dispatch -----------------------------------------------------------
+
+    def _dispatch(self, batch: Batch) -> List[Response]:
+        """Fault-isolated batch execution: an exception inside a batch
+        becomes per-request error responses, never a dead worker loop."""
+        t0 = self.clock()
+        try:
+            out = self._process(batch)
+        except Exception as e:                          # noqa: BLE001
+            out = [self._finish_error(req, e) for req in batch.requests]
+        duration = self.clock() - t0
+        if (self.dispatch_timeout_s is not None
+                and duration > self.dispatch_timeout_s):
+            self.stats.record_timeout()
+            for resp in out:
+                resp.meta["dispatch_timeout_s"] = duration
+        if self.admission is not None and batch.requests:
+            req0 = batch.requests[0]
+            self.admission.estimator.observe(
+                req0.kind, req0.method if req0.kind == EXPLAIN else "",
+                duration, len(batch.requests))
+        return out
 
     def _process(self, batch: Batch) -> List[Response]:
         if batch.kind == PREDICT:
@@ -123,9 +256,20 @@ class ExplanationServer:
 
     def _finish(self, req: Request, resp: Response) -> Response:
         resp.latency_s = self.clock() - req.arrive_t
+        if req.degrade_action is not None:
+            resp.meta["degraded"] = req.degrade_action
         self.stats.record(req.kind,
                           req.method if req.kind == EXPLAIN else "",
                           resp.latency_s, resp.cache_hit)
+        return resp
+
+    def _finish_error(self, req: Request, exc: Exception) -> Response:
+        """Structured failure for one request of a poisoned batch."""
+        self.stats.record_error()
+        resp = Response(uid=req.uid, kind=req.kind,
+                        method=req.method if req.kind == EXPLAIN else None,
+                        error=str(exc), error_type=type(exc).__name__)
+        resp.latency_s = self.clock() - req.arrive_t
         return resp
 
     def _run_predict(self, batch: Batch) -> List[Response]:
@@ -155,6 +299,11 @@ class ExplanationServer:
 
     def _run_explain(self, batch: Batch) -> List[Response]:
         method = batch.requests[0].method
+        if batch.degraded:
+            # Rerouted traffic runs cold on the sibling engine; the primary
+            # cache's float residuals cannot replay an int16 backward (and
+            # vice versa), so the hit/warm paths are skipped entirely.
+            return self._explain_cold(method, batch.requests, degraded=True)
         hits, colds = [], []
         reusable = registry.get(method).mask_reuse
         for req in batch.requests:
@@ -215,7 +364,8 @@ class ExplanationServer:
                 method=method, cache_hit=True, batch_size=psize)))
         return out
 
-    def _explain_cold(self, method: str, reqs: List[Request]) -> List[Response]:
+    def _explain_cold(self, method: str, reqs: List[Request],
+                      degraded: bool = False) -> List[Response]:
         """Explain with no cached residuals — full FP+BP.
 
         Mask-reuse methods run the SAME two jitted programs as the hit path
@@ -224,13 +374,15 @@ class ExplanationServer:
         forward never changes the answer — and the forward's masks warm the
         cache for follow-ups.  Composite methods (IG, smoothgrad, ...)
         dispatch through the registry explainer, i.e. exactly the direct
-        :mod:`repro.core.attribution` call.
+        :mod:`repro.core.attribution` call.  Degraded (rerouted) batches
+        run on the sibling adapter and never touch the primary cache.
         """
+        adapter = self._adapter_for(degraded)
         if (registry.get(method).mask_reuse
-                and self._rules_compatible(self.adapter.store_rules, method)):
-            return self._explain_cold_bp(method, reqs)
+                and self._rules_compatible(adapter.store_rules, method)):
+            return self._explain_cold_bp(method, reqs, degraded=degraded)
         xb, live = Batch(("explain",), reqs).stack(self.batcher.max_batch)
-        explainer = self.explainer(method)
+        explainer = self.explainer(method, degraded)
         if reqs[0].target is None:             # bucket-homogeneous target kind
             target = None
         else:
@@ -251,12 +403,14 @@ class ExplanationServer:
                 batch_size=xb.shape[0])))
         return out
 
-    def _explain_cold_bp(self, method: str,
-                         reqs: List[Request]) -> List[Response]:
+    def _explain_cold_bp(self, method: str, reqs: List[Request],
+                         degraded: bool = False) -> List[Response]:
         """Cold pure-BP explain: residual forward + seed-batched fused BP,
-        warming the residual cache with the forward's packed masks."""
+        warming the residual cache with the forward's packed masks (primary
+        adapter only — degraded residuals are engine-incompatible)."""
+        adapter = self._adapter_for(degraded)
         xb, live = Batch(("explain",), reqs).stack(self.batcher.max_batch)
-        logits, residuals = self.adapter.predict(xb)
+        logits, residuals = adapter.predict(xb)
         targets = [self._targets_for(r, logits[i])
                    for i, r in enumerate(reqs)]
         pad = xb.shape[0] - live
@@ -265,14 +419,15 @@ class ExplanationServer:
                               axis=1)
         seeds = jax.nn.one_hot(jnp.asarray(tmat), logits.shape[-1],
                                dtype=logits.dtype)
-        rel = self.adapter.explain_cached(method, residuals, seeds)
+        rel = adapter.explain_cached(method, residuals, seeds)
         jax.block_until_ready(rel)
         self.stats.record_batch(live, xb.shape[0])
         out = []
         for i, req in enumerate(reqs):
-            self.cache.put(req.uid, CacheEntry(
-                logits=logits[i], residuals=slice_example(residuals, i),
-                rules=self.adapter.store_rules))
+            if not degraded:
+                self.cache.put(req.uid, CacheEntry(
+                    logits=logits[i], residuals=slice_example(residuals, i),
+                    rules=adapter.store_rules))
             out.append(self._finish(req, Response(
                 uid=req.uid, kind=EXPLAIN, logits=logits[i],
                 relevance=rel[:, i] if req.topk is not None else rel[0, i],

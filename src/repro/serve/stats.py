@@ -52,13 +52,24 @@ class MethodStats:
 
 
 class ServerStats:
-    """Aggregates request completions; keys are ``kind/method``."""
+    """Aggregates request completions; keys are ``kind/method``.
+
+    The hardening counters make the overload story auditable: ``sheds``
+    per reason (``queue_full | rate_limit | deadline | expired``),
+    ``degrades`` per action, dispatch ``errors``/``timeouts``, and the
+    peak queue depth observed at submit time.
+    """
 
     def __init__(self):
         self.methods: Dict[str, MethodStats] = defaultdict(MethodStats)
         self.batches = 0
         self.batched_rows = 0
         self.padded_rows = 0
+        self.sheds: Dict[str, int] = defaultdict(int)
+        self.degrades: Dict[str, int] = defaultdict(int)
+        self.errors = 0
+        self.timeouts = 0
+        self.peak_queue_depth = 0
 
     def record(self, kind: str, method: str, latency_s: float,
                cache_hit: bool) -> None:
@@ -70,14 +81,43 @@ class ServerStats:
         self.batched_rows += live
         self.padded_rows += padded
 
+    def record_shed(self, reason: str) -> None:
+        self.sheds[reason] += 1
+
+    def record_degrade(self, action: str) -> None:
+        self.degrades[action] += 1
+
+    def record_error(self) -> None:
+        self.errors += 1
+
+    def record_timeout(self) -> None:
+        self.timeouts += 1
+
+    def record_queue_depth(self, depth: int) -> None:
+        self.peak_queue_depth = max(self.peak_queue_depth, depth)
+
     def requests(self) -> int:
         return sum(m.count for m in self.methods.values())
+
+    def shed_count(self) -> int:
+        return sum(self.sheds.values())
+
+    def shed_rate(self) -> float:
+        """Sheds / offered load (completions + sheds)."""
+        offered = self.requests() + self.shed_count()
+        return self.shed_count() / offered if offered else 0.0
 
     def snapshot(self) -> dict:
         return {
             "requests": self.requests(),
             "batches": self.batches,
             "mean_occupancy": (self.batched_rows / max(self.padded_rows, 1)),
+            "sheds": dict(self.sheds),
+            "shed_rate": self.shed_rate(),
+            "degrades": dict(self.degrades),
+            "errors": self.errors,
+            "timeouts": self.timeouts,
+            "peak_queue_depth": self.peak_queue_depth,
             "methods": {k: v.snapshot()
                         for k, v in sorted(self.methods.items())},
         }

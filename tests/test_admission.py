@@ -1,0 +1,438 @@
+"""Heavy-traffic hardening: admission control, deadline shedding, EDF
+batching, graceful degradation, and the load-replay SLO harness.
+
+Everything runs on a :class:`~repro.serve.replay.VirtualClock` over the
+:class:`~repro.serve.replay.SimAdapter` stub (deterministic modeled service
+times), so queueing/shedding dynamics are exact and instant — the real
+compiled-engine server is covered by ``tests/test_serve.py``.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import (AdmissionConfig, AdmissionController, DegradePolicy,
+                         ExplanationServer, InvalidRequestError, RateLimit,
+                         Request, ServiceEstimator, ShedError, TokenBucket)
+from repro.serve.api import (EXPLAIN, PREDICT, SHED_DEADLINE, SHED_EXPIRED,
+                             SHED_QUEUE_FULL, SHED_RATE_LIMIT)
+from repro.serve.batcher import MicroBatcher
+from repro.serve.replay import (CostModel, SimAdapter, TraceEvent,
+                                VirtualClock, replay, synthesize)
+
+X = np.zeros((8, 8, 1), np.float32)
+
+
+def sim_server(clock=None, *, admission=None, **kw):
+    clock = clock or VirtualClock()
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_delay_s", 0.0)
+    return ExplanationServer(SimAdapter(clock), clock=clock,
+                             admission=admission, **kw)
+
+
+def req(uid, kind=PREDICT, **kw):
+    return Request(uid=uid, kind=kind, x=X, **kw)
+
+
+# ---------------------------------------------------------------------------
+# token bucket / service estimator primitives
+# ---------------------------------------------------------------------------
+
+
+def test_token_bucket_burst_then_refill():
+    b = TokenBucket(RateLimit(rate=10.0, burst=3), now=0.0)
+    assert [b.try_take(0.0) for _ in range(4)] == [True, True, True, False]
+    assert not b.try_take(0.05)          # half a token refilled: still < 1
+    assert b.try_take(0.1001)            # one token back at +0.1s
+    assert not b.try_take(0.1001)
+
+
+def test_rate_limit_validates():
+    with pytest.raises(ValueError):
+        RateLimit(rate=0.0, burst=4)
+    with pytest.raises(ValueError):
+        RateLimit(rate=5.0, burst=0.5)
+
+
+def test_service_estimator_ewma_and_prior():
+    est = ServiceEstimator(prior_s=1e-3, alpha=0.5)
+    assert est.estimate(PREDICT) == 1e-3                  # prior, no data
+    est.observe(PREDICT, "", duration_s=0.008, live=4)    # 2 ms/req
+    assert est.estimate(PREDICT) == pytest.approx(0.002)
+    est.observe(PREDICT, "", duration_s=0.016, live=4)    # 4 ms/req
+    assert est.estimate(PREDICT) == pytest.approx(0.003)  # EWMA(0.5)
+    assert est.estimate(EXPLAIN, "saliency") == 1e-3      # per-class keys
+
+
+# ---------------------------------------------------------------------------
+# admission decisions
+# ---------------------------------------------------------------------------
+
+
+def test_queue_full_sheds_with_typed_error():
+    ctl = AdmissionController(AdmissionConfig(capacity=2))
+    assert ctl.admit(req("a"), pending=1, now=0.0) is None
+    with pytest.raises(ShedError) as ei:
+        ctl.admit(req("b"), pending=2, now=0.0)
+    assert ei.value.reason == SHED_QUEUE_FULL
+    assert ei.value.uid == "b"
+
+
+def test_rate_limit_sheds_per_method_class():
+    ctl = AdmissionController(AdmissionConfig(
+        capacity=100,
+        rate_limits={"explain/saliency": RateLimit(rate=1.0, burst=1)}))
+    ctl.admit(req("a", EXPLAIN, method="saliency"), pending=0, now=0.0)
+    with pytest.raises(ShedError) as ei:
+        ctl.admit(req("b", EXPLAIN, method="saliency"), pending=0, now=0.0)
+    assert ei.value.reason == SHED_RATE_LIMIT
+    # other classes are not starved by the saliency bucket
+    ctl.admit(req("c", EXPLAIN, method="guided"), pending=0, now=0.0)
+    ctl.admit(req("d", PREDICT), pending=0, now=0.0)
+
+
+def test_infeasible_deadline_sheds_at_admission():
+    ctl = AdmissionController(AdmissionConfig(capacity=100))
+    ctl.estimator.observe(PREDICT, "", duration_s=0.01, live=1)  # 10 ms/req
+    with pytest.raises(ShedError) as ei:
+        ctl.admit(req("a", deadline_s=0.005), pending=10, now=0.0)
+    assert ei.value.reason == SHED_DEADLINE
+    # same queue, generous deadline: admitted and stamped
+    r = req("b", deadline_s=1.0)
+    ctl.admit(r, pending=10, now=0.0)
+    assert r.deadline_t == pytest.approx(1.0)
+
+
+def test_deadline_anchors_at_true_arrival():
+    """A pre-stamped arrive_t (replay drivers) spends budget before
+    admission; the absolute deadline must not slide with submit time."""
+    ctl = AdmissionController(AdmissionConfig(capacity=10))
+    r = req("a", deadline_s=0.05)
+    r.arrive_t = 1.0
+    ctl.admit(r, pending=0, now=1.04)           # late, but still feasible
+    assert r.deadline_t == pytest.approx(1.05)
+    late = req("b", deadline_s=0.05)
+    late.arrive_t = 1.0
+    with pytest.raises(ShedError) as ei:
+        ctl.admit(late, pending=0, now=1.06)    # budget already gone
+    assert ei.value.reason == SHED_DEADLINE
+
+
+def test_default_deadline_applies_when_request_has_none():
+    ctl = AdmissionController(AdmissionConfig(capacity=10,
+                                              default_deadline_s=0.2))
+    r = req("a")
+    ctl.admit(r, pending=0, now=5.0)
+    assert r.deadline_t == pytest.approx(5.2)
+
+
+# ---------------------------------------------------------------------------
+# EDF ordering + deadline-aware batching
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_keeps_edf_order():
+    clock = VirtualClock()
+    mb = MicroBatcher(max_batch=8, max_delay_s=10.0, clock=clock)
+    a = req("a", deadline_s=1.0)
+    a.deadline_t = 3.0
+    b = req("b", deadline_s=1.0)
+    b.deadline_t = 1.0
+    c = req("c")                                 # deadline-less -> back
+    d = req("d", deadline_s=1.0)
+    d.deadline_t = 2.0
+    for r in (a, c, b, d):
+        mb.submit(r)
+    (batch,) = mb.flush()
+    assert [r.uid for r in batch.requests] == ["b", "d", "a", "c"]
+
+
+def test_urgent_deadline_pops_underfull_bucket():
+    """A bucket pops EARLY when waiting longer would blow its most urgent
+    deadline, instead of holding for max_delay or a full batch."""
+    clock = VirtualClock()
+    mb = MicroBatcher(max_batch=8, max_delay_s=60.0, clock=clock)
+    r = req("a", deadline_s=1.0)
+    r.deadline_t = 0.010
+    mb.submit(r)
+    assert mb.ready(now=0.0, service_est_s=0.002) == []     # still slack
+    batches = mb.ready(now=0.009, service_est_s=0.002)      # would blow it
+    assert [b.requests[0].uid for b in batches] == ["a"]
+
+
+def test_expired_while_queued_becomes_shed_response():
+    clock = VirtualClock()
+    srv = sim_server(clock, max_delay_s=60.0, max_batch=8,
+                     admission=AdmissionConfig(capacity=10))
+    srv.submit(req("a", deadline_s=0.01))
+    srv.submit(req("b"))                         # no deadline: survives
+    clock.advance(0.05)                          # a's deadline passes queued
+    out = srv.poll()
+    shed = [r for r in out if r.error_type == "ShedError"]
+    assert [r.uid for r in shed] == ["a"]
+    assert shed[0].meta["shed_reason"] == SHED_EXPIRED
+    assert srv.stats.sheds[SHED_EXPIRED] == 1
+    assert [r.uid for r in srv.drain()] == ["b"]  # loop alive, b completes
+
+
+def test_expiry_never_occupies_padded_seat():
+    """pow2 padding x shed interaction: sweeping a doomed request shrinks
+    the launch to the next power of two instead of padding it along."""
+    clock = VirtualClock()
+    srv = sim_server(clock, max_delay_s=0.0, max_batch=8,
+                     admission=AdmissionConfig(capacity=10))
+    doomed = req("dead", deadline_s=0.001)
+    srv.submit(doomed)
+    srv.submit(req("x"))
+    srv.submit(req("y"))
+    clock.advance(0.01)                          # doomed expires in queue
+    out = {r.uid: r for r in srv.poll()}
+    assert out["dead"].error_type == "ShedError"
+    assert out["x"].ok and out["x"].batch_size == 2   # 2 live -> pad 2, not 4
+    snap = srv.stats.snapshot()
+    assert snap["mean_occupancy"] == 1.0
+
+
+def test_minority_method_not_starved_under_skewed_mix():
+    """A lone guided request amid a saliency flood completes within its
+    deadline: full majority buckets pop without resetting the minority
+    bucket's delay clock."""
+    clock = VirtualClock()
+    srv = sim_server(clock, max_batch=4, max_delay_s=0.005,
+                     admission=AdmissionConfig(capacity=1000))
+    srv.submit(req("minority", EXPLAIN, method="guided", deadline_s=0.05))
+    done = {}
+    for i in range(40):                          # 10 full saliency batches
+        srv.submit(req(f"s{i}", EXPLAIN, method="saliency"))
+        clock.advance(0.001)
+        for r in srv.poll():
+            done[r.uid] = r
+    for r in srv.drain():
+        done[r.uid] = r
+    assert done["minority"].ok
+    assert done["minority"].latency_s <= 0.05
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation
+# ---------------------------------------------------------------------------
+
+
+def degrade_server(clock, policy, capacity=4):
+    return sim_server(clock, max_delay_s=60.0, max_batch=8,
+                      admission=AdmissionConfig(capacity=capacity,
+                                                degrade=policy))
+
+
+def test_topk_panel_collapses_to_argmax_under_pressure():
+    clock = VirtualClock()
+    srv = degrade_server(clock, DegradePolicy(pressure_threshold=0.5))
+    srv.submit(req("q0", EXPLAIN, method="saliency"))
+    srv.submit(req("q1", EXPLAIN, method="saliency"))
+    panel = req("q2", EXPLAIN, method="saliency", topk=3)
+    srv.submit(panel)                            # pending 2/4 >= 0.5
+    assert panel.topk is None and panel.degrade_action == "topk_to_argmax"
+    assert not panel.degraded                    # still the primary engine
+    out = {r.uid: r for r in srv.drain()}
+    assert out["q2"].meta["degraded"] == "topk_to_argmax"
+    assert np.asarray(out["q2"].relevance).shape == X.shape  # not a panel
+    assert srv.stats.degrades["topk_to_argmax"] == 1
+
+
+def test_reroute_precision_runs_on_degraded_sibling():
+    clock = VirtualClock()
+    srv = degrade_server(clock, DegradePolicy(pressure_threshold=0.5,
+                                              reroute_precision="fxp16"))
+    srv.submit(req("q0", EXPLAIN, method="saliency"))
+    srv.submit(req("q1", EXPLAIN, method="saliency"))
+    rerouted = req("q2", EXPLAIN, method="saliency")
+    srv.submit(rerouted)
+    assert rerouted.degraded and rerouted.degrade_action == "reroute_precision"
+    out = {r.uid: r for r in srv.drain()}
+    assert out["q2"].ok and out["q2"].meta["degraded"] == "reroute_precision"
+    assert srv._degraded_adapter is not None
+    assert srv._degraded_adapter.precision == "fxp16"
+    # degraded traffic must not warm the primary residual cache
+    assert srv.cache.peek("q2") is None
+    # below pressure nothing degrades
+    calm = req("q3", EXPLAIN, method="saliency")
+    srv.submit(calm)
+    assert not calm.degraded and calm.degrade_action is None
+
+
+def test_degraded_and_primary_traffic_never_coalesce():
+    a = req("a", EXPLAIN, method="saliency")
+    b = req("b", EXPLAIN, method="saliency")
+    b.degraded = True
+    from repro.serve.batcher import bucket_key
+    assert bucket_key(a) != bucket_key(b)
+
+
+def test_reroute_requires_with_precision_adapter():
+    class Bare:
+        store_rules = "saliency"
+    with pytest.raises(ValueError, match="with_precision"):
+        ExplanationServer(Bare(), admission=AdmissionConfig(
+            degrade=DegradePolicy(reroute_precision="fxp16")))
+
+
+# ---------------------------------------------------------------------------
+# malformed requests / fault isolation
+# ---------------------------------------------------------------------------
+
+
+def test_nonfinite_payload_rejected_as_invalid_request():
+    srv = sim_server(admission=AdmissionConfig(capacity=10))
+    bad = np.full((8, 8, 1), np.nan, np.float32)
+    with pytest.raises(InvalidRequestError):
+        srv.submit(Request(uid="a", kind=PREDICT, x=bad))
+    with pytest.raises(ValueError):              # back-compat alias
+        srv.submit(Request(uid="a", kind=PREDICT, x=bad))
+    assert srv.batcher.pending() == 0
+
+
+def test_dispatch_failure_yields_error_responses_not_dead_loop():
+    srv = sim_server()
+
+    def boom(xb):
+        raise RuntimeError("kernel exploded")
+    srv.adapter.predict = boom
+    srv.submit(req("a"))
+    srv.submit(req("b"))
+    out = {r.uid: r for r in srv.poll()}
+    assert set(out) == {"a", "b"}
+    assert all(r.error_type == "RuntimeError" for r in out.values())
+    assert srv.stats.errors == 2
+    # loop survives: restore the adapter, next request completes
+    del srv.adapter.predict
+    srv.submit(req("c"))
+    assert [r.ok for r in srv.drain()] == [True]
+
+
+def test_dispatch_timeout_flags_and_counts():
+    clock = VirtualClock()
+    srv = sim_server(clock, dispatch_timeout_s=0.0001)
+    srv.submit(req("a"))                         # modeled cost >> timeout
+    (resp,) = srv.drain()
+    assert resp.ok
+    assert resp.meta["dispatch_timeout_s"] > 0.0001
+    assert srv.stats.timeouts == 1
+
+
+# ---------------------------------------------------------------------------
+# the replay harness itself
+# ---------------------------------------------------------------------------
+
+
+def test_synthesize_is_deterministic_and_sorted():
+    a = synthesize(500, rate=100.0, seed=7)
+    b = synthesize(500, rate=100.0, seed=7)
+    assert a == b
+    assert all(x.t <= y.t for x, y in zip(a, a[1:]))
+    assert synthesize(500, rate=100.0, seed=8) != a
+    kinds = {e.kind for e in a}
+    assert kinds == {PREDICT, EXPLAIN}
+    assert any(e.topk for e in a)
+    assert all(e.key_seed is not None for e in a if e.method == "smoothgrad")
+
+
+def test_bursty_trace_is_bursty_at_the_same_mean_rate():
+    n, rate = 4000, 1000.0
+    tr = synthesize(n, rate=rate, arrivals="bursty", seed=3)
+    # the on/off normalization is approximate; the long-run rate stays
+    # within ~2x while the SHAPE is far spikier than Poisson
+    assert tr[-1].t == pytest.approx(n / rate, rel=0.5)
+    gaps = np.diff([e.t for e in tr])
+    pois = np.diff([e.t for e in synthesize(n, rate=rate, seed=3)])
+    assert gaps.std() / gaps.mean() > 2.0 * pois.std() / pois.mean()
+    with pytest.raises(ValueError):
+        synthesize(10, arrivals="weird")
+
+
+def test_virtual_clock_never_runs_backwards():
+    c = VirtualClock()
+    c.advance(1.5)
+    assert c() == 1.5
+    with pytest.raises(ValueError):
+        c.advance(-0.1)
+
+
+def test_sim_adapter_hit_and_cold_paths_agree():
+    clock = VirtualClock()
+    srv = sim_server(clock, max_delay_s=0.0)
+    srv.submit(req("a"))
+    srv.poll()
+    srv.submit(req("a", EXPLAIN, method="saliency"))
+    (hit,) = srv.poll()
+    srv.submit(req("b", EXPLAIN, method="saliency"))
+    (cold,) = srv.poll()
+    assert hit.cache_hit and not cold.cache_hit
+    np.testing.assert_array_equal(np.asarray(hit.relevance),
+                                  np.asarray(cold.relevance))
+
+
+def replay_pair(n=1200, overload=4.0):
+    deadlines = {"predict": 0.05, "explain": 0.1}
+
+    def drive(rate, arrivals, seed):
+        clock = VirtualClock()
+        srv = ExplanationServer(
+            SimAdapter(clock), clock=clock, max_batch=8, max_delay_s=0.002,
+            admission=AdmissionConfig(capacity=256, default_deadline_s=0.05),
+            method_opts={"integrated_gradients": {"steps": 4},
+                         "smoothgrad": {"n": 4}})
+        return replay(srv, synthesize(n, rate=rate, arrivals=arrivals,
+                                      seed=seed, deadline_s=deadlines))
+
+    return (drive(1500.0, "poisson", 1),
+            drive(1500.0 * overload, "bursty", 2))
+
+
+def test_replay_nominal_meets_slo_overload_sheds_deterministically():
+    nominal, over = replay_pair()
+    # nominal: everything admitted, completed, inside its deadline
+    assert nominal.shed_total == 0
+    assert nominal.deadline_misses == 0
+    assert nominal.completed == nominal.offered
+    assert nominal.errors == 0
+    assert nominal.p_us(PREDICT, 99) < 0.05e6
+    # overload: bounded deterministic shedding, kept promises, alive loop
+    assert 0 < over.shed_total < over.offered
+    assert over.errors == 0
+    assert over.deadline_misses == 0             # admitted = kept
+    assert over.peak_queue_depth <= 256
+    assert over.p_us(EXPLAIN, 99) <= 0.1e6 * 1.001
+    # deterministic: same trace, same decisions
+    again_nom, again_over = replay_pair()
+    assert again_over.shed_total == over.shed_total
+    assert again_over.sheds_by_reason == over.sheds_by_reason
+    assert again_nom.completed == nominal.completed
+
+
+def test_replay_requires_virtual_clock():
+    srv = ExplanationServer(SimAdapter(VirtualClock()))   # default clock
+    with pytest.raises(TypeError, match="VirtualClock"):
+        replay(srv, [TraceEvent(t=0.0, uid="a", kind=PREDICT)])
+
+
+def test_cost_model_scale_derives_cheaper_sibling():
+    c = CostModel(launch_s=2e-4, row_s=5e-5, seed_row_s=3e-5)
+    h = c.scale(0.5)
+    assert h.predict_s(4) == pytest.approx(c.predict_s(4) / 2)
+    assert h.replay_s(3, 4) == pytest.approx(c.replay_s(3, 4) / 2)
+
+
+def test_load_replay_slo_checker_flags_violations():
+    import importlib.util
+    import os
+    spec = importlib.util.spec_from_file_location(
+        "bench_load_replay",
+        os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                     "load_replay.py"))
+    load_replay = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(load_replay)
+    nominal, over = replay_pair(n=600)
+    assert load_replay.check_slo(nominal, over) == []
+    assert load_replay.check_slo(over, over)     # nominal sheds -> failures
+    starved = type(over)(offered=100, completed=0, shed_submit=100)
+    assert any("graceful" in f
+               for f in load_replay.check_slo(nominal, starved))

@@ -387,3 +387,62 @@ def test_from_engine_preserves_the_configured_engine(setup):
         "guided", residuals,
         jax.nn.one_hot(jnp.argmax(logits, -1), CFG.num_classes)[None])
     assert rel.shape == (1,) + x.shape
+
+
+# ---------------------------------------------------------------------------
+# folded-batch plan audit (composites under a resolved device plan)
+# ---------------------------------------------------------------------------
+
+
+def test_fold_audit_replans_or_refuses(setup):
+    """ig(steps=S)/smoothgrad(n=S) fold S into the batch dim, running the
+    planned kernels at M = S*B — a shape resolve_plan never audited.  The
+    engine must re-audit at call time: keep the plan when it still fits,
+    re-plan when a tile's footprint overflows, and raise
+    InfeasiblePlanError (not overrun the budget) when nothing fits."""
+    from repro.plan import InfeasiblePlanError
+    params, x = setup
+    eng = build(spec_for(params, device="edge-small", batch=2))
+    x2 = x[:2]
+    # folded 16*2=32 rows: every planned tile still fits edge-small
+    assert eng._engine_for_fold(16, x2) is eng
+    # the audited launch serves the composite with the same answer as an
+    # unplanned engine (tiling never changes the math)
+    _, rel = eng.ig(x2, steps=32)
+    ref_eng = build(spec_for(params))
+    _, ref = ref_eng.ig(x2, steps=32)
+    np.testing.assert_allclose(np.asarray(rel), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+    # absurd fold: the tiny CNN's fused FC BP has no tile fitting the 1 MB
+    # profile at M=2048 (its m dim rides the grid whole) -> typed refusal
+    # from the planner, BEFORE any kernel launch overruns the budget
+    with pytest.raises(InfeasiblePlanError):
+        eng.ig(x2, steps=1024)
+
+
+def test_fold_audit_replans_paper_cnn(setup):
+    """The paper CNN has a middle regime: at folded M=64 the resolved
+    fc0.bwd tile overflows edge-small but a SMALLER tile still fits, so the
+    audit re-plans and dispatches through a sibling engine (plan-level
+    check only — jit is lazy, nothing compiles here)."""
+    paper_cfg = cnn.CNNConfig()
+    paper = cnn.init(jax.random.PRNGKey(2), paper_cfg)
+    eng = build(EngineSpec(model=CNNModel(paper, paper_cfg),
+                           device="edge-small", batch=2))
+    xp = jnp.zeros((2, *paper_cfg.in_hw, paper_cfg.in_ch))
+    assert eng._engine_for_fold(16, xp) is eng         # folded 32 fits
+    sib = eng._engine_for_fold(32, xp)                 # folded 64 replans
+    assert sib is not eng
+    assert eng._engine_for_fold(32, xp) is sib         # memoized per M
+    old, new = eng.plan.get("fc0.bwd"), sib.plan.get("fc0.bwd")
+    assert (new.tk, new.tn) != (old.tk, old.tn)
+    from repro.plan import InfeasiblePlanError
+    with pytest.raises(InfeasiblePlanError):
+        eng._engine_for_fold(1024, xp)                 # nothing fits
+
+
+def test_fold_audit_noop_without_a_plan(setup):
+    params, x = setup
+    eng = build(spec_for(params))                      # no device plan
+    assert eng._plan is None
+    assert eng._engine_for_fold(64, x[:2]) is eng

@@ -218,6 +218,68 @@ def test_cache_corrupt_file_reads_empty(tmp_path):
     assert cache.lookup("k") is None and cache.misses == 1
 
 
+def test_cache_corruption_recovers_with_atomic_rewrite(tmp_path):
+    """A scribbled cache file is logged, dropped, and atomically rewritten
+    clean — planning proceeds as a recompute, never a crash."""
+    p = tmp_path / "tiles.json"
+    for garbage in ('{"k": {"tile": [64', "[1, 2, 3]", '"a string"'):
+        p.write_text(garbage)                      # truncated / non-object
+        cache = TuningCache(str(p))
+        plan = plan_cnn(TINY_CFG, device="edge-small", cache=cache)
+        assert cache.hits == 0 and cache.misses == len(plan)
+        stored = json.loads(p.read_text())         # rewritten: valid again
+        assert len(stored) == len(plan)
+        warm = TuningCache(str(p))
+        assert plan_cnn(TINY_CFG, device="edge-small", cache=warm) == plan
+        assert warm.misses == 0
+
+
+def test_cache_scribbled_entries_dropped_others_kept(tmp_path):
+    cache = TuningCache(str(tmp_path / "tiles.json"))
+    plan = plan_cnn(TINY_CFG, device="edge-small", cache=cache)
+    stored = json.loads(open(cache.path).read())
+    victim = sorted(stored)[0]
+    stored[victim] = {"tile": "not-a-list"}        # scribbled value
+    stored["foreign|blob"] = 7                     # not even a dict
+    stored["bool|tile"] = {"tile": [True, 8]}      # bools are not tile dims
+    with open(cache.path, "w") as f:
+        json.dump(stored, f)
+    warm = TuningCache(cache.path)
+    assert len(warm) == len(plan) - 1              # bad entries dropped
+    assert plan_cnn(TINY_CFG, device="edge-small", cache=warm) == plan
+    assert warm.hits == len(plan) - 1 and warm.misses == 1
+    cleaned = json.loads(open(cache.path).read())  # rewritten + replanned
+    assert "foreign|blob" not in cleaned and "bool|tile" not in cleaned
+    assert TuningCache.valid_entry(cleaned[victim])
+
+
+def test_cache_wrong_arity_tile_is_replanned_and_repaired(tmp_path):
+    """An entry whose tile list passes the schema but decodes to the wrong
+    family arity (a cross-family scribble) is replanned, not crashed on."""
+    cache = TuningCache(str(tmp_path / "tiles.json"))
+    plan = plan_cnn(TINY_CFG, device="edge-small", cache=cache)
+    stored = json.loads(open(cache.path).read())
+    victim = next(k for k in stored if k.startswith("vmm_fwd"))
+    stored[victim]["tile"] = [128]                 # conv-arity blob
+    with open(cache.path, "w") as f:
+        json.dump(stored, f)
+    warm = TuningCache(cache.path)
+    assert plan_cnn(TINY_CFG, device="edge-small", cache=warm) == plan
+    repaired = json.loads(open(cache.path).read())
+    assert len(repaired[victim]["tile"]) == 3      # stored over, full triple
+    with pytest.raises(ValueError):
+        planner_mod._decode_tile("vmm_fwd", [128])
+    with pytest.raises(ValueError):
+        planner_mod._decode_tile("no_such_family", [1, 2, 3])
+
+
+def test_cache_unreadable_path_never_crashes(tmp_path):
+    cache = TuningCache(str(tmp_path))             # a DIRECTORY, not a file
+    assert len(cache) == 0                         # IsADirectoryError -> {}
+    plan = plan_cnn(TINY_CFG, device="edge-small", cache=cache)
+    assert len(plan) and cache.misses == len(plan)
+
+
 # ---------------------------------------------------------------------------
 # hypothesis property sweeps (slow tier)
 # ---------------------------------------------------------------------------

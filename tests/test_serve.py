@@ -469,3 +469,98 @@ def test_adapter_rejects_unknown_precision(setup):
     params, _, _ = setup
     with pytest.raises(ValueError):
         CNNAdapter(params, CFG, precision="int4")
+
+
+# ---------------------------------------------------------------------------
+# hardening: malformed requests, fault isolation, typed sheds (real adapter)
+# ---------------------------------------------------------------------------
+
+
+def test_malformed_request_battery(setup):
+    """Poisoned payloads are refused AT SUBMIT with a typed (ValueError-
+    compatible) error and never reach a compiled batch."""
+    from repro.serve import AdmissionConfig, InvalidRequestError
+    params, adapter, x = setup
+    srv = make_server(adapter, admission=AdmissionConfig(capacity=8))
+    nan = np.asarray(x[0]).copy()
+    nan[0, 0, 0] = np.nan
+    inf = np.asarray(x[0]).copy()
+    inf[-1, -1, -1] = np.inf
+    for bad in (nan, inf):
+        with pytest.raises(InvalidRequestError):
+            srv.submit(Request(uid="bad", kind=PREDICT, x=bad))
+        with pytest.raises(ValueError):          # pre-hardening catch sites
+            srv.submit(Request(uid="bad", kind=PREDICT, x=bad))
+    with pytest.raises(InvalidRequestError, match="shape"):
+        srv.submit(Request(uid="shape", kind=PREDICT,
+                           x=np.zeros((4, 4, 3), np.float32)))
+    with pytest.raises(InvalidRequestError):
+        srv.submit(Request(uid="rank", kind=EXPLAIN,
+                           x=np.zeros((8, 8), np.float32)))
+    assert srv.batcher.pending() == 0            # nothing slipped through
+    out = srv.serve([Request(uid="ok", kind=PREDICT, x=x[0])])
+    assert out["ok"].ok                          # loop unharmed
+
+
+def test_dispatch_failure_is_fault_isolated(setup):
+    """An adapter exception mid-batch becomes per-request error responses;
+    the worker loop survives and keeps serving."""
+    params, _, x = setup
+    adapter = CNNAdapter(params, CFG)
+
+    def boom(xb):
+        raise RuntimeError("device program crashed")
+    adapter.predict = boom
+    srv = make_server(adapter)
+    srv.submit(Request(uid="a", kind=PREDICT, x=x[0]))
+    srv.submit(Request(uid="b", kind=PREDICT, x=x[1]))
+    out = {r.uid: r for r in srv.drain()}
+    assert set(out) == {"a", "b"}
+    for r in out.values():
+        assert not r.ok and r.error_type == "RuntimeError"
+        assert "crashed" in r.error
+    assert srv.stats.errors == 2
+    del adapter.predict                          # restore the class method
+    ok = srv.serve([Request(uid="c", kind=PREDICT, x=x[2])])["c"]
+    assert ok.ok and srv.cache.peek("c") is not None
+
+
+def test_capacity_shed_is_typed_and_serve_folds_it(setup):
+    from repro.serve import AdmissionConfig, ShedError
+    params, adapter, x = setup
+    srv = make_server(adapter, max_delay_s=60.0,
+                      admission=AdmissionConfig(capacity=1))
+    srv.submit(Request(uid="a", kind=PREDICT, x=x[0]))
+    with pytest.raises(ShedError) as ei:
+        srv.submit(Request(uid="b", kind=PREDICT, x=x[1]))
+    assert ei.value.reason == "queue_full" and ei.value.uid == "b"
+    assert srv.stats.sheds["queue_full"] == 1
+    # the batch-serve surface returns sheds as structured responses
+    out = srv.serve([Request(uid="c", kind=PREDICT, x=x[2])])
+    assert out["c"].error_type == "ShedError"
+    assert out["c"].meta["shed_reason"] == "queue_full"
+    assert out["a"].ok                           # the admitted one completes
+
+
+def test_degrade_reroutes_to_fxp16_sibling_end_to_end(setup, setup_fxp):
+    """Under pressure a float explain reroutes to the quantized sibling:
+    the response is flagged, the primary cache stays cold, and the heatmap
+    rank-correlates with the float engine's (the certified trade)."""
+    from repro.core import fidelity
+    from repro.serve import AdmissionConfig, DegradePolicy
+    params, adapter, x = setup
+    srv = make_server(adapter, max_delay_s=60.0, admission=AdmissionConfig(
+        capacity=2, degrade=DegradePolicy(pressure_threshold=0.5,
+                                          reroute_precision="fxp16")))
+    srv.submit(Request(uid="f", kind=EXPLAIN, x=x[0], method="saliency"))
+    rerouted = Request(uid="q", kind=EXPLAIN, x=x[0], method="saliency")
+    srv.submit(rerouted)                         # pending 1/2 hits threshold
+    assert rerouted.degraded
+    out = {r.uid: r for r in srv.drain()}
+    assert out["q"].ok and out["q"].meta["degraded"] == "reroute_precision"
+    assert "degraded" not in out["f"].meta
+    assert srv._degraded_adapter.precision == "fxp16"
+    assert srv.cache.peek("q") is None           # never warms the primary
+    hm_f = attribution.heatmap(np.asarray(out["f"].relevance)[None])[0]
+    hm_q = attribution.heatmap(np.asarray(out["q"].relevance)[None])[0]
+    assert fidelity.spearman(np.asarray(hm_f), np.asarray(hm_q)) > 0.8
