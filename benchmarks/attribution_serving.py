@@ -122,6 +122,37 @@ def run():
     rows.append(("serve/smoothgrad_batched_us", us_sgb,
                  f"n={nsg}_vs_laxmap={us_sgs / max(us_sgb, 1):.2f}x"))
     rows.append(("serve/smoothgrad_laxmap_us", us_sgs, f"n={nsg}_baseline"))
+
+    # observability zero-cost guarantee, in numbers: the same request
+    # stream through the same engine with (a) no tracer at all (the
+    # NULL_TRACER no-op singletons), (b) a constructed-but-disabled
+    # Tracer, (c) a recording Tracer.  (a) and (b) must track each other
+    # within noise — these *_us rows ride the report.py --check gate.
+    from repro.obs import Tracer
+    from repro.serve import CNNAdapter, ExplanationServer, Request
+
+    def serve_pass(tracer, n=12):
+        server = ExplanationServer(CNNAdapter.from_engine(eng),
+                                   max_batch=4, max_delay_s=0.0,
+                                   tracer=tracer)
+        t0 = time.perf_counter()
+        for i in range(n):
+            server.submit(Request(uid=f"o{i}", kind="predict", x=xc[0]))
+            server.submit(Request(uid=f"o{i}", kind="explain", x=xc[0],
+                                  method="saliency"))
+            server.poll()
+        server.drain()
+        return (time.perf_counter() - t0) / (2 * n) * 1e6
+
+    serve_pass(None)                        # warm the jitted programs
+    us_off = serve_pass(None)
+    us_dis = serve_pass(Tracer(enabled=False))
+    us_on = serve_pass(Tracer())
+    rows.append(("obs/serve_untraced_us", us_off, "no_tracer_null_spans"))
+    rows.append(("obs/serve_tracer_disabled_us", us_dis,
+                 f"vs_untraced={us_dis / max(us_off, 1):.2f}x"))
+    rows.append(("obs/serve_tracer_enabled_us", us_on,
+                 f"vs_untraced={us_on / max(us_off, 1):.2f}x"))
     return rows
 
 

@@ -34,11 +34,13 @@ DEADLINES = {"predict": 0.05, "explain": 0.1}
 NOMINAL_RATE = 1500.0
 
 
-def _server(clock, adapter, *, capacity=256, max_batch=8, max_delay_s=0.002):
+def _server(clock, adapter, *, capacity=256, max_batch=8, max_delay_s=0.002,
+            tracer=None):
     from repro.serve import (AdmissionConfig, DegradePolicy,
                              ExplanationServer)
     return ExplanationServer(
         adapter, max_batch=max_batch, max_delay_s=max_delay_s, clock=clock,
+        tracer=tracer,
         admission=AdmissionConfig(
             capacity=capacity, default_deadline_s=DEADLINES["predict"],
             degrade=DegradePolicy(pressure_threshold=0.5,
@@ -79,6 +81,26 @@ def _timed_pass(n, rate, seed):
                        deadline_s={k: 50 * v for k, v in DEADLINES.items()})
     return replay(_server(clock, TimedAdapter(inner, clock)), trace,
                   example_shape=shape)
+
+
+def traced_pass(n, rate, out, *, arrivals="bursty", seed=4):
+    """One traced sim pass -> Perfetto-loadable span file (BENCH artifact).
+
+    Returns (report, problem-strings); problems are span-integrity or
+    trace-event-schema violations — CI fails the obs smoke on any.
+    """
+    from repro.obs.trace import Tracer, integrity_errors, validate_chrome
+    from repro.serve.replay import SimAdapter, VirtualClock, replay, synthesize
+    clock = VirtualClock()
+    tracer = Tracer(clock=clock)
+    trace = synthesize(n, rate=rate, arrivals=arrivals, seed=seed,
+                       deadline_s=DEADLINES)
+    rep = replay(_server(clock, SimAdapter(clock), tracer=tracer), trace)
+    tracer.finish()
+    problems = integrity_errors(tracer.spans)
+    problems += validate_chrome(tracer.to_chrome())
+    tracer.save(out)
+    return rep, problems
 
 
 def check_slo(nominal, overload, *, max_overload_shed=0.95) -> list:
@@ -161,11 +183,25 @@ def main():
                     help="overload factor over the nominal rate")
     ap.add_argument("--check-slo", action="store_true",
                     help="exit nonzero when a replay SLO invariant fails")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="also run a short traced sim pass and write its "
+                         "Chrome trace-event JSON (exit nonzero on span-"
+                         "integrity or schema problems)")
     args = ap.parse_args()
     rows, (nom, ovl) = run(n=args.n, timed_n=args.timed_n,
                            overload=args.overload)
     for name, val, derived in rows:
-        print(f"{name},{val:.3f},{derived}")
+        v = f"{val:.3f}" if val is not None else "-"
+        print(f"{name},{v},{derived}")
+    if args.trace_out:
+        rep, problems = traced_pass(min(args.n, 2000), NOMINAL_RATE * 2,
+                                    args.trace_out)
+        print(f"[load_replay --trace-out] {rep.offered} requests -> "
+              f"{args.trace_out}")
+        if problems:
+            for p in problems:
+                print(f"[load_replay --trace-out] PROBLEM: {p}")
+            raise SystemExit(1)
     if args.check_slo:
         fails = check_slo(nom, ovl)
         if fails:

@@ -11,6 +11,10 @@ compares the two newest ``benchmarks/results/BENCH_*.json`` snapshots
 any ``*_shed_rate`` row of the load-replay suite rose past the relative
 threshold plus a 1%-absolute floor — the bench trajectory's tripwire for
 planned-vs-default tile drift AND admission-policy drift.
+
+    PYTHONPATH=src python -m benchmarks.report --trend [--filter SUBSTR]
+prints every metric's trajectory across ALL snapshots (first->last ratio
+plus the per-date values) — the long view the pairwise gate can't give.
 """
 from __future__ import annotations
 
@@ -176,18 +180,63 @@ def check(results_dir: str = "benchmarks/results",
     return 0
 
 
+def trend(results_dir: str = "benchmarks/results",
+          pattern: str = "") -> int:
+    """Per-metric trajectory across ALL BENCH_*.json snapshots (not just
+    the newest pair the gate compares): every row name, its value in each
+    dated snapshot, and the net first->last ratio.  ``pattern`` filters
+    row names by substring."""
+    paths = sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json")))
+    if not paths:
+        print(f"[report --trend] no BENCH_*.json snapshots in {results_dir}")
+        return 0
+    dates, series = [], {}
+    for p in paths:
+        with open(p) as f:
+            bench = json.load(f)
+        date = bench.get("date") or os.path.basename(p)
+        dates.append(date)
+        for rows in bench.get("suites", {}).values():
+            for name, val, _derived in rows:
+                if pattern and pattern not in name:
+                    continue
+                if isinstance(val, (int, float)) and math.isfinite(val):
+                    series.setdefault(name, {})[date] = float(val)
+    print(f"[report --trend] {len(paths)} snapshots "
+          f"({dates[0]} .. {dates[-1]}), {len(series)} metrics")
+    width = max((len(n) for n in series), default=0)
+    for name in sorted(series):
+        vals = series[name]
+        seq = [vals.get(d) for d in dates]
+        present = [v for v in seq if v is not None]
+        ratio = (f"{present[-1] / present[0]:5.2f}x"
+                 if len(present) > 1 and present[0] else "     -")
+        cells = " ".join(f"{v:>10.3f}" if v is not None else f"{'-':>10}"
+                         for v in seq)
+        print(f"  {name:<{width}} {ratio}  {cells}")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("paths", nargs="*",
                     help="dry-run JSONL artifacts (table mode)")
     ap.add_argument("--check", action="store_true",
                     help="regression-gate the two newest BENCH_*.json")
+    ap.add_argument("--trend", action="store_true",
+                    help="print every metric's trajectory across all "
+                         "BENCH_*.json snapshots")
+    ap.add_argument("--filter", default="",
+                    help="--trend: keep only row names containing this "
+                         "substring")
     ap.add_argument("--results-dir", default="benchmarks/results")
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="latency regression tolerance (fraction)")
     args = ap.parse_args()
     if args.check:
         raise SystemExit(check(args.results_dir, args.threshold))
+    if args.trend:
+        raise SystemExit(trend(args.results_dir, args.filter))
     paths = args.paths or sorted(glob.glob("benchmarks/results/dryrun*.jsonl"))
     recs = load(paths)
     base = [r for r in recs if not r.get("triangle_skip")

@@ -13,8 +13,17 @@ from __future__ import annotations
 
 import datetime
 import json
+import math
 import os
 import traceback
+
+
+def _row_val(val):
+    """Snapshot cell: finite float or None (strict JSON; NaN is a bug)."""
+    if val is None:
+        return None
+    v = float(val)
+    return v if math.isfinite(v) else None
 
 
 def main() -> None:
@@ -34,10 +43,12 @@ def main() -> None:
     results, failures = {}, []
     for name, fn in suites:
         try:
-            rows = [(row, float(val), derived) for row, val, derived in fn()]
+            rows = [(row, _row_val(val), derived)
+                    for row, val, derived in fn()]
             results[name] = rows
             for row, val, derived in rows:
-                print(f"{row},{val:.3f},{derived}", flush=True)
+                v = f"{val:.3f}" if val is not None else "-"
+                print(f"{row},{v},{derived}", flush=True)
         except Exception:
             failures.append(name)
             print(f"{name},nan,FAILED", flush=True)
@@ -48,8 +59,10 @@ def main() -> None:
     os.makedirs(out_dir, exist_ok=True)
     out_path = os.path.join(out_dir, f"BENCH_{date}.json")
     with open(out_path, "w") as f:
+        # strict JSON: _row_val already mapped non-finite cells to None,
+        # allow_nan=False makes any future NaN a loud failure here
         json.dump({"date": date, "suites": results, "failures": failures},
-                  f, indent=1)
+                  f, indent=1, allow_nan=False)
     print(f"[bench] wrote {out_path}", flush=True)
 
     if failures:

@@ -32,6 +32,7 @@ from repro.engine import methods
 from repro.engine.backward import (BackwardEngine, ManualSeedBatchedBackward,
                                    VjpBackward)
 from repro.engine.spec import EngineSpec, Fixed, TopK
+from repro.obs import metrics as obsm
 
 
 class Engine:
@@ -405,10 +406,13 @@ def build(spec: EngineSpec) -> Engine:
     """
     eng = _BUILD_CACHE.get(spec)
     if eng is None:
+        obsm.ENGINE_BUILDS.inc(outcome="build")
         _BUILD_CACHE[spec] = eng = Engine(spec)
         while len(_BUILD_CACHE) > MAX_CACHED_ENGINES:
             _BUILD_CACHE.popitem(last=False)
+            obsm.ENGINE_BUILDS.inc(outcome="evict")
     else:
+        obsm.ENGINE_BUILDS.inc(outcome="hit")
         _BUILD_CACHE.move_to_end(spec)
     return eng
 

@@ -40,6 +40,7 @@ from repro.kernels import interpret_mode, validate_bp_gates
 from repro.kernels.tiling import SUBLANE, align_up, cout_tiling
 from repro.kernels.pool.pool import unpack_crumbs, unpool_scatter
 from repro.kernels.relu_mask.relu_mask import gate_gradient, unpack_bits
+from repro.obs import profile as obs_profile
 
 
 def _im2col_dot(xpad, K: int, H: int, W: int, wmat):
@@ -60,6 +61,7 @@ def _conv_kernel(x_ref, w_ref, o_ref, *, K: int, H: int, W: int):
     o_ref[...] = _im2col_dot(x_ref[...], K, H, W, wmat).astype(o_ref.dtype)
 
 
+@obs_profile.instrument("conv2d_fwd")
 def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, *,
                   co_tile: Optional[int] = None,
                   interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -135,6 +137,7 @@ def _conv_bwd_fused_kernel(*refs, K: int, H: int, W: int, method: str,
     o_ref[...] = out.reshape(s, 1, H, W, tco).astype(o_ref.dtype)
 
 
+@obs_profile.instrument("conv2d_bwd")
 def conv2d_bwd_fused_pallas(
         g: jnp.ndarray, wt: jnp.ndarray, *,
         pool_idx: Optional[jnp.ndarray] = None,

@@ -27,6 +27,7 @@ from repro.kernels import interpret_mode, validate_bp_gates
 from repro.kernels.tiling import SUBLANE, align_up, cout_tiling
 from repro.kernels.pool.pool import unpack_crumbs, unpool_scatter
 from repro.kernels.relu_mask.relu_mask import gate_gradient, unpack_bits
+from repro.obs import profile as obs_profile
 
 
 def _im2col_dot_i32(xpad, K: int, H: int, W: int, wmat):
@@ -48,6 +49,7 @@ def _conv_fxp_kernel(x_ref, w_ref, o_ref, *, K: int, H: int, W: int,
     o_ref[...] = requantize(acc, shift)
 
 
+@obs_profile.instrument("conv2d_fwd")
 def conv2d_fxp_pallas(x: jnp.ndarray, w: jnp.ndarray, *,
                       shift: int = WGT_FRAC, co_tile: Optional[int] = None,
                       interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -124,6 +126,7 @@ def _conv_bwd_fused_fxp_kernel(*refs, K: int, H: int, W: int, method: str,
     o_ref[...] = out.reshape(s, 1, H, W, tco)
 
 
+@obs_profile.instrument("conv2d_bwd")
 def conv2d_bwd_fused_fxp_pallas(
         g: jnp.ndarray, wt: jnp.ndarray, *,
         pool_idx: Optional[jnp.ndarray] = None,

@@ -23,6 +23,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import interpret_mode
 from repro.kernels.tiling import CRUMBS_PER_BYTE, align_up, crumb_bytes
+from repro.obs import profile as obs_profile
 
 
 # ---------------------------------------------------------------------------
@@ -72,6 +73,7 @@ def _unpool_bwd_kernel(i_ref, g_ref, o_ref):
     o_ref[0] = unpool_scatter(idx, g_ref[0])
 
 
+@obs_profile.instrument("pool")
 def maxpool_fwd_pallas(x: jnp.ndarray, *, interpret: Optional[bool] = None):
     """x: [N, H, W, C] (H, W even; C padded to 4) -> (pooled, packed idx)."""
     if interpret is None:

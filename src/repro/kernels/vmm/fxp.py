@@ -26,6 +26,7 @@ from repro.core.fixedpoint import WGT_FRAC, requantize
 from repro.kernels import interpret_mode, validate_bp_gates
 from repro.kernels.tiling import vmm_tiling
 from repro.kernels.relu_mask.relu_mask import gate_gradient, unpack_bits
+from repro.obs import profile as obs_profile
 
 
 def _mm_fxp_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int, shift: int):
@@ -41,6 +42,7 @@ def _mm_fxp_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int, shift: int):
         o_ref[...] = requantize(acc_ref[...], shift)
 
 
+@obs_profile.instrument("vmm_fwd")
 def vmm_fxp_pallas(x: jnp.ndarray, w: jnp.ndarray, *, shift: int = WGT_FRAC,
                    tm: Optional[int] = None, tk: Optional[int] = None,
                    tn: Optional[int] = None,
@@ -110,6 +112,7 @@ def _mm_bwd_fused_fxp_kernel(*refs, k_steps: int, shift: int, method: str,
         o_ref[0] = out
 
 
+@obs_profile.instrument("vmm_bwd")
 def vmm_bwd_fused_fxp_pallas(
         g: jnp.ndarray, w: jnp.ndarray, *,
         relu_mask: Optional[jnp.ndarray] = None,

@@ -29,6 +29,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import interpret_mode, validate_bp_gates
 from repro.kernels.tiling import vmm_tiling
 from repro.kernels.relu_mask.relu_mask import gate_gradient, unpack_bits
+from repro.obs import profile as obs_profile
 
 
 def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
@@ -44,6 +45,7 @@ def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+@obs_profile.instrument("vmm_fwd")
 def vmm_pallas(x: jnp.ndarray, w: jnp.ndarray, *, tm: Optional[int] = None,
                tk: Optional[int] = None, tn: Optional[int] = None,
                interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -111,6 +113,7 @@ def _mm_bwd_fused_kernel(*refs, k_steps: int, method: str, gate_in: bool,
         o_ref[0] = out.astype(o_ref.dtype)
 
 
+@obs_profile.instrument("vmm_bwd")
 def vmm_bwd_fused_pallas(
         g: jnp.ndarray, w: jnp.ndarray, *,
         relu_mask: Optional[jnp.ndarray] = None,

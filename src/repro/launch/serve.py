@@ -27,6 +27,8 @@ import repro.configs as configs
 from repro import engine as engine_lib
 from repro.launch import steps as steps_lib
 from repro.models import cnn as cnn_lib, transformer as tf
+from repro.obs import Tracer, dumps_strict, snapshot as obs_snapshot
+from repro.obs import profile as obs_profile
 from repro.serve import (AdmissionConfig, CNNAdapter, DegradePolicy,
                          ExplanationServer, Request, ShedError, registry)
 
@@ -105,10 +107,12 @@ def run_cnn(args) -> None:
             default_deadline_s=(args.deadline_ms / 1e3
                                 if args.deadline_ms is not None else None),
             degrade=degrade)
+    tracer = Tracer() if args.trace_out else None
+    profiler = obs_profile.enable() if args.profile_kernels else None
     server = ExplanationServer(CNNAdapter.from_engine(eng),
                                max_batch=args.batch,
                                max_delay_s=args.max_delay_ms / 1e3,
-                               admission=admission)
+                               admission=admission, tracer=tracer)
     n = args.requests
     xs = jax.random.normal(jax.random.PRNGKey(1), (n,) + cfg.in_hw
                            + (cfg.in_ch,))
@@ -146,6 +150,24 @@ def run_cnn(args) -> None:
     for name, snap in server.stats.snapshot()["methods"].items():
         print(f"  {name:28s} n={snap['count']:3d} p50={snap['p50_us']:.0f}us "
               f"p99={snap['p99_us']:.0f}us hit_rate={snap['hit_rate']:.2f}")
+    if tracer is not None:
+        tracer.finish()
+        tracer.save(args.trace_out)
+        print(f"[serve/cnn] trace: {len(tracer.spans)} spans -> "
+              f"{args.trace_out} (load in https://ui.perfetto.dev)")
+    if args.metrics:
+        print("[serve/cnn] unified metrics snapshot:")
+        print(dumps_strict(obs_snapshot(), indent=2))
+    if profiler is not None:
+        from repro.plan.drift import drift_rows, format_drift, write_drift
+        obs_profile.disable()
+        print("[serve/cnn] cost-model drift (eager calibration, "
+              f"{args.precision}):")
+        rows = drift_rows(cfg, eng.plan, device=args.device_profile,
+                          precision=args.precision, profiler=profiler,
+                          measure=True)
+        print(format_drift(rows))
+        print(f"[serve/cnn] drift table -> {write_drift(rows)}")
 
 
 def main():
@@ -186,6 +208,19 @@ def main():
     ap.add_argument("--autotune", action="store_true",
                     help="refine the tile plan by measured timings "
                          "(persisted in the repro.plan tuning cache)")
+    # observability (cnn workload): all three are opt-in; the server runs
+    # on no-op singletons otherwise (zero-cost guarantee)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace-event "
+                         "JSON of every request's admission -> queued -> "
+                         "engine -> cache spans")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the unified repro.obs metrics snapshot "
+                         "(serve + plan-cache + engine-cache series)")
+    ap.add_argument("--profile-kernels", action="store_true",
+                    help="time eager kernel launches and print/persist "
+                         "the cost-model drift table (measured vs "
+                         "Footprint.est_time_s)")
     args = ap.parse_args()
 
     if args.workload == "lm":

@@ -1,0 +1,47 @@
+"""repro.obs — unified observability: metrics, tracing, kernel profiling.
+
+The paper's central claim — feature attribution at *minimal overhead over
+inference* — is an observability claim.  This package is the single place
+where that claim is measured:
+
+  * :mod:`repro.obs.registry` — typed counters / gauges / histograms with
+    label sets, a strict-JSON snapshot, and Prometheus-style text
+    exposition.  ``repro.serve`` stats, admission shed/degrade counters,
+    the ``repro.plan`` tuning-cache hit/miss counters, and the
+    ``repro.engine`` build cache all record into ONE default registry, so
+    :func:`snapshot` describes the whole process.
+  * :mod:`repro.obs.trace` — per-request spans with parent/child links,
+    minted at admission and carried through batcher enqueue -> bucket
+    dispatch -> engine -> residual-cache lookup, exported as Chrome
+    trace-event JSON (Perfetto-loadable).  ``python -m repro.obs trace``
+    replays a synthetic load trace and writes the span file.
+  * :mod:`repro.obs.profile` — opt-in timed wrappers around the Pallas
+    kernel call sites (block-until-ready fencing, per family/shape/
+    precision histograms); :mod:`repro.plan.drift` joins the measured
+    times against the analytic ``Footprint.est_time_s`` — the cost-model
+    calibration input.
+  * :mod:`repro.obs.clock` — the single injectable monotonic clock every
+    serving timestamp reads (``VirtualClock`` conforms), so traces and
+    deadlines can never disagree about "now".
+
+ZERO-COST WHEN DISABLED: a server without a tracer uses the shared no-op
+span (no allocation, no clock reads); kernels without an enabled profiler
+run one ``is None`` check (no fencing).  ``benchmarks/attribution_serving``
+carries rows enforcing this, gated by ``benchmarks/report.py --check``.
+"""
+from repro.obs.clock import VirtualClock, monotonic, perf
+from repro.obs.jsonsafe import dump_strict, dumps_strict, sanitize
+from repro.obs.registry import (Counter, Gauge, Histogram, Registry,
+                                default_registry, render_prometheus, reset,
+                                snapshot)
+from repro.obs.trace import (NULL_SPAN, NULL_TRACER, RequestTrace, Span,
+                             Tracer, integrity_errors, validate_chrome)
+
+__all__ = [
+    "VirtualClock", "monotonic", "perf",
+    "dump_strict", "dumps_strict", "sanitize",
+    "Counter", "Gauge", "Histogram", "Registry", "default_registry",
+    "render_prometheus", "reset", "snapshot",
+    "NULL_SPAN", "NULL_TRACER", "RequestTrace", "Span", "Tracer",
+    "integrity_errors", "validate_chrome",
+]

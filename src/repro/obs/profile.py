@@ -1,0 +1,190 @@
+"""Opt-in timed wrappers around the Pallas kernel call sites.
+
+The kernel wrappers (``conv2d_pallas``, ``vmm_bwd_fused_pallas``, the
+fxp16 twins, the pool pair) are decorated with :func:`instrument`.  The
+decorator's disabled path is ONE module-global ``is None`` check — no
+fencing, no clock reads — so serving is unaffected unless a profiler is
+installed (the zero-cost guarantee, enforced by a benchmark row).
+
+When enabled (``with profiled(): ...`` or :func:`enable`), eager calls
+are fenced with ``block_until_ready`` and recorded into the
+``kernel_launch_seconds`` histogram labelled (family, shape, precision),
+plus an exact-shape aggregate table that :mod:`repro.plan.drift` joins
+against ``Footprint.est_time_s``.  Calls made under ``jax.jit`` tracing
+see :class:`jax.core.Tracer` operands — timing them would measure trace
+time, not launch time — so the wrapper detects tracers and passes
+through untouched; jitted serving paths are profiled via the planner's
+eager ``measure_kernel`` calibration instead (see ``repro.plan.drift``).
+
+Shape signatures reproduce the keyword order of
+``plan.planner.cnn_kernel_shapes`` so profiler keys join bit-exactly
+with tuning-cache keys and footprint estimates.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Dict, Optional, Tuple
+
+from repro.obs import clock as clock_lib
+from repro.obs import metrics as obsm
+
+_PROFILER: Optional["KernelProfiler"] = None
+
+_PRECISION_BY_DTYPE = {"float32": "f32", "bfloat16": "bf16", "int16": "fxp16"}
+
+
+def _precision_of(x) -> str:
+    return _PRECISION_BY_DTYPE.get(str(x.dtype), str(x.dtype))
+
+
+# Per-family shape-signature derivations.  Each returns the kw dict in
+# EXACTLY the order plan.planner.cnn_kernel_shapes builds it, so
+# ``tuple(kw.values())`` matches cache_key / footprint signatures.
+
+def _sig_conv2d_fwd(args, kwargs):
+    x, w = args[0], args[1]
+    n, h, wi, cin = x.shape
+    k, _, _, cout = w.shape
+    return dict(n=n, h=h, w=wi, k=k, cin=cin, cout=cout)
+
+
+def _gated(kwargs) -> bool:
+    gate = kwargs.get("gate")
+    if gate is not None:
+        return bool(gate)
+    return kwargs.get("relu_mask") is not None
+
+
+def _sig_conv2d_bwd(args, kwargs):
+    g, wt = args[0], args[1]
+    seeded = g.ndim == 5
+    s = g.shape[0] if seeded else 1
+    n, hg, wg, c = g.shape[1:] if seeded else g.shape
+    k, _, _, cout = wt.shape
+    return dict(s=s, n=n, hg=hg, wg=wg, k=k, c=c, cout=cout,
+                pooled=kwargs.get("pool_idx") is not None,
+                gated=_gated(kwargs))
+
+
+def _sig_vmm_fwd(args, kwargs):
+    x, w = args[0], args[1]
+    m, k = x.shape
+    n = w.shape[1]
+    return dict(m=m, k=k, n=n)
+
+
+def _sig_vmm_bwd(args, kwargs):
+    g, w = args[0], args[1]
+    seeded = g.ndim == 3
+    s = g.shape[0] if seeded else 1
+    m, k = g.shape[-2], g.shape[-1]
+    n = w.shape[1]
+    return dict(s=s, m=m, k=k, n=n, gated=_gated(kwargs))
+
+
+def _sig_pool(args, kwargs):
+    x = args[0]
+    n, h, w, c = x.shape[:4]
+    return dict(n=n, h=h, w=w, c=c)
+
+
+_SIG_FNS = {
+    "conv2d_fwd": _sig_conv2d_fwd,
+    "conv2d_bwd": _sig_conv2d_bwd,
+    "vmm_fwd": _sig_vmm_fwd,
+    "vmm_bwd": _sig_vmm_bwd,
+    "pool": _sig_pool,
+}
+
+
+class KernelProfiler:
+    """Aggregates fenced launch times per (family, shape-sig, precision)."""
+
+    def __init__(self, clock=None):
+        self.clock = clock if clock is not None else clock_lib.perf
+        # (family, dims-tuple, precision) -> [count, total_s, min_s, max_s]
+        self.records: Dict[Tuple[str, Tuple[int, ...], str], list] = {}
+        self.passthrough = 0        # traced (jitted) calls we declined
+
+    def call(self, family: str, fn, args, kwargs):
+        import jax
+
+        if any(isinstance(a, jax.core.Tracer) for a in args):
+            self.passthrough += 1
+            return fn(*args, **kwargs)
+        try:
+            kw = _SIG_FNS[family](args, kwargs)
+            precision = _precision_of(args[0])
+        except Exception:           # unexpected operand shape: never break
+            return fn(*args, **kwargs)      # the kernel over bookkeeping
+        t0 = self.clock()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        dt = self.clock() - t0
+        dims = tuple(int(v) for v in kw.values())
+        rec = self.records.get((family, dims, precision))
+        if rec is None:
+            rec = self.records[(family, dims, precision)] = [0, 0.0, dt, dt]
+        rec[0] += 1
+        rec[1] += dt
+        rec[2] = min(rec[2], dt)
+        rec[3] = max(rec[3], dt)
+        obsm.KERNEL_SECONDS.observe(
+            dt, family=family, shape="x".join(str(d) for d in dims),
+            precision=precision)
+        return out
+
+    def aggregates(self) -> dict:
+        """{(family, dims, precision): {count, mean_us, min_us, max_us}}"""
+        return {
+            key: {"count": rec[0], "mean_us": 1e6 * rec[1] / rec[0],
+                  "min_us": 1e6 * rec[2], "max_us": 1e6 * rec[3]}
+            for key, rec in self.records.items()
+        }
+
+
+def instrument(family: str):
+    """Decorate a kernel wrapper; disabled path is one ``is None`` check."""
+    if family not in _SIG_FNS:
+        raise ValueError(f"unknown kernel family {family!r}")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            prof = _PROFILER
+            if prof is None:
+                return fn(*args, **kwargs)
+            return prof.call(family, fn, args, kwargs)
+        wrapper.__wrapped__ = fn
+        return wrapper
+    return deco
+
+
+def enable(profiler: Optional[KernelProfiler] = None) -> KernelProfiler:
+    global _PROFILER
+    _PROFILER = profiler if profiler is not None else KernelProfiler()
+    return _PROFILER
+
+
+def disable() -> None:
+    global _PROFILER
+    _PROFILER = None
+
+
+def profiler() -> Optional[KernelProfiler]:
+    return _PROFILER
+
+
+def enabled() -> bool:
+    return _PROFILER is not None
+
+
+@contextlib.contextmanager
+def profiled(profiler: Optional[KernelProfiler] = None):
+    prev = _PROFILER
+    prof = enable(profiler)
+    try:
+        yield prof
+    finally:
+        globals()["_PROFILER"] = prev

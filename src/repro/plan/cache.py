@@ -23,6 +23,8 @@ import os
 import tempfile
 from typing import Any, Dict, Optional, Sequence
 
+from repro.obs import metrics as obsm
+
 _ENV_VAR = "REPRO_PLAN_CACHE"
 
 _log = logging.getLogger(__name__)
@@ -150,14 +152,17 @@ class TuningCache:
         if entry is None or not self.valid_entry(entry) \
                 or (require_measured and entry.get("measured_us") is None):
             self.misses += 1
+            obsm.PLAN_CACHE_LOOKUPS.inc(result="miss")
             return None
         self.hits += 1
+        obsm.PLAN_CACHE_LOOKUPS.inc(result="hit")
         return entry
 
     def store(self, key: str, entry: Dict[str, Any]) -> None:
         """Write-through insert: the JSON file is updated immediately.
         An unwritable path costs persistence, never the plan (logged)."""
         self.data[key] = entry
+        obsm.PLAN_CACHE_STORES.inc()
         self._try_flush()
 
     def reset_counters(self) -> None:

@@ -32,6 +32,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, Mapping, Optional
 
+from repro.obs import metrics as obsm
 from repro.serve.api import (EXPLAIN, SHED_DEADLINE, SHED_QUEUE_FULL,
                              SHED_RATE_LIMIT, Request, ShedError)
 
@@ -91,6 +92,7 @@ class ServiceEstimator:
         prev = self._est.get(k)
         self._est[k] = (per_req if prev is None
                         else (1 - self.alpha) * prev + self.alpha * per_req)
+        obsm.SERVE_SERVICE_EST.set(self._est[k], cls=k)
 
     def estimate(self, kind: str, method: str = "") -> float:
         return self._est.get(self.key(kind, method), self.prior_s)

@@ -98,6 +98,7 @@ class Request:
     deadline_t: Optional[float] = None  # absolute deadline (admission-stamped)
     degraded: bool = False          # serve via the degraded sibling engine
     degrade_action: Optional[str] = None  # what admission traded away
+    trace: Any = None               # obs RequestTrace (server-stamped)
 
     def __post_init__(self):
         if self.kind not in (PREDICT, EXPLAIN):

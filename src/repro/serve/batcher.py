@@ -40,13 +40,13 @@ deterministically.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import clock as clock_lib
 from repro.serve import registry
 from repro.serve.api import EXPLAIN, Request
 
@@ -132,7 +132,7 @@ class _Bucket:
 
 class MicroBatcher:
     def __init__(self, *, max_batch: int = 8, max_delay_s: float = 0.002,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = clock_lib.monotonic):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.max_batch = max_batch

@@ -28,13 +28,18 @@ regressions, not sampling noise.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from time import perf_counter
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.clock import VirtualClock, perf as perf_counter
 from repro.serve.api import EXPLAIN, PREDICT, Request, ShedError
 from repro.serve.stats import percentile
+
+__all__ = [
+    "DEFAULT_MIX", "TraceEvent", "synthesize", "VirtualClock", "CostModel",
+    "SimAdapter", "TimedAdapter", "ReplayReport", "replay",
+]
 
 # default (kind, method, topk) mix: weights need not sum to 1
 DEFAULT_MIX: Dict[Tuple[str, str, Optional[int]], float] = {
@@ -122,19 +127,9 @@ def synthesize(n: int, *, rate: float = 2000.0, arrivals: str = "poisson",
     return events
 
 
-class VirtualClock:
-    """Injectable monotonic clock: ``clock()`` reads, ``advance`` moves."""
-
-    def __init__(self, t: float = 0.0):
-        self.t = t
-
-    def __call__(self) -> float:
-        return self.t
-
-    def advance(self, dt: float) -> None:
-        if dt < 0:
-            raise ValueError(f"clock cannot run backwards (dt={dt})")
-        self.t += dt
+# VirtualClock now lives in repro.obs.clock (imported above, re-exported
+# here for existing callers): the obs layer owns the clock protocol so
+# spans, deadlines, and stats always share one "now".
 
 
 @dataclass(frozen=True)
@@ -318,9 +313,12 @@ class ReplayReport:
     def shed_rate(self) -> float:
         return self.shed_total / self.offered if self.offered else 0.0
 
-    def p_us(self, kind: str, q: float) -> float:
+    def p_us(self, kind: str, q: float) -> Optional[float]:
+        """Latency percentile in us; ``None`` (JSON null, not NaN) when no
+        request of ``kind`` completed."""
         lat = sorted(self.latencies_by_kind.get(kind, []))
-        return 1e6 * percentile(lat, q) if lat else float("nan")
+        p = percentile(lat, q)
+        return 1e6 * p if p is not None else None
 
     def snapshot(self) -> dict:
         out = {

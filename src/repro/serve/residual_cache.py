@@ -22,6 +22,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.obs import metrics as obsm
+
 
 def residual_bits(residuals: Any) -> int:
     """Exact stored-bit count of a residual pytree (packed uint8 = 8 b/elt)."""
@@ -83,19 +85,29 @@ class ResidualCache:
         self.stats.bits_stored += entry.bits
         self.stats.peak_bits = max(self.stats.peak_bits,
                                    self.stats.bits_stored)
+        obsm.RESIDUAL_CACHE.inc(event="store")
         while len(self._entries) > self.capacity:
             _, old = self._entries.popitem(last=False)
             self.stats.bits_stored -= old.bits
             self.stats.evictions += 1
+            obsm.RESIDUAL_CACHE.inc(event="eviction")
+        obsm.RESIDUAL_CACHE_BITS.set(self.stats.bits_stored)
 
     def get(self, uid: str) -> Optional[CacheEntry]:
         entry = self._entries.get(uid)
         if entry is None:
-            self.stats.misses += 1
+            self.count_miss()
             return None
         self._entries.move_to_end(uid)
         self.stats.hits += 1
+        obsm.RESIDUAL_CACHE.inc(event="hit")
         return entry
+
+    def count_miss(self) -> None:
+        """Account a miss decided outside :meth:`get` (e.g. a present but
+        rules-incompatible entry the server declines to use)."""
+        self.stats.misses += 1
+        obsm.RESIDUAL_CACHE.inc(event="miss")
 
     def peek(self, uid: str) -> Optional[CacheEntry]:
         """Presence probe — no recency update, no hit/miss accounting."""

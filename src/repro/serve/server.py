@@ -40,13 +40,14 @@ transport would wrap ``submit``/``poll`` without touching the dataflow.
 from __future__ import annotations
 
 import itertools
-import time
 from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import clock as clock_lib
+from repro.obs.trace import NULL_SPAN, NULL_TRACER, RequestTrace, Tracer
 from repro.serve import registry
 from repro.serve.admission import AdmissionConfig, AdmissionController
 from repro.serve.api import (EXPLAIN, PREDICT, SHED_EXPIRED,
@@ -61,12 +62,19 @@ from repro.serve.adapters import concat_examples, slice_example
 class ExplanationServer:
     def __init__(self, adapter, *, cache_capacity: int = 256,
                  max_batch: int = 8, max_delay_s: float = 0.002,
-                 clock: Callable[[], float] = time.monotonic,
+                 clock: Callable[[], float] = clock_lib.monotonic,
                  method_opts: Optional[Dict[str, dict]] = None,
                  admission: Optional[AdmissionConfig] = None,
-                 dispatch_timeout_s: Optional[float] = None):
+                 dispatch_timeout_s: Optional[float] = None,
+                 tracer: Optional[Tracer] = None):
         self.adapter = adapter
         self.clock = clock
+        # tracer=None is the zero-cost path: NULL_TRACER's start() returns
+        # the shared no-op span and requests never carry a RequestTrace.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if self.tracer.enabled:
+            self.tracer.clock = clock      # spans and deadlines share "now"
+        self._trace_seq = itertools.count()
         self.batcher = MicroBatcher(max_batch=max_batch,
                                     max_delay_s=max_delay_s, clock=clock)
         self.cache = ResidualCache(cache_capacity)
@@ -104,28 +112,56 @@ class ExplanationServer:
         """
         self._validate(req)
         now = self.clock()
-        if self.admission is not None:
-            try:
-                action = self.admission.admit(req, self.batcher.pending(),
-                                              now)
-            except ShedError as e:
-                self.stats.record_shed(e.reason)
-                raise
-            if action is not None:
-                self.stats.record_degrade(action)
-        elif req.deadline_s is not None and req.deadline_t is None:
-            # deadlines work without admission too; anchor at true arrival
-            req.deadline_t = (req.arrive_t or now) + req.deadline_s
-        if req.kind == EXPLAIN and req.topk is not None:
-            cls = registry.get(req.method)
-            if not (cls.mask_reuse and self._rules_compatible(
-                    self.adapter.store_rules, req.method)):
-                raise ValueError(
-                    f"topk panels ride the seed-batched BP and need a "
-                    f"mask-reuse method {registry.mask_reuse_methods()} "
-                    f"whose masks the adapter stores (store_rules="
-                    f"{self.adapter.store_rules!r}); got {req.method!r}")
-        self.batcher.submit(req)
+        if self.tracer.enabled:
+            # trace id minted at admission; uids repeat (predict + explain
+            # share one), so a per-server sequence disambiguates
+            tid = f"{req.uid}#{next(self._trace_seq)}"
+            req.trace = RequestTrace(self.tracer.start(
+                f"request/{req.kind}", cat="request", trace_id=tid,
+                t0=req.arrive_t or now,
+                args={"uid": req.uid,
+                      "method": req.method if req.kind == EXPLAIN else ""}))
+        try:
+            if self.admission is not None:
+                adm = (req.trace.root.child("admission", cat="admission",
+                                            t0=now)
+                       if req.trace is not None else NULL_SPAN)
+                try:
+                    action = self.admission.admit(req,
+                                                  self.batcher.pending(),
+                                                  now)
+                except ShedError as e:
+                    adm.end(t=now, result=e.reason)
+                    self.stats.record_shed(e.reason)
+                    raise
+                adm.end(t=now, result=action or "admitted")
+                if action is not None:
+                    self.stats.record_degrade(action)
+            elif req.deadline_s is not None and req.deadline_t is None:
+                # deadlines work without admission too; anchor at arrival
+                req.deadline_t = (req.arrive_t or now) + req.deadline_s
+            if req.kind == EXPLAIN and req.topk is not None:
+                cls = registry.get(req.method)
+                if not (cls.mask_reuse and self._rules_compatible(
+                        self.adapter.store_rules, req.method)):
+                    raise ValueError(
+                        f"topk panels ride the seed-batched BP and need a "
+                        f"mask-reuse method {registry.mask_reuse_methods()} "
+                        f"whose masks the adapter stores (store_rules="
+                        f"{self.adapter.store_rules!r}); got {req.method!r}")
+            self.batcher.submit(req)
+        except ShedError as e:
+            if req.trace is not None:   # refused requests still terminate
+                req.trace.root.end(t=now, status="shed", reason=e.reason)
+            raise
+        except Exception as e:
+            if req.trace is not None:
+                req.trace.root.end(t=now, status="error",
+                                   error_type=type(e).__name__)
+            raise
+        if req.trace is not None:
+            req.trace.queued = req.trace.root.child("queued", cat="queue",
+                                                    t0=now)
         self.stats.record_queue_depth(self.batcher.pending())
 
     def poll(self, now: Optional[float] = None) -> List[Response]:
@@ -190,6 +226,10 @@ class ExplanationServer:
         self.stats.record_shed(SHED_EXPIRED)
         resp = shed_response(req, SHED_EXPIRED, "deadline expired in queue")
         resp.latency_s = self.clock() - req.arrive_t
+        if req.trace is not None:       # expired-in-queue still terminates
+            t = req.arrive_t + resp.latency_s
+            req.trace.queued.end(t=t, result=SHED_EXPIRED)
+            req.trace.root.end(t=t, status="shed", reason=SHED_EXPIRED)
         return resp
 
     # -- adapters / explainer construction -----------------------------------
@@ -232,11 +272,26 @@ class ExplanationServer:
         """Fault-isolated batch execution: an exception inside a batch
         becomes per-request error responses, never a dead worker loop."""
         t0 = self.clock()
+        bspan = NULL_SPAN
+        if self.tracer.enabled:
+            # the batch is its own track; request spans point at it by id
+            bid = f"batch#{next(self._trace_seq)}"
+            bspan = self.tracer.start(
+                f"batch/{batch.kind}", cat="batch", trace_id=bid, t0=t0,
+                args={"n": len(batch.requests), "degraded": batch.degraded,
+                      "method": (batch.requests[0].method
+                                 if batch.kind == EXPLAIN else "")})
+            for req in batch.requests:
+                if req.trace is not None:
+                    req.trace.queued.end(t=t0)
+                    req.trace.engine = req.trace.root.child(
+                        "engine", cat="engine", t0=t0, args={"batch": bid})
         try:
             out = self._process(batch)
         except Exception as e:                          # noqa: BLE001
             out = [self._finish_error(req, e) for req in batch.requests]
         duration = self.clock() - t0
+        bspan.end(t=t0 + duration)
         if (self.dispatch_timeout_s is not None
                 and duration > self.dispatch_timeout_s):
             self.stats.record_timeout()
@@ -261,6 +316,11 @@ class ExplanationServer:
         self.stats.record(req.kind,
                           req.method if req.kind == EXPLAIN else "",
                           resp.latency_s, resp.cache_hit)
+        if req.trace is not None:
+            t = req.arrive_t + resp.latency_s
+            req.trace.engine.end(t=t)
+            req.trace.root.end(t=t, status="ok", cache_hit=resp.cache_hit,
+                               latency_s=resp.latency_s)
         return resp
 
     def _finish_error(self, req: Request, exc: Exception) -> Response:
@@ -270,6 +330,11 @@ class ExplanationServer:
                         method=req.method if req.kind == EXPLAIN else None,
                         error=str(exc), error_type=type(exc).__name__)
         resp.latency_s = self.clock() - req.arrive_t
+        if req.trace is not None:       # faulted requests still terminate
+            t = req.arrive_t + resp.latency_s
+            req.trace.engine.end(t=t)
+            req.trace.root.end(t=t, status="error",
+                               error_type=type(exc).__name__)
         return resp
 
     def _run_predict(self, batch: Batch) -> List[Response]:
@@ -277,11 +342,15 @@ class ExplanationServer:
         logits, residuals = self.adapter.predict(xb)
         jax.block_until_ready(logits)
         self.stats.record_batch(live, xb.shape[0])
+        now = self.clock()
         out = []
         for i, req in enumerate(batch.requests):
             self.cache.put(req.uid, CacheEntry(
                 logits=logits[i], residuals=slice_example(residuals, i),
                 rules=self.adapter.store_rules))
+            if req.trace is not None:
+                req.trace.root.child("cache", cat="cache", t0=now).end(
+                    t=now, result="store")
             out.append(self._finish(req, Response(
                 uid=req.uid, kind=PREDICT, logits=logits[i],
                 batch_size=xb.shape[0])))
@@ -303,9 +372,15 @@ class ExplanationServer:
             # Rerouted traffic runs cold on the sibling engine; the primary
             # cache's float residuals cannot replay an int16 backward (and
             # vice versa), so the hit/warm paths are skipped entirely.
+            now = self.clock()
+            for req in batch.requests:
+                if req.trace is not None:
+                    req.trace.root.child("cache", cat="cache", t0=now).end(
+                        t=now, result="bypass")
             return self._explain_cold(method, batch.requests, degraded=True)
         hits, colds = [], []
         reusable = registry.get(method).mask_reuse
+        now = self.clock()
         for req in batch.requests:
             entry = None
             if reusable:
@@ -314,7 +389,10 @@ class ExplanationServer:
                                                                method):
                     entry = self.cache.get(req.uid)   # accounts the hit
                 else:
-                    self.cache.stats.misses += 1      # absent or unusable
+                    self.cache.count_miss()           # absent or unusable
+            if req.trace is not None:
+                req.trace.root.child("cache", cat="cache", t0=now).end(
+                    t=now, result="hit" if entry is not None else "miss")
             if entry is not None:
                 hits.append((req, entry))
             else:
