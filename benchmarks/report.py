@@ -7,10 +7,13 @@ prints markdown to stdout; the checked-in EXPERIMENTS.md embeds its output.
     PYTHONPATH=src python -m benchmarks.report --check
 compares the two newest ``benchmarks/results/BENCH_*.json`` snapshots
 (written by ``benchmarks/run.py``) row by row and exits nonzero when any
-``*_us`` latency regressed by more than ``--threshold`` (default 15%) or
+``*_us`` latency regressed by more than ``--threshold`` (default 15%),
 any ``*_shed_rate`` row of the load-replay suite rose past the relative
-threshold plus a 1%-absolute floor — the bench trajectory's tripwire for
-planned-vs-default tile drift AND admission-policy drift.
+threshold plus a 1%-absolute floor, or any ``*_throughput`` speedup row
+fell below ``SHARDED_THROUGHPUT_FLOOR`` (1.5x — the mesh-sharded serving
+claim) or dropped more than the threshold — the bench trajectory's
+tripwire for planned-vs-default tile drift, admission-policy drift, AND
+sharded-serving capacity drift.
 
     PYTHONPATH=src python -m benchmarks.report --trend [--filter SUBSTR]
 prints every metric's trajectory across ALL snapshots (first->last ratio
@@ -131,6 +134,24 @@ def _shed_rows(bench: dict) -> dict:
     return out
 
 
+#: absolute floor for ``*_throughput`` speedup rows: the 4-shard serving
+#: pipeline must stay at least this many times faster than single-core.
+SHARDED_THROUGHPUT_FLOOR = 1.5
+
+
+def _throughput_rows(bench: dict) -> dict:
+    """{row_name: speedup} for every ``*_throughput`` row (sharded-vs-
+    single serving-capacity ratios; bigger is better)."""
+    out = {}
+    for rows in bench.get("suites", {}).values():
+        for name, val, _derived in rows:
+            if name.endswith("_throughput") \
+                    and isinstance(val, (int, float)) \
+                    and math.isfinite(val) and val > 0:
+                out[name] = float(val)
+    return out
+
+
 def check(results_dir: str = "benchmarks/results",
           threshold: float = 0.15) -> int:
     """Compare the two newest BENCH_*.json; nonzero on >threshold latency
@@ -170,6 +191,22 @@ def check(results_dir: str = "benchmarks/results",
         if flag or abs(new_shed[name] - old_shed[name]) > 0.005:
             print(f"  {name:44s} {old_shed[name]:10.4f} -> "
                   f"{new_shed[name]:10.4f} (limit {limit:.4f}){flag}")
+        if flag:
+            regressions.append(name)
+    # throughput speedups gate two ways: never below the absolute floor
+    # (the tentpole's >=1.5x sharded-serving claim), and never down more
+    # than the relative threshold vs the previous snapshot.
+    old_tp, new_tp = _throughput_rows(old_bench), _throughput_rows(new_bench)
+    for name in sorted(new_tp):
+        floor = SHARDED_THROUGHPUT_FLOOR
+        if name in old_tp:
+            floor = max(floor, old_tp[name] * (1 - threshold))
+        flag = " REGRESSION" if new_tp[name] < floor else ""
+        prev = f"{old_tp[name]:.2f}x -> " if name in old_tp else ""
+        if flag or name not in old_tp \
+                or abs(new_tp[name] - old_tp[name]) > 0.05:
+            print(f"  {name:44s} {prev}{new_tp[name]:.2f}x "
+                  f"(floor {floor:.2f}x){flag}")
         if flag:
             regressions.append(name)
     if regressions:

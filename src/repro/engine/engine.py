@@ -44,6 +44,8 @@ class Engine:
     def __init__(self, spec: EngineSpec):
         self.spec = spec
         model = spec.model
+        self._mesh = None
+        self._n_shards = 1
         if hasattr(model, "token_step"):
             # LM token-attribution engine: one jitted FP+BP step program.
             self._token_step = jax.jit(model.token_step(spec.method))
@@ -60,27 +62,102 @@ class Engine:
         # the paper's design-time tile sizing: every kernel of the pair and
         # of the rule-bound logits program runs the planned block shapes.
         self._plan = spec.resolve_plan()
+        # Mesh-sharded build: a ``mesh:<profile>:<n>`` device compiles ONE
+        # predict/explain pair whose inputs/outputs carry logical-axis
+        # sharding constraints under the serving mesh.  The plan above is
+        # already per-shard (plan_cnn splits batch/seeds across the mesh
+        # before tiling); here the physical placement is resolved.  On a
+        # host with fewer devices than shards the mesh is capped and the
+        # constraints silently replicate (dist.sharding contract) — same
+        # program, degenerate placement, bitwise-identical outputs.
+        device = (spec.device if spec.device is not None
+                  else (self._plan.device if self._plan else None))
+        if device is not None:
+            from repro.launch.mesh import make_serving_mesh
+            from repro.plan import MeshProfile, get_profile
+            profile = get_profile(device)
+            if isinstance(profile, MeshProfile):
+                self._n_shards = profile.n_shards
+                self._mesh = make_serving_mesh(profile.n_shards)
         kind = spec.resolve_backward()
         if kind == "seed_batched":
             if not getattr(model, "has_pair", False):
                 raise ValueError(
                     f"model {model!r} exposes no seed-batched pair; "
                     f"use backward='vjp'")
-            self._backend = ManualSeedBatchedBackward(
-                *model.pair(spec.method, spec.precision, plan=self._plan))
+            fwd, bwd = model.pair(spec.method, spec.precision,
+                                  plan=self._plan)
+            if self._mesh is not None:
+                fwd = self._shard_pair_fwd(fwd)
+                bwd = self._shard_pair_bwd(bwd)
+            self._backend = ManualSeedBatchedBackward(fwd, bwd)
         else:
-            self._backend = VjpBackward(
-                model.logits_fn(spec.method, spec.precision,
-                                plan=self._plan))
+            f = model.logits_fn(spec.method, spec.precision,
+                                plan=self._plan)
+            if self._mesh is not None:
+                f = self._shard_logits_fn(f)
+            self._backend = VjpBackward(f)
         # Rule-bound logits program: shared by predict, the composite
         # methods, and registry explainers.  Under fxp16 this IS the pair
         # forward (pair-returning) — the manual backward is mandatory there.
         if spec.precision == "fxp16":
             self._model_fn = self._backend.forward
         else:
-            self._model_fn = jax.jit(
-                model.logits_fn(spec.method, spec.precision,
-                                plan=self._plan))
+            f = model.logits_fn(spec.method, spec.precision,
+                                plan=self._plan)
+            if self._mesh is not None:
+                f = self._shard_logits_fn(f)
+            self._model_fn = jax.jit(f)
+
+    # -- mesh-sharded build --------------------------------------------------
+
+    def _constrain_batch(self, v):
+        """Constrain an array's leading axis to the logical "batch" axis."""
+        from repro.dist.sharding import constrain
+        return constrain(v, "batch", *(None,) * (v.ndim - 1))
+
+    def _constrain_seeds(self, v):
+        """Constrain a [S, B, ...] array: seeds axis then batch axis."""
+        from repro.dist.sharding import constrain
+        return constrain(v, "seeds", "batch", *(None,) * (v.ndim - 2))
+
+    def _shard_pair_fwd(self, fwd):
+        """Wrap a pair forward so the serving mesh is active AT TRACE TIME
+        (``use_mesh`` must be entered inside the jitted function body —
+        the backend jits at construction, traces at first call)."""
+        from repro.dist.sharding import use_mesh
+        mesh = self._mesh
+
+        def run(x):
+            with use_mesh(mesh):
+                logits, residuals = fwd(self._constrain_batch(x))
+                return self._constrain_batch(logits), residuals
+
+        return run
+
+    def _shard_pair_bwd(self, bwd):
+        """Wrap a pair backward: seeds ride [S, B, C] -> relevance
+        [S, B, ...]; both are constrained on ("seeds", "batch")."""
+        from repro.dist.sharding import use_mesh
+        mesh = self._mesh
+
+        def run(residuals, seeds):
+            with use_mesh(mesh):
+                rel = bwd(residuals, self._constrain_seeds(seeds))
+                return jax.tree.map(self._constrain_seeds, rel)
+
+        return run
+
+    def _shard_logits_fn(self, f):
+        """Wrap a plain ``f(x) -> logits`` with batch-axis constraints."""
+        from repro.dist.sharding import use_mesh
+        mesh = self._mesh
+
+        def run(x):
+            with use_mesh(mesh):
+                return self._constrain_batch(f(self._constrain_batch(x)))
+
+        return run
 
     # -- resolved surfaces ---------------------------------------------------
 
@@ -88,6 +165,19 @@ class Engine:
     def backend(self) -> BackwardEngine:
         """The resolved :class:`BackwardEngine` (manual pair or vjp)."""
         return self._backend
+
+    @property
+    def mesh(self):
+        """The serving mesh sharded engines compile under (None when the
+        spec names a single-core device)."""
+        return self._mesh
+
+    @property
+    def n_shards(self) -> int:
+        """Mesh extent of the spec's device profile (1 = unsharded).  The
+        serve batcher fills toward ``max_batch * n_shards`` seats so a
+        sharded launch runs at full occupancy."""
+        return self._n_shards
 
     @property
     def plan(self):

@@ -25,3 +25,19 @@ def make_host_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = min(model, max(1, n // data))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(n_shards: int = 1):
+    """1-D serving mesh: ``n_shards`` ways of data parallelism.
+
+    The sharded :class:`~repro.engine.engine.Engine` splits the batch axis
+    (logical "batch" -> physical "data") across this mesh; with fewer real
+    devices than requested shards the mesh is capped at what exists, and
+    :func:`repro.dist.sharding.constrain` silently replicates the rest —
+    so a ``mesh:<profile>:4`` engine still builds and runs on the 1-device
+    CPU harness (the plan is sharded, the placement degenerates).
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    n = min(int(n_shards), len(jax.devices()))
+    return jax.make_mesh((n,), ("data",))

@@ -87,6 +87,9 @@ def run_cnn(args) -> None:
         model=engine_lib.CNNModel(params, cfg), method="saliency",
         precision=args.precision, device=args.device_profile,
         autotune=args.autotune))
+    if eng.n_shards > 1:
+        print(f"[serve/cnn] mesh-sharded engine: {eng.n_shards} shards, "
+              f"batcher fills {args.batch * eng.n_shards} seats/launch")
     if eng.plan is not None:
         print(f"[serve/cnn] planned tiles for device profile "
               f"{args.device_profile!r}:")
@@ -201,10 +204,12 @@ def main():
                          "fixed-point kernels (paper §IV)")
     from repro.plan import profile_names
     ap.add_argument("--device-profile", default=None,
-                    choices=profile_names(),
                     help="cnn workload: plan kernel tiles for this "
                          "repro.plan device profile before compiling "
-                         "(e.g. edge-small = 2MB on-chip budget)")
+                         f"(one of {profile_names()}, e.g. edge-small = "
+                         "2MB on-chip budget; or 'mesh:<profile>:<n>' for "
+                         "a mesh-sharded engine whose batcher fills "
+                         "max_batch x n seats per launch)")
     ap.add_argument("--autotune", action="store_true",
                     help="refine the tile plan by measured timings "
                          "(persisted in the repro.plan tuning cache)")

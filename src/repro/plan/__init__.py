@@ -37,16 +37,17 @@ from repro.plan.model import (Footprint, conv2d_bwd_footprint,
 from repro.plan.planner import (ConvTile, InfeasiblePlanError, TilePlan,
                                 VmmBwdTile, VmmTile, cnn_kernel_shapes,
                                 cnn_plan_footprints, plan_cnn, plan_conv2d,
-                                plan_vmm)
-from repro.plan.profiles import (PROFILES, DeviceProfile, detect,
-                                 get_profile, profile_names)
+                                plan_vmm, shard_batch_seeds)
+from repro.plan.profiles import (PROFILES, DeviceProfile, MeshProfile,
+                                 detect, get_profile, mesh_profile,
+                                 profile_names)
 
 __all__ = [
     "ConvTile", "DeviceProfile", "Footprint", "InfeasiblePlanError",
-    "PROFILES", "TilePlan", "TuningCache", "VmmBwdTile", "VmmTile",
-    "cache_key", "cnn_kernel_shapes", "cnn_plan_footprints",
+    "MeshProfile", "PROFILES", "TilePlan", "TuningCache", "VmmBwdTile",
+    "VmmTile", "cache_key", "cnn_kernel_shapes", "cnn_plan_footprints",
     "conv2d_bwd_footprint", "conv2d_fwd_footprint", "default_cache_path",
-    "detect", "get_profile", "plan_cnn", "plan_conv2d", "plan_vmm",
-    "pool_footprint", "profile_names", "vmm_bwd_footprint",
-    "vmm_fwd_footprint",
+    "detect", "get_profile", "mesh_profile", "plan_cnn", "plan_conv2d",
+    "plan_vmm", "pool_footprint", "profile_names", "shard_batch_seeds",
+    "vmm_bwd_footprint", "vmm_fwd_footprint",
 ]

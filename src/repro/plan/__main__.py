@@ -22,7 +22,9 @@ def main(argv=None) -> int:
                             plan_cnn, profile_names)
 
     ap = argparse.ArgumentParser(prog="python -m repro.plan")
-    ap.add_argument("--device", default="detected", choices=profile_names())
+    ap.add_argument("--device", default="detected",
+                    help=f"one of {profile_names()} or 'mesh:<profile>:<n>' "
+                         f"(e.g. mesh:edge-small:4)")
     ap.add_argument("--precision", default="f32",
                     choices=["f32", "bf16", "fxp16"])
     ap.add_argument("--batch", type=int, default=1)
@@ -48,9 +50,11 @@ def main(argv=None) -> int:
                               batch=args.batch, seeds=args.seeds,
                               profile=profile)
 
+    shards = getattr(profile, "n_shards", 1)
+    mesh_note = f" n_shards={shards}" if shards > 1 else ""
     print(f"[plan] device={profile.name} vmem_budget="
-          f"{profile.vmem_bytes / 2**20:.1f}MB precision={args.precision} "
-          f"planned in {dt_ms:.1f}ms")
+          f"{profile.vmem_bytes / 2**20:.1f}MB{mesh_note} "
+          f"precision={args.precision} planned in {dt_ms:.1f}ms")
     for key, tile in plan.entries:
         fp = fps[key]
         print(f"  {key:12s} {str(tile):34s} vmem={fp.vmem_bytes / 1024:8.1f}KB"

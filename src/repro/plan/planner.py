@@ -28,7 +28,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.kernels.tiling import LANE, SUBLANE, align_up, pow2_span
 from repro.plan import model as cost
 from repro.plan.cache import TuningCache, cache_key
-from repro.plan.profiles import get_profile
+from repro.plan.profiles import MeshProfile, get_profile
 
 #: precision -> operand dtype recorded in cache keys.
 PLAN_DTYPES = {"f32": "float32", "bf16": "bfloat16", "fxp16": "int16"}
@@ -316,6 +316,25 @@ def plan_vmm(m: int, k: int, n: int, *, profile=None,
 # ---------------------------------------------------------------------------
 
 
+def shard_batch_seeds(batch: int, seeds: int,
+                      n_shards: int) -> Tuple[int, int]:
+    """Per-shard ``(batch, seeds)`` once a mesh splits the two data axes.
+
+    The batch axis is split first (it is the serving throughput axis);
+    shards left over once every example has its own core split the seeds
+    axis (the top-K panel fan-out).  Sizes are ceil-divided — a shard may
+    run a padded remainder slice, never a larger one — so the per-shard
+    shapes the planner tiles against are the worst-case shard's.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    batch_ways = min(n_shards, max(batch, 1))
+    local_batch = -(-max(batch, 1) // batch_ways)
+    seed_ways = min(n_shards // batch_ways, max(seeds, 1))
+    local_seeds = -(-max(seeds, 1) // max(seed_ways, 1))
+    return local_batch, local_seeds
+
+
 def cnn_kernel_shapes(cfg, batch: int = 1, seeds: int = 1):
     """Every kernel launch of the CNN's forward + fused-BP stack, in layer
     order: ``(key, family, shape-kwargs)`` triples.  This single walk is
@@ -355,11 +374,20 @@ def plan_cnn(cfg, device=None, precision: str = "f32", *, batch: int = 1,
     measuring per kernel on a hit; misses are planned, measured when
     ``autotune`` is set, and written through.  Pool launches carry no tile
     knob but are still audited against the budget.
+
+    A :class:`~repro.plan.profiles.MeshProfile` device splits the batch
+    and seeds axes across its shards FIRST (:func:`shard_batch_seeds`) and
+    tiles the per-shard slice against the per-core budget — the paper's
+    fit-the-envelope discipline applied per core of an N-core mesh.  On a
+    1-shard mesh the local shapes equal the global ones, so the plan is
+    identical to the underlying single-core profile's.
     """
     if precision not in PLAN_DTYPES:
         raise ValueError(f"precision={precision!r} not in "
                          f"{tuple(PLAN_DTYPES)}")
     profile = get_profile(device)
+    if isinstance(profile, MeshProfile):
+        batch, seeds = shard_batch_seeds(batch, seeds, profile.n_shards)
     dtype = PLAN_DTYPES[precision]
     entries = []
     for key, family, kw in cnn_kernel_shapes(cfg, batch, seeds):
@@ -398,9 +426,13 @@ def cnn_plan_footprints(cfg, plan: Optional[TilePlan], *,
                         ) -> Dict[str, cost.Footprint]:
     """Analytic footprint of every kernel launch under ``plan`` (missing
     entries fall back to the default tile policy) — the per-layer resource
-    audit the acceptance tests check against the profile budget."""
+    audit the acceptance tests check against the profile budget.  Mesh
+    profiles audit the per-shard slice (the shapes the planner tiled),
+    matching :func:`plan_cnn`'s split."""
     profile = get_profile(profile if profile is not None
                           else (plan.device if plan else None))
+    if isinstance(profile, MeshProfile):
+        batch, seeds = shard_batch_seeds(batch, seeds, profile.n_shards)
     out = {}
     for key, family, kw in cnn_kernel_shapes(cfg, batch, seeds):
         tile = plan.get(key) if plan is not None else None

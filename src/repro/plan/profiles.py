@@ -15,6 +15,12 @@ Profiles:
     (large/mid ZU+ class parts down to a small Artix-class part), with
     proportionally scaled bandwidth and MAC-array peaks.  Under these the
     planner must split work the default profile keeps whole.
+  * ``mesh:<profile>:<n>`` — a :class:`MeshProfile`: N cores of
+    ``<profile>``, each with that profile's per-core VMEM/bandwidth/MXU
+    envelope.  The planner splits the batch and seeds axes across the
+    cores FIRST and then tiles the per-core slice against the per-core
+    budget, so one mesh-sharded launch obeys the same resource discipline
+    as N independent single-core launches.
 """
 from __future__ import annotations
 
@@ -50,6 +56,51 @@ class DeviceProfile:
                              f"{self.vmem_bytes}")
 
 
+@dataclass(frozen=True)
+class MeshProfile(DeviceProfile):
+    """N identical cores, each with a per-core :class:`DeviceProfile`
+    envelope.
+
+    All inherited fields (``vmem_bytes``, ``hbm_gbps``, ``mxu_tflops``,
+    geometry) are PER CORE, so the cost model's ``Footprint.fits`` check
+    is unchanged: a kernel invocation must fit one core's budget — the
+    mesh buys parallel shards, never a bigger working set.  ``n_shards``
+    is the mesh extent the planner splits the batch/seeds axes over and
+    the occupancy target the serve batcher fills toward
+    (``max_batch * n_shards`` seats per launch).
+    """
+
+    n_shards: int = 1
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+
+    @property
+    def core(self) -> DeviceProfile:
+        """The per-core envelope this mesh replicates."""
+        return DeviceProfile(
+            name=self.name.split(":")[1] if ":" in self.name else self.name,
+            vmem_bytes=self.vmem_bytes, sublane=self.sublane,
+            lane=self.lane, mxu=self.mxu, hbm_gbps=self.hbm_gbps,
+            mxu_tflops=self.mxu_tflops)
+
+
+def mesh_profile(core, n_shards: int) -> MeshProfile:
+    """N-core mesh of ``core`` (a profile name or :class:`DeviceProfile`),
+    named ``mesh:<core>:<n>`` so the mesh extent rides plan cache keys and
+    ``TilePlan.device`` round-trips."""
+    base = get_profile(core)
+    if isinstance(base, MeshProfile):
+        raise ValueError(f"cannot nest meshes: {base.name!r}")
+    return MeshProfile(
+        name=f"mesh:{base.name}:{int(n_shards)}",
+        vmem_bytes=base.vmem_bytes, sublane=base.sublane, lane=base.lane,
+        mxu=base.mxu, hbm_gbps=base.hbm_gbps, mxu_tflops=base.mxu_tflops,
+        n_shards=int(n_shards))
+
+
 PROFILES: Dict[str, DeviceProfile] = {
     p.name: p for p in (
         DeviceProfile("tpu-v4", vmem_bytes=16 * MB, mxu=128,
@@ -81,19 +132,30 @@ def detect() -> DeviceProfile:
 
 
 def profile_names() -> Tuple[str, ...]:
-    """Names accepted by :func:`get_profile` / ``EngineSpec(device=...)``."""
+    """Single-core names accepted by :func:`get_profile` /
+    ``EngineSpec(device=...)``; the open-ended ``mesh:<name>:<n>`` family
+    is accepted on top of these."""
     return ("detected",) + tuple(PROFILES)
 
 
 def get_profile(name) -> DeviceProfile:
-    """Resolve a profile by name (``None``/"detected" -> :func:`detect`),
-    or pass a :class:`DeviceProfile` through unchanged."""
+    """Resolve a profile by name (``None``/"detected" -> :func:`detect`,
+    ``mesh:<profile>:<n>`` -> :func:`mesh_profile`), or pass a
+    :class:`DeviceProfile` through unchanged."""
     if isinstance(name, DeviceProfile):
         return name
     if name is None or name == "detected":
         return detect()
+    if isinstance(name, str) and name.startswith("mesh:"):
+        parts = name.split(":")
+        if len(parts) != 3 or not parts[2].isdigit() or int(parts[2]) < 1:
+            raise ValueError(
+                f"malformed mesh profile {name!r}; expected "
+                f"mesh:<profile>:<n> with n >= 1, e.g. 'mesh:edge-small:4'")
+        return mesh_profile(parts[1], int(parts[2]))
     try:
         return PROFILES[name]
     except KeyError:
-        raise ValueError(f"unknown device profile {name!r}; "
-                         f"choose from {profile_names()}") from None
+        raise ValueError(f"unknown device profile {name!r}; choose from "
+                         f"{profile_names()} or 'mesh:<profile>:<n>'"
+                         ) from None

@@ -81,7 +81,10 @@ class CNNAdapter:
         self.precision = precision
         # ``device`` names a repro.plan profile: every engine this adapter
         # builds (and its per-rule siblings, via replace()) serves with
-        # tile shapes planned for that resource budget.
+        # tile shapes planned for that resource budget.  A
+        # "mesh:<profile>:<n>" name builds mesh-sharded engines — the
+        # adapter then reports n_shards and the server batches toward
+        # full mesh occupancy.
         self.engine = engine_lib.build(engine_lib.EngineSpec(
             model=engine_lib.CNNModel(params, cfg), method=store_rules,
             precision=precision, device=device, autotune=autotune))
@@ -108,6 +111,13 @@ class CNNAdapter:
         """Expected per-example shape — lets the server reject malformed
         payloads at submit instead of poisoning a compiled batch."""
         return (*self.cfg.in_hw, self.cfg.in_ch)
+
+    @property
+    def n_shards(self) -> int:
+        """Mesh extent of the base engine (1 = single-core).  The server
+        reads this to size the batcher's ``fill_target`` so sharded
+        launches run at full mesh occupancy."""
+        return self.engine.n_shards
 
     # -- engines -------------------------------------------------------------
 

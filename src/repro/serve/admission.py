@@ -187,10 +187,12 @@ class AdmissionController:
                       else cfg.default_deadline_s)
         if deadline_s is not None:
             # Deadlines anchor at the TRUE arrival (replay drivers pre-stamp
-            # arrive_t): a request that reaches admission late — e.g. while
-            # the loop serviced a burst — has already spent part of its
-            # budget, and is shed deterministically if it spent all of it.
-            req.deadline_t = (req.arrive_t or now) + deadline_s
+            # arrive_t; is-None, not falsy — a t=0.0 replay arrival is real):
+            # a request that reaches admission late — e.g. while the loop
+            # serviced a burst — has already spent part of its budget, and
+            # is shed deterministically if it spent all of it.
+            req.deadline_t = ((now if req.arrive_t is None
+                               else req.arrive_t) + deadline_s)
             eta = now + self.queue_wait_s(pending) + self.estimator.estimate(
                 req.kind, req.method if req.kind == EXPLAIN else "")
             if eta > req.deadline_t:

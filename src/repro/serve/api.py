@@ -93,7 +93,13 @@ class Request:
     target: Optional[int] = None    # class to explain; None = argmax
     topk: Optional[int] = None      # K-class panel instead of one target
     key: Any = None                 # PRNG key (stochastic methods)
-    arrive_t: float = 0.0           # stamped by the batcher on submit
+    # Arrival time: None until the batcher stamps it on submit.  Replay
+    # drivers pre-stamp true arrivals; None (not 0.0) is the sentinel so a
+    # VirtualClock trace starting at t=0.0 is never re-stamped.
+    arrive_t: Optional[float] = None
+    # Monotonic stochastic-singleton bucket token, minted lazily by
+    # ``batcher.bucket_key`` (id(req) is GC-reusable and would collide).
+    batch_token: Optional[int] = None
     deadline_s: Optional[float] = None  # latency budget from submit (SLO)
     deadline_t: Optional[float] = None  # absolute deadline (admission-stamped)
     degraded: bool = False          # serve via the degraded sibling engine

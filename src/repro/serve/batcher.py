@@ -15,7 +15,11 @@ rule set.  The batcher therefore:
     serving;
   * **deadlines** each bucket: a bucket pops when it is full OR its oldest
     request has waited ``max_delay_s`` — the classic throughput/latency
-    micro-batching trade.
+    micro-batching trade;
+  * **fills toward the mesh** when the serving engine is sharded
+    (``n_shards > 1``): a sharded launch has ``max_batch * n_shards``
+    seats (:attr:`MicroBatcher.fill_target`), so buckets pop at full mesh
+    occupancy instead of starving N-1 shards with single-core batches.
 
 Heavy-traffic hardening adds per-REQUEST deadlines on top of the per-BUCKET
 delay cap:
@@ -40,6 +44,7 @@ deterministically.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -53,6 +58,23 @@ from repro.serve.api import EXPLAIN, Request
 BucketKey = Tuple
 
 _INF = float("inf")
+
+#: Monotonic mint for the stochastic-singleton bucket token.  NOT ``id(req)``:
+#: CPython reuses object ids after GC, so two distinct in-flight smoothgrad
+#: requests could collide into one bucket and share a noise draw.
+_BATCH_TOKENS = itertools.count(1)
+
+
+def _singleton_token(req: Request) -> int:
+    """The request's monotonic bucket token, minted on first use.
+
+    Lazily minted (rather than at submit) so :func:`bucket_key` is total
+    over un-submitted requests too; ``itertools.count.__next__`` is atomic
+    under CPython, so concurrent minting never duplicates a token.
+    """
+    if req.batch_token is None:
+        req.batch_token = next(_BATCH_TOKENS)
+    return req.batch_token
 
 
 def bucket_key(req: Request) -> BucketKey:
@@ -71,15 +93,33 @@ def bucket_key(req: Request) -> BucketKey:
     needs_key = registry.get(req.method).needs_key
     return (req.kind, req.method, shape, dtype, req.topk,
             req.target is None, req.degraded,
-            id(req) if needs_key else None)
+            _singleton_token(req) if needs_key else None)
 
 
 def pad_size(n: int, max_batch: int) -> int:
-    """Next power of two >= n, capped at ``max_batch``."""
+    """Next power of two >= n, capped at ``max_batch``.
+
+    The cap is unconditional — callers pop at most ``max_batch`` requests
+    per launch, and the compiled programs are shaped for it; an ``n`` above
+    the cap is clamped, never returned as a non-pow2 escape hatch.
+    """
     p = 1
     while p < n:
         p *= 2
-    return min(p, max(max_batch, n))
+    return min(p, max_batch)
+
+
+def slack_s(deadline_t: float, now: float, service_est_s: float) -> float:
+    """Deadline slack if launched RIGHT NOW: ``deadline - (now + est)``.
+
+    The one boundary :meth:`MicroBatcher.expire` and
+    :meth:`MicroBatcher.ready` share: a request is DOOMED iff
+    ``slack < 0`` (cannot meet its deadline even launched immediately) and
+    URGENT iff ``slack <= 0`` (waiting any longer blows it).  At exactly
+    ``slack == 0`` the request is therefore dispatched, never expired —
+    the launch that starts now completes at the deadline, on time.
+    """
+    return deadline_t - (now + service_est_s)
 
 
 def stack_padded(xs: List, size: int) -> jnp.ndarray:
@@ -132,19 +172,35 @@ class _Bucket:
 
 class MicroBatcher:
     def __init__(self, *, max_batch: int = 8, max_delay_s: float = 0.002,
-                 clock: Callable[[], float] = clock_lib.monotonic):
+                 clock: Callable[[], float] = clock_lib.monotonic,
+                 n_shards: int = 1):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
         self.max_batch = max_batch
+        #: mesh extent of the serving engine: a sharded launch has
+        #: ``max_batch * n_shards`` seats (``fill_target``), so buckets fill
+        #: toward full mesh occupancy before popping.
+        self.n_shards = n_shards
         self.max_delay_s = max_delay_s
         self.clock = clock
         self._buckets: Dict[BucketKey, _Bucket] = {}
+
+    @property
+    def fill_target(self) -> int:
+        """Seats per launch: ``max_batch`` per shard across the mesh."""
+        return self.max_batch * self.n_shards
 
     def pending(self) -> int:
         return sum(len(b.requests) for b in self._buckets.values())
 
     def submit(self, req: Request) -> None:
-        if not req.arrive_t:        # replay drivers pre-stamp true arrivals
+        # ``is None``, not falsy: replay drivers pre-stamp true arrivals,
+        # and a VirtualClock trace legitimately starts at t == 0.0 — a falsy
+        # check would re-stamp that first arrival and mis-anchor its
+        # deadline and EDF position.
+        if req.arrive_t is None:
             req.arrive_t = self.clock()
         bucket = self._buckets.setdefault(bucket_key(req), _Bucket())
         if not bucket.requests:
@@ -174,7 +230,8 @@ class MicroBatcher:
     def expire(self, now: Optional[float] = None,
                service_est_s: float = 0.0) -> List[Request]:
         """Remove and return every request that cannot meet its deadline
-        even if launched right now (``deadline < now + service_est_s``).
+        even if launched right now (:func:`slack_s` ``< 0``; the exact
+        boundary ``slack == 0`` is dispatchable, see :func:`slack_s`).
 
         Run this BEFORE :meth:`ready`: a doomed request must neither occupy
         a seat in a padded launch nor hold a bucket open.  The caller turns
@@ -186,7 +243,7 @@ class MicroBatcher:
             bucket = self._buckets[key]
             keep = []
             for req in bucket.requests:
-                if _deadline(req) < now + service_est_s:
+                if slack_s(_deadline(req), now, service_est_s) < 0:
                     doomed.append(req)
                 else:
                     keep.append(req)
@@ -200,26 +257,28 @@ class MicroBatcher:
 
     def ready(self, now: Optional[float] = None,
               service_est_s: float = 0.0) -> List[Batch]:
-        """Pop every bucket that is full, past the bucket delay cap, or
-        whose most urgent request would blow its deadline by waiting
-        (``earliest deadline - now <= service_est_s``)."""
+        """Pop every bucket that is full (``fill_target`` seats — one
+        ``max_batch`` per mesh shard), past the bucket delay cap, or whose
+        most urgent request would blow its deadline by waiting any longer
+        (:func:`slack_s` ``<= 0`` — the same boundary :meth:`expire`
+        sweeps at, so a ``slack == 0`` request is launched, not shed)."""
         now = self.clock() if now is None else now
         out = []
         for key in list(self._buckets):
             bucket = self._buckets.get(key)
-            while bucket and len(bucket.requests) >= self.max_batch:
-                out.append(self._pop(key, self.max_batch))
+            while bucket and len(bucket.requests) >= self.fill_target:
+                out.append(self._pop(key, self.fill_target))
                 bucket = self._buckets.get(key)
             if bucket and (now - bucket.oldest_t >= self.max_delay_s
-                           or bucket.earliest_deadline() - now
-                           <= service_est_s):
+                           or slack_s(bucket.earliest_deadline(), now,
+                                      service_est_s) <= 0):
                 out.append(self._pop(key, len(bucket.requests)))
         return out
 
     def flush(self) -> List[Batch]:
-        """Pop everything (shutdown / drain), max_batch chunks."""
+        """Pop everything (shutdown / drain), fill_target chunks."""
         out = []
         for key in list(self._buckets):
             while key in self._buckets:
-                out.append(self._pop(key, self.max_batch))
+                out.append(self._pop(key, self.fill_target))
         return out

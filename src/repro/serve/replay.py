@@ -140,21 +140,36 @@ class CostModel:
     per-row term: ``row_s`` per forward row, ``seed_row_s`` per (seed x
     row) of the BP phase.  ``scale`` derives the cheaper sibling used for
     the ``fxp16`` degradation reroute.
+
+    ``n_shards > 1`` models a mesh-sharded engine: the batch axis splits
+    across the mesh, so the per-row terms charge ``ceil(rows/n_shards)``
+    rows — the slowest shard's slice — while ``launch_s`` stays whole
+    (one sharded program launch, not N).  Mirrors how
+    ``plan.shard_batch_seeds`` splits before per-core tiling.
     """
 
     launch_s: float = 200e-6
     row_s: float = 50e-6
     seed_row_s: float = 30e-6
+    n_shards: int = 1
+
+    def _rows(self, rows: int) -> int:
+        return -(-rows // self.n_shards)        # slowest shard's slice
 
     def predict_s(self, rows: int) -> float:
-        return self.launch_s + rows * self.row_s
+        return self.launch_s + self._rows(rows) * self.row_s
 
     def replay_s(self, seeds: int, rows: int) -> float:
-        return self.launch_s + seeds * rows * self.seed_row_s
+        return self.launch_s + seeds * self._rows(rows) * self.seed_row_s
 
     def scale(self, factor: float) -> "CostModel":
         return CostModel(self.launch_s * factor, self.row_s * factor,
-                         self.seed_row_s * factor)
+                         self.seed_row_s * factor, self.n_shards)
+
+    def sharded(self, n_shards: int) -> "CostModel":
+        """The same per-core costs spread over an ``n_shards`` mesh."""
+        return CostModel(self.launch_s, self.row_s, self.seed_row_s,
+                         int(n_shards))
 
 
 class SimAdapter:
@@ -193,6 +208,13 @@ class SimAdapter:
             self._weights[size] = rng.randn(size, self.num_classes).astype(
                 np.float32)
         return self._weights[size]
+
+    @property
+    def n_shards(self) -> int:
+        """Mesh extent of the modeled engine — the server reads this to
+        size the batcher's ``fill_target`` (same duck-typed contract as
+        ``CNNAdapter.n_shards``)."""
+        return self.cost.n_shards
 
     def with_precision(self, precision: str) -> "SimAdapter":
         """Cheaper sibling for the degradation reroute (half-cost model,
@@ -256,6 +278,10 @@ class TimedAdapter:
     @property
     def example_shape(self):
         return getattr(self.inner, "example_shape", None)
+
+    @property
+    def n_shards(self):
+        return getattr(self.inner, "n_shards", 1)
 
     def _timed(self, fn, *args):
         t0 = perf_counter()

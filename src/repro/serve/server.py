@@ -75,8 +75,12 @@ class ExplanationServer:
         if self.tracer.enabled:
             self.tracer.clock = clock      # spans and deadlines share "now"
         self._trace_seq = itertools.count()
+        # Mesh-sharded adapters (engine built for a mesh:<profile>:<n>
+        # device) expose n_shards; the batcher then fills buckets toward
+        # max_batch * n_shards seats so every launch occupies the mesh.
         self.batcher = MicroBatcher(max_batch=max_batch,
-                                    max_delay_s=max_delay_s, clock=clock)
+                                    max_delay_s=max_delay_s, clock=clock,
+                                    n_shards=getattr(adapter, "n_shards", 1))
         self.cache = ResidualCache(cache_capacity)
         self.stats = ServerStats()
         self.method_opts = method_opts or {}
@@ -118,7 +122,7 @@ class ExplanationServer:
             tid = f"{req.uid}#{next(self._trace_seq)}"
             req.trace = RequestTrace(self.tracer.start(
                 f"request/{req.kind}", cat="request", trace_id=tid,
-                t0=req.arrive_t or now,
+                t0=now if req.arrive_t is None else req.arrive_t,
                 args={"uid": req.uid,
                       "method": req.method if req.kind == EXPLAIN else ""}))
         try:
@@ -139,7 +143,9 @@ class ExplanationServer:
                     self.stats.record_degrade(action)
             elif req.deadline_s is not None and req.deadline_t is None:
                 # deadlines work without admission too; anchor at arrival
-                req.deadline_t = (req.arrive_t or now) + req.deadline_s
+                # (is-None, not falsy: replay arrivals at t=0.0 are real)
+                req.deadline_t = ((now if req.arrive_t is None
+                                   else req.arrive_t) + req.deadline_s)
             if req.kind == EXPLAIN and req.topk is not None:
                 cls = registry.get(req.method)
                 if not (cls.mask_reuse and self._rules_compatible(
@@ -338,7 +344,7 @@ class ExplanationServer:
         return resp
 
     def _run_predict(self, batch: Batch) -> List[Response]:
-        xb, live = batch.stack(self.batcher.max_batch)
+        xb, live = batch.stack(self.batcher.fill_target)
         logits, residuals = self.adapter.predict(xb)
         jax.block_until_ready(logits)
         self.stats.record_batch(live, xb.shape[0])
@@ -421,7 +427,7 @@ class ExplanationServer:
                    for r, e in zip(reqs, entries)]
         # pow2-pad the hit group too (rows repeat entry 0, sliced off below)
         # so the BP program compiles for a handful of batch shapes only.
-        psize = pad_size(len(reqs), self.batcher.max_batch)
+        psize = pad_size(len(reqs), self.batcher.fill_target)
         ent_pad = entries + [entries[0]] * (psize - len(reqs))
         tgt_pad = targets + [targets[0]] * (psize - len(reqs))
         residuals = concat_examples([e.residuals for e in ent_pad])
@@ -459,7 +465,7 @@ class ExplanationServer:
         if (registry.get(method).mask_reuse
                 and self._rules_compatible(adapter.store_rules, method)):
             return self._explain_cold_bp(method, reqs, degraded=degraded)
-        xb, live = Batch(("explain",), reqs).stack(self.batcher.max_batch)
+        xb, live = Batch(("explain",), reqs).stack(self.batcher.fill_target)
         explainer = self.explainer(method, degraded)
         if reqs[0].target is None:             # bucket-homogeneous target kind
             target = None
@@ -487,7 +493,7 @@ class ExplanationServer:
         warming the residual cache with the forward's packed masks (primary
         adapter only — degraded residuals are engine-incompatible)."""
         adapter = self._adapter_for(degraded)
-        xb, live = Batch(("explain",), reqs).stack(self.batcher.max_batch)
+        xb, live = Batch(("explain",), reqs).stack(self.batcher.fill_target)
         logits, residuals = adapter.predict(xb)
         targets = [self._targets_for(r, logits[i])
                    for i, r in enumerate(reqs)]

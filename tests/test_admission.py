@@ -436,3 +436,120 @@ def test_load_replay_slo_checker_flags_violations():
     starved = type(over)(offered=100, completed=0, shed_submit=100)
     assert any("graceful" in f
                for f in load_replay.check_slo(nominal, starved))
+
+
+# ---------------------------------------------------------------------------
+# batcher boundary & arrival-stamp regressions
+# ---------------------------------------------------------------------------
+
+
+def test_submit_preserves_prestamped_zero_arrival():
+    """arrive_t == 0.0 is a real VirtualClock arrival, not "unset"."""
+    clock = VirtualClock()
+    clock.advance(5.0)
+    mb = MicroBatcher(max_batch=4, max_delay_s=0.0, clock=clock)
+    pre = req("a")
+    pre.arrive_t = 0.0
+    mb.submit(pre)
+    assert pre.arrive_t == 0.0                   # not re-stamped to 5.0
+    fresh = req("b")
+    mb.submit(fresh)
+    assert fresh.arrive_t == pytest.approx(5.0)  # unset -> stamped at submit
+
+
+def test_replay_t0_arrival_anchors_deadline_at_zero():
+    """Regression: a falsy arrive_t check treated the trace's t=0.0
+    arrival as unset and re-anchored its deadline at submit time.  Serving
+    the first event pushes virtual time past t=0; the second t=0 event's
+    budget is then already spent and must shed, never silently refresh."""
+    clock = VirtualClock()
+    srv = sim_server(clock, admission=AdmissionConfig(capacity=10))
+    trace = [TraceEvent(t=0.0, uid="warm", kind=PREDICT),
+             TraceEvent(t=0.0, uid="late", kind=PREDICT, deadline_s=1e-4)]
+    rep = replay(srv, trace)
+    assert rep.completed == 1
+    assert rep.shed_total == 1
+    assert rep.sheds_by_reason.get(SHED_DEADLINE) == 1
+
+
+def test_slack_zero_boundary_dispatches_never_expires():
+    """deadline - (now + est) == 0: launched right now the request
+    finishes exactly on time — expire() keeps it, ready() launches it.
+    One tick later it is doomed, and only then does expire() claim it."""
+    from repro.serve.batcher import slack_s
+    assert slack_s(1.0, 0.9, 0.1) == 0.0
+    mb = MicroBatcher(max_batch=8, max_delay_s=60.0, clock=VirtualClock())
+    r = req("edge")
+    r.deadline_t = 0.010
+    mb.submit(r)
+    assert mb.expire(now=0.008, service_est_s=0.002) == []      # slack == 0
+    popped = mb.ready(now=0.008, service_est_s=0.002)           # but urgent
+    assert [b.requests[0].uid for b in popped] == ["edge"]
+    mb2 = MicroBatcher(max_batch=8, max_delay_s=60.0, clock=VirtualClock())
+    r2 = req("late")
+    r2.deadline_t = 0.010
+    mb2.submit(r2)
+    doomed = mb2.expire(now=0.009, service_est_s=0.002)         # slack < 0
+    assert [d.uid for d in doomed] == ["late"]
+    assert mb2.pending() == 0
+
+
+def test_stochastic_tokens_survive_gc_never_collide():
+    """Regression: singleton-bucket tokens were id(req) — CPython reuses
+    addresses after GC, so two DISTINCT in-flight smoothgrad requests
+    could land in one bucket and share a noise draw.  Tokens are now
+    minted monotonic and stick to the request."""
+    import gc
+
+    from repro.serve import bucket_key
+    keys = set()
+    for i in range(50):
+        r = req(f"s{i}", kind=EXPLAIN, method="smoothgrad")
+        k = bucket_key(r)
+        assert bucket_key(r) == k                # stable once minted
+        assert isinstance(r.batch_token, int)
+        assert k not in keys                     # unique across GC churn
+        keys.add(k)
+        del r
+        gc.collect()                             # invite id() reuse
+
+
+def test_fill_target_scales_batches_to_the_mesh():
+    mb = MicroBatcher(max_batch=4, max_delay_s=60.0, clock=VirtualClock(),
+                      n_shards=4)
+    assert mb.fill_target == 16
+    for i in range(15):
+        mb.submit(req(f"r{i}"))
+    assert mb.ready(now=0.0) == []               # under full mesh occupancy
+    mb.submit(req("r15"))
+    popped = mb.ready(now=0.0)
+    assert [len(b.requests) for b in popped] == [16]
+    with pytest.raises(ValueError, match="n_shards"):
+        MicroBatcher(max_batch=4, n_shards=0)
+
+
+def test_sim_server_fills_toward_mesh_occupancy():
+    """The server sizes the batcher from the adapter's mesh extent: a
+    2-shard adapter launches max_batch * 2-seat batches."""
+    clock = VirtualClock()
+    srv = ExplanationServer(SimAdapter(clock, CostModel().sharded(2)),
+                            clock=clock, max_batch=4, max_delay_s=60.0)
+    assert srv.batcher.fill_target == 8
+    for i in range(8):
+        srv.submit(req(f"r{i}"))
+    out = srv.poll()
+    assert len(out) == 8
+    assert {r.batch_size for r in out} == {8}
+
+
+def test_cost_model_sharded_splits_rows_not_launch():
+    c = CostModel(launch_s=2e-4, row_s=5e-5, seed_row_s=3e-5)
+    s = c.sharded(4)
+    assert s.n_shards == 4
+    # per-row terms charge the slowest shard's ceil-divided slice; the
+    # single program launch is unsplittable and stays whole
+    assert s.predict_s(8) == pytest.approx(2e-4 + 2 * 5e-5)
+    assert s.predict_s(5) == pytest.approx(2e-4 + 2 * 5e-5)   # ceil(5/4)=2
+    assert s.replay_s(3, 8) == pytest.approx(2e-4 + 3 * 2 * 3e-5)
+    assert c.predict_s(8) == pytest.approx(2e-4 + 8 * 5e-5)
+    assert s.scale(0.5).n_shards == 4            # siblings keep the mesh

@@ -46,3 +46,24 @@ def test_check_ignores_non_latency_and_nan_rows(tmp_path):
     _write(tmp_path, "BENCH_2026-07-30.json",
            [["kernel/a_us", 99.0, "d"], ["suite/bytes", 99999.0, "d"]])
     assert report.check(str(tmp_path)) == 0
+
+
+def test_check_gates_sharded_throughput_floor(tmp_path):
+    """``*_throughput`` rows gate UPWARD: falling below the 1.5x sharded
+    floor (or the previous snapshot minus tolerance) is a regression."""
+    _write(tmp_path, "BENCH_2026-07-29.json",
+           [["serve/sharded_throughput", 2.8, "4shard_vs_1shard"]])
+    _write(tmp_path, "BENCH_2026-07-30.json",
+           [["serve/sharded_throughput", 2.7, "4shard_vs_1shard"]])
+    assert report.check(str(tmp_path)) == 0          # above floor, flat-ish
+    _write(tmp_path, "BENCH_2026-07-31.json",
+           [["serve/sharded_throughput", 1.2, "4shard_vs_1shard"]])
+    assert report.check(str(tmp_path)) == 1          # below the 1.5x floor
+    _write(tmp_path, "BENCH_2026-08-01.json",
+           [["serve/sharded_throughput", 1.6, "4shard_vs_1shard"]])
+    assert report.check(str(tmp_path), threshold=1.0) == 0   # floor only
+    # a fresh row with no baseline still must clear the absolute floor
+    _write(tmp_path, "BENCH_2026-08-02.json",
+           [["serve/sharded_throughput", 1.4, "4shard_vs_1shard"],
+            ["serve/throughput_4shard_rps", 15000.0, "drain"]])
+    assert report.check(str(tmp_path)) == 1

@@ -446,3 +446,66 @@ def test_fold_audit_noop_without_a_plan(setup):
     eng = build(spec_for(params))                      # no device plan
     assert eng._plan is None
     assert eng._engine_for_fold(64, x[:2]) is eng
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded engines
+# ---------------------------------------------------------------------------
+
+
+def test_one_shard_mesh_engine_is_bitwise_single_device(setup):
+    """mesh:<p>:1 is the single-device engine plus identity sharding
+    constraints — logits AND relevance bitwise equal (acceptance bar for
+    the sharded build path)."""
+    params, x = setup
+    e0 = build(spec_for(params, method="guided", device="edge-small"))
+    e1 = build(spec_for(params, method="guided",
+                        device="mesh:edge-small:1"))
+    assert e0.n_shards == 1 and e0.mesh is None
+    assert e1.n_shards == 1 and e1.mesh is not None
+    l0, r0 = e0.explain(x)
+    l1, r1 = e1.explain(x)
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+
+def test_four_shard_mesh_engine_serves_and_matches(setup):
+    """An n_shards > local-device-count mesh degenerates to replicated
+    placement on the test harness but still reports its extent (for the
+    batcher's fill target) and serves correct results."""
+    params, x = setup
+    e4 = build(spec_for(params, method="saliency",
+                        device="mesh:edge-small:4"))
+    assert e4.n_shards == 4
+    e0 = build(spec_for(params, method="saliency", device="edge-small"))
+    l0, r0 = e0.explain(x)
+    l4, r4 = e4.explain(x)
+    np.testing.assert_allclose(np.asarray(r4), np.asarray(r0), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l4), np.asarray(l0), atol=1e-6)
+
+
+def test_mesh_engine_forward_replay_roundtrip(setup):
+    """The residual predict -> cached BP replay path runs sharded too and
+    matches the single-device replay bitwise on one shard."""
+    params, x = setup
+    e0 = build(spec_for(params, method="saliency", device="edge-small"))
+    e1 = build(spec_for(params, method="saliency",
+                        device="mesh:edge-small:1"))
+    logits0, res0 = e0.forward(x)
+    logits1, res1 = e1.forward(x)
+    np.testing.assert_array_equal(np.asarray(logits0), np.asarray(logits1))
+    seeds = jax.nn.one_hot(jnp.argmax(logits0, -1), CFG.num_classes)[None]
+    np.testing.assert_array_equal(np.asarray(e0.replay(res0, seeds)),
+                                  np.asarray(e1.replay(res1, seeds)))
+
+
+def test_adapter_reports_mesh_extent(setup):
+    """CNNAdapter surfaces the engine's mesh extent; per-rule siblings and
+    from_engine round-trips keep it (the server reads it for fill)."""
+    from repro.serve import CNNAdapter
+    params, x = setup
+    adp = CNNAdapter(params, CFG, device="mesh:edge-small:2")
+    assert adp.n_shards == 2
+    assert adp.engine_for("guided").n_shards == 2
+    assert CNNAdapter.from_engine(adp.engine).n_shards == 2
+    assert CNNAdapter(params, CFG, device="edge-small").n_shards == 1

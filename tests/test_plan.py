@@ -326,3 +326,60 @@ def test_cnn_plan_always_legal(hw, ch, fc, classes, seeds, device,
         # pool/patch term) exceeds the budget at every candidate
         return
     _assert_plan_legal(cfg, plan, profile, precision, seeds=seeds)
+
+
+# ---------------------------------------------------------------------------
+# mesh profiles & sharded planning
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_profile_parse_and_per_core_budget():
+    from repro.plan import MeshProfile
+    p = get_profile("mesh:edge-small:4")
+    assert isinstance(p, MeshProfile)
+    assert p.n_shards == 4 and p.name == "mesh:edge-small:4"
+    # every inherited budget field is PER CORE: a mesh buys parallel
+    # shards, never a bigger per-shard working set
+    assert p.vmem_bytes == EDGE.vmem_bytes and p.mxu == EDGE.mxu
+    assert p.core.name == "edge-small"
+    assert get_profile(p) is p                    # pass-through
+    assert get_profile("mesh:edge-small:1").n_shards == 1
+
+
+def test_mesh_profile_rejects_malformed_names():
+    from repro.plan import mesh_profile
+    for bad in ("mesh:edge-small", "mesh:edge-small:x",
+                "mesh:edge-small:0", "mesh:edge-small:4:2"):
+        with pytest.raises(ValueError, match="malformed mesh profile"):
+            get_profile(bad)
+    with pytest.raises(ValueError, match="unknown device profile"):
+        get_profile("mesh:edge-nonexistent:4")
+    with pytest.raises(ValueError, match="cannot nest"):
+        mesh_profile(get_profile("mesh:edge-small:2"), 2)
+
+
+def test_shard_batch_seeds_batch_first_then_seeds():
+    from repro.plan import shard_batch_seeds
+    assert shard_batch_seeds(8, 16, 4) == (2, 16)   # batch covers the mesh
+    assert shard_batch_seeds(2, 16, 4) == (1, 8)    # leftover shards -> seeds
+    assert shard_batch_seeds(1, 1, 4) == (1, 1)     # nothing left to split
+    assert shard_batch_seeds(8, 16, 1) == (8, 16)   # single core: identity
+    assert shard_batch_seeds(3, 1, 2) == (2, 1)     # ceil remainder slice
+    with pytest.raises(ValueError, match="n_shards"):
+        shard_batch_seeds(8, 16, 0)
+
+
+def test_one_shard_mesh_plan_matches_single_core():
+    single = plan_cnn(TINY_CFG, device="edge-small", batch=4, seeds=3)
+    mesh1 = plan_cnn(TINY_CFG, device="mesh:edge-small:1", batch=4, seeds=3)
+    assert mesh1.device == "mesh:edge-small:1"   # extent rides cache keys...
+    assert mesh1.entries == single.entries       # ...but tiles are identical
+
+
+def test_mesh_plan_tiles_the_per_shard_slice():
+    """A 4-shard plan of a batch-8 workload tiles the batch-2 slice."""
+    whole = plan_cnn(TINY_CFG, device="edge-small", batch=8, seeds=1)
+    split = plan_cnn(TINY_CFG, device="mesh:edge-small:4", batch=8, seeds=1)
+    local = plan_cnn(TINY_CFG, device="edge-small", batch=2, seeds=1)
+    assert split.keys() == whole.keys()
+    assert split.entries == local.entries

@@ -564,3 +564,43 @@ def test_degrade_reroutes_to_fxp16_sibling_end_to_end(setup, setup_fxp):
     hm_f = attribution.heatmap(np.asarray(out["f"].relevance)[None])[0]
     hm_q = attribution.heatmap(np.asarray(out["q"].relevance)[None])[0]
     assert fidelity.spearman(np.asarray(hm_f), np.asarray(hm_q)) > 0.8
+
+
+# ---------------------------------------------------------------------------
+# padding cap property + mesh-sharded serving
+# ---------------------------------------------------------------------------
+
+
+from tests._hypothesis_compat import given, settings, st  # noqa: E402
+from repro.serve.batcher import pad_size  # noqa: E402
+
+
+@given(st.integers(min_value=1, max_value=4096),
+       st.integers(min_value=1, max_value=64))
+@settings(max_examples=200, deadline=None)
+def test_pad_size_cap_is_unconditional(n, max_batch):
+    """Regression: pad_size used to return the uncapped next power of two
+    when n > max_batch, launching shapes no compiled program had."""
+    p = pad_size(n, max_batch)
+    assert 1 <= p <= max_batch                     # the cap always holds
+    assert p >= min(n, max_batch)                  # every popped row seated
+    assert p == max_batch or (p & (p - 1)) == 0    # pow2 below the cap
+    if n <= max_batch:
+        assert p < max(2 * n, 2)                   # and the NEXT pow2
+
+
+def test_mesh_server_heatmaps_bitwise_with_single_device(setup):
+    """Serving through a 1-shard mesh adapter returns heatmaps bitwise
+    identical to the single-device adapter for the same requests."""
+    params, _, x = setup
+    single = CNNAdapter(params, CFG, device="edge-small")
+    meshed = CNNAdapter(params, CFG, device="mesh:edge-small:1")
+    mk = lambda: [Request(uid=f"r{i}", kind=EXPLAIN, x=x[i],
+                          method="saliency") for i in range(3)]
+    out_s = make_server(single).serve(mk())
+    out_m = make_server(meshed).serve(mk())
+    assert out_s.keys() == out_m.keys()
+    for uid in out_s:
+        assert out_s[uid].ok and out_m[uid].ok
+        np.testing.assert_array_equal(np.asarray(out_s[uid].relevance),
+                                      np.asarray(out_m[uid].relevance))

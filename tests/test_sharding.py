@@ -88,3 +88,31 @@ def test_embed_sharded_lookup_matches_plain(monkeypatch):
         sharded = jax.jit(lambda p, t: layers.embed(p, t, cfg))(
             params["embed"], toks)
     assert jnp.allclose(plain, sharded)
+
+
+def test_serving_mesh_replicates_absent_axes():
+    """A serving mesh has only the data axis: "batch" shards onto it,
+    while logical axes with no physical home on this mesh (seeds, model)
+    silently replicate — the absent-axis fallback the mesh-sharded
+    engines lean on."""
+    from repro.launch.mesh import make_serving_mesh
+    mesh = make_serving_mesh(4)        # capped at the local device count
+    assert tuple(mesh.axis_names) == ("data",)
+    assert physical_spec(("batch", None), mesh) == P("data", None)
+    assert physical_spec(("seeds", "batch"), mesh) == P(None, "data")
+    assert physical_spec(("model",), mesh) == P(None)
+    with pytest.raises(ValueError):
+        make_serving_mesh(0)
+
+
+def test_constrain_identity_on_one_shard_serving_mesh():
+    """Sharding constraints on a 1-device serving mesh change placement
+    metadata only — values round-trip bitwise."""
+    from repro.dist.sharding import constrain
+    from repro.launch.mesh import make_serving_mesh
+    mesh = make_serving_mesh(1)
+    x = jnp.arange(32.0).reshape(4, 8)
+    with use_mesh(mesh):
+        y = jax.jit(lambda v: constrain(v, "batch", None))(x)
+        z = jax.jit(lambda v: constrain(v, "seeds", "batch"))(x)
+    assert jnp.array_equal(y, x) and jnp.array_equal(z, x)
