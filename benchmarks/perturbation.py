@@ -1,0 +1,149 @@
+"""Perturbation-explainer benchmark: the folded forward vs sequential.
+
+The tentpole claim: N masked variants folded into the leading batch axis
+and scored in ONE forward pass (``Engine.perturb(batched=True)``, running
+the fold-tiled Pallas program) beat the sequential ``lax.map`` reference
+(one forward per mask, same masked tensors) by >= 3x on the paper CNN at
+N=256 — while agreeing bitwise.  The bitwise check runs HERE, every
+benchmark pass: a speedup from a diverged heatmap is not a speedup.
+
+Rows (land in ``BENCH_*.json`` via ``benchmarks/run.py``):
+
+  * ``perturb/occlusion_laxmap_us``   — sequential reference latency;
+  * ``perturb/occlusion_batched_us``  — folded-forward latency (rides the
+    standard ``*_us`` latency gate);
+  * ``perturb/occlusion_batched_speedup`` — their ratio, gated by
+    ``report.py --check`` at >= ``PERTURB_SPEEDUP_FLOOR`` (3x absolute)
+    plus the relative-regression threshold;
+  * ``perturb/rise_{1,4}shard_rps`` + ``perturb/rise_sharded_throughput``
+    — RISE fan-out (N=256 per request) served through the mesh-sharded
+    virtual-clock cost model: per-request PRNG keys fold into one
+    launch, shards split the folded rows; the ratio rides the existing
+    ``*_throughput`` floor gate (>= 1.5x).
+
+    PYTHONPATH=src:. python -m benchmarks.perturbation
+"""
+from __future__ import annotations
+
+import time
+
+#: occlusion geometry for the gated row: 2x2 windows at stride 2 tile the
+#: paper CNN's 32x32 map into exactly N = 16*16 = 256 masks.
+OCCLUSION = dict(window=2, stride=2)
+N_MASKS = 256
+RISE_SAMPLES = 256
+RISE_REQUESTS = 64
+
+
+def _paper_engine():
+    import jax
+
+    from repro import engine as engine_lib
+    from repro.models import cnn as cnn_lib
+    cfg = cnn_lib.CNNConfig()
+    params = cnn_lib.init(jax.random.PRNGKey(0), cfg)
+    eng = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.CNNModel(params, cfg), method="occlusion"))
+    return eng, cfg
+
+
+def _best_of(fn, reps):
+    import jax
+    best = float("inf")
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def occlusion_rows(reps: int = 3):
+    """Batched-vs-``lax.map`` occlusion at N=256 on the paper CNN."""
+    import jax
+    import numpy as np
+    eng, cfg = _paper_engine()
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (1,) + cfg.in_hw + (cfg.in_ch,))
+
+    def run(batched):
+        return eng.perturb(x, batched=batched, **OCCLUSION)[1]
+
+    # warm both programs (compile excluded), then best-of-reps
+    heat_b = jax.block_until_ready(run(True))
+    heat_s = jax.block_until_ready(run(False))
+    if not np.array_equal(np.asarray(heat_b), np.asarray(heat_s)):
+        raise AssertionError(
+            "occlusion heatmaps diverge between the folded forward and the "
+            "lax.map reference — the batched path is not a valid speedup")
+    _, t_b = _best_of(lambda: run(True), reps)
+    _, t_s = _best_of(lambda: run(False), max(1, reps - 1))
+    d = f"n_masks={N_MASKS}_paper_cnn_b1_bitwise_ok"
+    return [
+        ("perturb/occlusion_laxmap_us", t_s * 1e6, d),
+        ("perturb/occlusion_batched_us", t_b * 1e6, d),
+        ("perturb/occlusion_batched_speedup", t_s / t_b, d),
+    ]
+
+
+def _rise_fanout_pass(shards: int, *, n_requests: int = RISE_REQUESTS,
+                      n_samples: int = RISE_SAMPLES, seed: int = 7) -> float:
+    """RISE explains through the serve loop on the sharded cost model.
+
+    Submits ``n_requests`` keyed rise explains (the batcher folds the
+    per-request keys — no singleton buckets), drains at full occupancy,
+    and returns completed / virtual-clock makespan.  The cost model
+    charges per folded row, split across ``shards`` — the fan-out rides
+    the mesh exactly like a big batch does.
+    """
+    import jax
+    import numpy as np
+
+    from repro.serve import ExplanationServer
+    from repro.serve.api import Request
+    from repro.serve.replay import CostModel, SimAdapter, VirtualClock
+    clock = VirtualClock()
+    adapter = SimAdapter(clock, CostModel().sharded(shards))
+    server = ExplanationServer(adapter, max_batch=8, max_delay_s=0.002,
+                               clock=clock,
+                               method_opts={"rise": {"n_samples": n_samples}})
+    rng = np.random.RandomState(seed)
+    pool = rng.randn(32, 8, 8, 1).astype(np.float32)
+    for i in range(n_requests):
+        req = Request(uid=f"r{i}", kind="explain", x=pool[i % 32],
+                      method="rise", key=jax.random.PRNGKey(seed + i))
+        req.arrive_t = clock()
+        server.submit(req)
+    t0 = clock()
+    done = server.drain()
+    dt = clock() - t0
+    if len(done) != n_requests:
+        raise AssertionError(f"rise fan-out pass completed {len(done)} of "
+                             f"{n_requests} requests")
+    return len(done) / dt if dt else 0.0
+
+
+def rise_rows():
+    tp1 = _rise_fanout_pass(1)
+    tp4 = _rise_fanout_pass(4)
+    d = f"rise_n{RISE_SAMPLES}_x{RISE_REQUESTS}_requests"
+    return [
+        ("perturb/rise_1shard_rps", tp1, d),
+        ("perturb/rise_4shard_rps", tp4, d),
+        ("perturb/rise_sharded_throughput", tp4 / tp1 if tp1 else 0.0,
+         f"4shard_vs_1shard_speedup_{d}"),
+    ]
+
+
+def run():
+    return occlusion_rows() + rise_rows()
+
+
+def main():
+    for name, val, derived in run():
+        v = f"{val:.3f}" if val is not None else "-"
+        print(f"{name},{v},{derived}")
+
+
+if __name__ == "__main__":
+    main()

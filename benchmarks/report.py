@@ -9,11 +9,13 @@ compares the two newest ``benchmarks/results/BENCH_*.json`` snapshots
 (written by ``benchmarks/run.py``) row by row and exits nonzero when any
 ``*_us`` latency regressed by more than ``--threshold`` (default 15%),
 any ``*_shed_rate`` row of the load-replay suite rose past the relative
-threshold plus a 1%-absolute floor, or any ``*_throughput`` speedup row
+threshold plus a 1%-absolute floor, any ``*_throughput`` speedup row
 fell below ``SHARDED_THROUGHPUT_FLOOR`` (1.5x — the mesh-sharded serving
-claim) or dropped more than the threshold — the bench trajectory's
-tripwire for planned-vs-default tile drift, admission-policy drift, AND
-sharded-serving capacity drift.
+claim) or dropped more than the threshold, or any ``*_speedup`` row fell
+below ``PERTURB_SPEEDUP_FLOOR`` (3x — the folded-perturbation claim) or
+dropped more than the threshold — the bench trajectory's tripwire for
+planned-vs-default tile drift, admission-policy drift, sharded-serving
+capacity drift, AND batched-perturbation drift.
 
     PYTHONPATH=src python -m benchmarks.report --trend [--filter SUBSTR]
 prints every metric's trajectory across ALL snapshots (first->last ratio
@@ -138,6 +140,12 @@ def _shed_rows(bench: dict) -> dict:
 #: pipeline must stay at least this many times faster than single-core.
 SHARDED_THROUGHPUT_FLOOR = 1.5
 
+#: absolute floor for ``*_speedup`` rows: the folded perturbation forward
+#: (N masks folded into the batch axis, ONE Pallas launch sequence) must
+#: stay at least this many times faster than the sequential ``lax.map``
+#: reference — the batched-perturbation tentpole claim.
+PERTURB_SPEEDUP_FLOOR = 3.0
+
 
 def _throughput_rows(bench: dict) -> dict:
     """{row_name: speedup} for every ``*_throughput`` row (sharded-vs-
@@ -146,6 +154,19 @@ def _throughput_rows(bench: dict) -> dict:
     for rows in bench.get("suites", {}).values():
         for name, val, _derived in rows:
             if name.endswith("_throughput") \
+                    and isinstance(val, (int, float)) \
+                    and math.isfinite(val) and val > 0:
+                out[name] = float(val)
+    return out
+
+
+def _speedup_rows(bench: dict) -> dict:
+    """{row_name: ratio} for every ``*_speedup`` row (batched-vs-sequential
+    same-work ratios; bigger is better)."""
+    out = {}
+    for rows in bench.get("suites", {}).values():
+        for name, val, _derived in rows:
+            if name.endswith("_speedup") \
                     and isinstance(val, (int, float)) \
                     and math.isfinite(val) and val > 0:
                 out[name] = float(val)
@@ -206,6 +227,22 @@ def check(results_dir: str = "benchmarks/results",
         if flag or name not in old_tp \
                 or abs(new_tp[name] - old_tp[name]) > 0.05:
             print(f"  {name:44s} {prev}{new_tp[name]:.2f}x "
+                  f"(floor {floor:.2f}x){flag}")
+        if flag:
+            regressions.append(name)
+    # batched-vs-sequential speedup rows gate the same two ways, against
+    # the (higher) perturbation floor: the folded forward must never fall
+    # below PERTURB_SPEEDUP_FLOOR nor drop past the relative threshold.
+    old_sp, new_sp = _speedup_rows(old_bench), _speedup_rows(new_bench)
+    for name in sorted(new_sp):
+        floor = PERTURB_SPEEDUP_FLOOR
+        if name in old_sp:
+            floor = max(floor, old_sp[name] * (1 - threshold))
+        flag = " REGRESSION" if new_sp[name] < floor else ""
+        prev = f"{old_sp[name]:.2f}x -> " if name in old_sp else ""
+        if flag or name not in old_sp \
+                or abs(new_sp[name] - old_sp[name]) > 0.05:
+            print(f"  {name:44s} {prev}{new_sp[name]:.2f}x "
                   f"(floor {floor:.2f}x){flag}")
         if flag:
             regressions.append(name)

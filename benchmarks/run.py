@@ -8,6 +8,7 @@
 #   attribution_serving  — 'real-time XAI' at LM scale (decode vs explain)
 #   serving_queue        — repro.serve queue: p50/p99, cache hits, occupancy
 #   load_replay          — O(100k)-request SLO replay: p99/shed-rate gates
+#   perturbation         — folded perturb forward vs lax.map; rise fan-out
 #   roofline             — §Roofline terms from the dry-run artifacts
 from __future__ import annotations
 
@@ -28,8 +29,8 @@ def _row_val(val):
 
 def main() -> None:
     from benchmarks import (attribution_serving, compression, fp_bp_overhead,
-                            kernels, load_replay, memory_overhead, roofline,
-                            serving_queue)
+                            kernels, load_replay, memory_overhead,
+                            perturbation, roofline, serving_queue)
     suites = [
         ("memory_overhead", memory_overhead.run),
         ("fp_bp_overhead", fp_bp_overhead.run),
@@ -37,6 +38,7 @@ def main() -> None:
         ("attribution_serving", attribution_serving.run),
         ("serving_queue", serving_queue.run),
         ("load_replay", load_replay.run_bench),
+        ("perturbation", perturbation.run),
         ("compression", compression.run),
         ("roofline", roofline.run),
     ]

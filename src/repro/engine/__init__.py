@@ -29,12 +29,12 @@ it.
 from repro.engine.backward import (BackwardEngine, ManualSeedBatchedBackward,
                                    VjpBackward)
 from repro.engine.engine import Engine, build, cache_size, clear_cache
-from repro.engine.spec import (Argmax, CNNModel, EngineSpec, Fixed, FnModel,
-                               LMModel, TopK)
+from repro.engine.spec import (PERTURB_METHODS, Argmax, CNNModel, EngineSpec,
+                               Fixed, FnModel, LMModel, TopK)
 from repro.engine import methods
 
 __all__ = [
     "Argmax", "BackwardEngine", "CNNModel", "Engine", "EngineSpec", "Fixed",
-    "FnModel", "LMModel", "ManualSeedBatchedBackward", "TopK", "VjpBackward",
-    "build", "cache_size", "clear_cache", "methods",
+    "FnModel", "LMModel", "ManualSeedBatchedBackward", "PERTURB_METHODS",
+    "TopK", "VjpBackward", "build", "cache_size", "clear_cache", "methods",
 ]

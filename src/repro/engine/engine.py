@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from repro.engine import methods
 from repro.engine.backward import (BackwardEngine, ManualSeedBatchedBackward,
                                    VjpBackward)
-from repro.engine.spec import EngineSpec, Fixed, TopK
+from repro.engine.spec import PERTURB_METHODS, EngineSpec, Fixed, TopK
 from repro.obs import metrics as obsm
 
 
@@ -55,6 +55,7 @@ class Engine:
             return
         self._token_step = None
         self._fused_explain: Dict[Tuple[bool, Optional[int]], Any] = {}
+        self._fold_fn = None   # lazily-jitted fold-tiled forward (perturb)
         # folded-batch audit decisions (composite methods): folded M ->
         # engine to dispatch through (self when the plan still fits)
         self._fold_engines: Dict[int, "Engine"] = {}
@@ -80,19 +81,23 @@ class Engine:
                 self._n_shards = profile.n_shards
                 self._mesh = make_serving_mesh(profile.n_shards)
         kind = spec.resolve_backward()
+        # Perturbation specs are forward-only; the model still builds under
+        # a concrete rule set (fwd_rules -> saliency) so the compiled
+        # forward is shared with gradient consumers of the same spec shape.
+        rules = spec.fwd_rules()
         if kind == "seed_batched":
             if not getattr(model, "has_pair", False):
                 raise ValueError(
                     f"model {model!r} exposes no seed-batched pair; "
                     f"use backward='vjp'")
-            fwd, bwd = model.pair(spec.method, spec.precision,
+            fwd, bwd = model.pair(rules, spec.precision,
                                   plan=self._plan)
             if self._mesh is not None:
                 fwd = self._shard_pair_fwd(fwd)
                 bwd = self._shard_pair_bwd(bwd)
             self._backend = ManualSeedBatchedBackward(fwd, bwd)
         else:
-            f = model.logits_fn(spec.method, spec.precision,
+            f = model.logits_fn(rules, spec.precision,
                                 plan=self._plan)
             if self._mesh is not None:
                 f = self._shard_logits_fn(f)
@@ -103,7 +108,7 @@ class Engine:
         if spec.precision == "fxp16":
             self._model_fn = self._backend.forward
         else:
-            f = model.logits_fn(spec.method, spec.precision,
+            f = model.logits_fn(rules, spec.precision,
                                 plan=self._plan)
             if self._mesh is not None:
                 f = self._shard_logits_fn(f)
@@ -251,6 +256,7 @@ class Engine:
         never run twice.
         """
         self._require_array_engine("explain")
+        self._require_gradient_spec("explain")
         if self.supports_replay:
             logits, rel, _ = self.predict_then_explain(x, target=target,
                                                        topk=topk)
@@ -273,6 +279,7 @@ class Engine:
         and replay re-runs the forward inside the compiled program.
         """
         self._require_array_engine("predict_then_explain")
+        self._require_gradient_spec("predict_then_explain")
         target, topk = self._fanout(target, topk)
         x, live = self._pad(x)
         target = self._pad_target(target, live)
@@ -305,6 +312,64 @@ class Engine:
         return methods.smoothgrad(
             eng._model_fn, x, key, n=n, sigma=sigma, target=target,
             batched=batched, backward=eng.composite_backward)
+
+    def perturb(self, x, key=None, *, method: Optional[str] = None,
+                target=None, batched: bool = True,
+                n_samples: Optional[int] = None, **opts):
+        """Gradient-free perturbation explain: ``-> (logits, heat [B, H, W])``.
+
+        Runs :mod:`repro.perturb` over this engine's compiled forward —
+        N masked variants folded into the leading batch axis, ONE forward
+        pass, no ``jax.vjp`` anywhere (so this is the explain path that
+        works under ``precision="fxp16"``, where gradients don't exist).
+
+        ``method`` defaults to ``spec.method`` (which must then be one of
+        ``occlusion | lime | rise``); ``n_samples`` defaults to
+        ``spec.n_samples`` then the method default.  ``key`` is required
+        for the stochastic methods and may be a BATCHED stack of
+        per-example keys (shape ``[B, ...]`` — the serve layer's folded
+        per-request keys), yielding independent masks per example.
+
+        The folded ``[N*B, ...]`` forward is re-audited against the
+        resolved plan's budget first, exactly like IG's steps fold
+        (:meth:`_engine_for_fold`) — replanned or rejected BEFORE launch.
+        """
+        self._require_array_engine("perturb")
+        from repro import perturb as perturb_lib
+        method = method if method is not None else self.spec.method
+        if method not in PERTURB_METHODS:
+            raise ValueError(f"method={method!r} not in {PERTURB_METHODS}; "
+                             f"pass method= or build a perturbation spec")
+        merged = dict(perturb_lib.PERTURB_DEFAULTS[method])
+        if "n_samples" in merged:
+            n_samples = (n_samples if n_samples is not None
+                         else self.spec.n_samples)
+            if n_samples is not None:
+                merged["n_samples"] = int(n_samples)
+        merged.update({k: v for k, v in opts.items() if v is not None})
+        x, live = self._pad(x)
+        if key is not None:
+            key = jnp.asarray(key)
+            kb = perturb_lib.key_batch_size(key)
+            if kb is not None and kb < x.shape[0]:
+                # pad rows perturb under the first live key; sliced off below
+                pad = jnp.broadcast_to(key[:1],
+                                       (x.shape[0] - kb,) + key.shape[1:])
+                key = jnp.concatenate([key, pad])
+        target = self._pad_target(target, live)
+        n = perturb_lib.n_masks(method, tuple(x.shape[1:3]), **merged)
+        eng = self._engine_for_fold(n if batched else 1, x)
+        fn = getattr(perturb_lib, method)
+        fwd = eng._fold_forward() if batched else eng._model_fn
+        if method == "occlusion":
+            logits, heat = fn(fwd, x, target=target,
+                              batched=batched, **merged)
+        else:
+            if key is None:
+                raise ValueError(f"{method} is stochastic: pass a PRNG key")
+            logits, heat = fn(fwd, x, key, target=target,
+                              batched=batched, **merged)
+        return self._unpad(logits, live), self._unpad(heat, live)
 
     def input_x_gradient(self, x, *, target=None):
         """Gradient . input refinement."""
@@ -339,6 +404,32 @@ class Engine:
         return self._token_step(batch)
 
     # -- internals -----------------------------------------------------------
+
+    def _fold_forward(self):
+        """The forward a FOLDED perturbation launch runs.
+
+        Same rule-bound logits program as :attr:`model_fn`, compiled with
+        the fold batch tiles (``tiling.fold_batch_tile``) and mask-free
+        pointwise stages — bitwise-identical logits, bounded grid cells at
+        any ``[N*B, ...]`` fan-out.  Models without a fold-tiled program
+        (FnModel, lax-reference CNNs take the kwarg but ignore it) fall
+        back to :attr:`model_fn`; fxp16 keeps the int pair forward (its
+        integer kernels have no fold twin — correctness over speed there).
+        """
+        if self.spec.precision == "fxp16":
+            return self._model_fn
+        if self._fold_fn is None:
+            try:
+                f = self.spec.model.logits_fn(
+                    self.spec.fwd_rules(), self.spec.precision,
+                    plan=self._plan, fold=True)
+            except TypeError:       # logits_fn without a fold knob
+                self._fold_fn = self._model_fn
+            else:
+                if self._mesh is not None:
+                    f = self._shard_logits_fn(f)
+                self._fold_fn = jax.jit(f)
+        return self._fold_fn
 
     def _engine_for_fold(self, factor: int, x) -> "Engine":
         """The engine a composite's FOLDED launch must dispatch through.
@@ -392,6 +483,13 @@ class Engine:
         if self._token_step is not None:
             raise ValueError(f"{op}() is not available on LM token engines; "
                              f"use explain_tokens(batch)")
+
+    def _require_gradient_spec(self, op: str):
+        if self.spec.method in PERTURB_METHODS:
+            raise ValueError(
+                f"{op}() runs the gradient BP path; spec.method="
+                f"{self.spec.method!r} is forward-only — use "
+                f"Engine.perturb(x, key=...)")
 
     def _fanout(self, target, topk) -> Tuple[Any, Optional[int]]:
         """Apply ``spec.targets`` defaults to per-call overrides."""

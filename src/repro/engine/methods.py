@@ -254,16 +254,32 @@ def smoothgrad(f: Callable, x, key, *, n: int = 8, sigma: float = 0.1,
     ``batched`` (default) folds the ``n`` noise samples into the leading
     batch dimension (one FP+BP over ``[n*B, ...]``) instead of a sequential
     ``jax.lax.map``; the noise draw is identical either way.
+
+    ``key`` may be a BATCHED stack of per-example keys (``[B, ...]`` — the
+    serve layer's folded per-request keys): each example then draws its own
+    noise from its own key, so a request's result is independent of which
+    neighbours shared the batch.  For B == 1 the per-example draw is
+    bitwise identical to the single-key draw (one key, same stream).
     """
+    from repro.perturb.keys import key_batch_size, split_keys
     logits = _probe_logits(f, x, backward)
     if target is None:
         target = jnp.argmax(logits, axis=-1)
 
-    def noisy(k):
-        return jax.tree.map(
-            lambda v: v + sigma * jax.random.normal(k, v.shape, v.dtype), x)
+    key = jnp.asarray(key)
+    if key_batch_size(key) is None:
+        def noisy(k):
+            return jax.tree.map(
+                lambda v: v + sigma * jax.random.normal(k, v.shape, v.dtype),
+                x)
+    else:
+        def noisy(ks):          # ks: [B, ...] — one key per example
+            return jax.tree.map(
+                lambda v: v + sigma * jax.vmap(
+                    lambda k, vi: jax.random.normal(k, vi.shape, vi.dtype)
+                )(ks, v), x)
 
-    xs = jax.vmap(noisy)(jax.random.split(key, n))
+    xs = jax.vmap(noisy)(split_keys(key, n))
     grads = _stacked_gradients(f, xs, target, logits.shape[:-1], batched,
                                backward)
     return logits, jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)

@@ -29,6 +29,10 @@ from typing import Any, Callable, Optional, Tuple, Union
 PRECISIONS = ("f32", "bf16", "fxp16")
 BACKWARDS = ("auto", "vjp", "seed_batched")
 RULE_SETS = ("saliency", "deconvnet", "guided")
+#: Gradient-free perturbation methods (repro.perturb): forward-only specs —
+#: no BP rules; ``Engine.perturb`` folds the N-mask fan-out into the batch
+#: axis exactly like IG folds its steps (same plan re-audit).
+PERTURB_METHODS = ("occlusion", "lime", "rise")
 
 
 # ---------------------------------------------------------------------------
@@ -147,11 +151,16 @@ class CNNModel(_ParamsIdentity):
 
         return forward, backward
 
-    def logits_fn(self, method: str, precision: str, plan=None) -> Callable:
+    def logits_fn(self, method: str, precision: str, plan=None,
+                  fold: bool = False) -> Callable:
         """Rule-bound differentiable ``f`` for the vjp backend / registry
         explainers.  Float precisions only: under ``fxp16`` there is no
         integer ``jax.vjp`` — the Engine exposes the PAIR forward as its
         ``model_fn`` instead (one source of truth for that routing).
+
+        ``fold=True`` selects the forward-only folded-batch program (fold
+        batch tiles, mask-free pointwise stages — see ``cnn._apply_fold``)
+        that ``Engine.perturb`` runs its ``[N*B, ...]`` fan-out through.
         """
         from repro.models import cnn
         if precision == "fxp16":
@@ -163,7 +172,7 @@ class CNNModel(_ParamsIdentity):
         def f(v):
             return cnn.apply(params, v, cfg, method=method,
                              use_pallas=use_pallas, precision=precision,
-                             plan=plan)
+                             plan=plan, fold=fold)
 
         return f
 
@@ -238,7 +247,9 @@ class EngineSpec:
         :class:`FnModel`).
       * ``method`` — backward rule set: ``saliency | deconvnet | guided``
         (composite methods like IG ride any rule set via
-        ``Engine.ig/smoothgrad/...``).
+        ``Engine.ig/smoothgrad/...``), or a gradient-free perturbation
+        method ``occlusion | lime | rise`` (forward-only — served by
+        ``Engine.perturb``; the compiled forward is rule-independent).
       * ``precision`` — numeric path: ``f32 | bf16 | fxp16`` (paper §IV;
         ``fxp16`` = true int16 kernels, auto-routed to the manual backward).
       * ``backward`` — backend selection: ``auto`` resolves to the
@@ -267,6 +278,11 @@ class EngineSpec:
       * ``autotune`` — refine the analytic tile ranking by measured kernel
         timings at build time, through the persistent tuning cache (warm
         builds replan from the cache without re-measuring).
+      * ``n_samples`` — stochastic perturbation fan-out (``lime``/``rise``
+        specs only): the N masks ``Engine.perturb`` folds into the batch
+        axis.  ``None`` keeps the method default
+        (``repro.perturb.PERTURB_DEFAULTS``); occlusion's fan-out is
+        geometric (window/stride), not sampled, so it rejects the field.
     """
 
     model: Any
@@ -278,10 +294,25 @@ class EngineSpec:
     device: Optional[str] = None
     plan: Optional[Any] = None
     autotune: bool = False
+    n_samples: Optional[int] = None
 
     def __post_init__(self):
-        if self.method not in RULE_SETS:
-            raise ValueError(f"method={self.method!r} not in {RULE_SETS}")
+        if self.method not in RULE_SETS + PERTURB_METHODS:
+            raise ValueError(f"method={self.method!r} not in "
+                             f"{RULE_SETS + PERTURB_METHODS}")
+        if self.n_samples is not None:
+            if self.method not in ("lime", "rise"):
+                raise ValueError(
+                    f"n_samples applies to stochastic perturbation methods "
+                    f"('lime', 'rise'); method={self.method!r}")
+            if self.n_samples < 1:
+                raise ValueError(
+                    f"n_samples must be >= 1, got {self.n_samples}")
+        if self.method in PERTURB_METHODS and isinstance(self.targets, TopK):
+            raise ValueError(
+                "perturbation methods explain one target per example "
+                "(no seed-batched BP to ride a top-K panel); use "
+                "Argmax/Fixed targets")
         if self.precision not in PRECISIONS:
             raise ValueError(
                 f"precision={self.precision!r} not in {PRECISIONS}")
@@ -297,6 +328,16 @@ class EngineSpec:
         if self.device is not None:
             from repro.plan import get_profile
             get_profile(self.device)        # validate the name eagerly
+
+    def fwd_rules(self) -> str:
+        """The backward-rule set the model is built with.
+
+        Perturbation methods are forward-only — the rule choice never
+        executes — so their engines compile the (identical) forward under
+        saliency rules and share it with every other saliency consumer via
+        the build cache.
+        """
+        return self.method if self.method in RULE_SETS else "saliency"
 
     def resolve_backward(self) -> str:
         """The backend ``build`` will actually use (auto-selection rule)."""

@@ -37,7 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import interpret_mode, validate_bp_gates
-from repro.kernels.tiling import SUBLANE, align_up, cout_tiling
+from repro.kernels.tiling import (SUBLANE, align_up, batch_tiling,
+                                  cout_tiling)
 from repro.kernels.pool.pool import unpack_crumbs, unpool_scatter
 from repro.kernels.relu_mask.relu_mask import gate_gradient, unpack_bits
 from repro.obs import profile as obs_profile
@@ -64,12 +65,18 @@ def _conv_kernel(x_ref, w_ref, o_ref, *, K: int, H: int, W: int):
 @obs_profile.instrument("conv2d_fwd")
 def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, *,
                   co_tile: Optional[int] = None,
+                  bn: Optional[int] = None,
                   interpret: Optional[bool] = None) -> jnp.ndarray:
     """[N, H, W, Cin] x [K, K, Cin, Cout] -> [N, H, W, Cout], stride 1, SAME.
 
     ``co_tile=None`` resolves through
     :func:`repro.kernels.tiling.cout_tiling` (planner tiles override the
-    default policy).
+    default policy).  ``bn`` is the batch block — examples per grid cell
+    (default 1; folded forwards pass the
+    :func:`repro.kernels.tiling.fold_batch_tile` policy so the weight
+    stream and launch overhead amortize over the fan-out).  The kernel body
+    is block-size agnostic: the im2col patch matrix simply grows its
+    sublane dim to ``bn * H * W``.
     """
     if interpret is None:
         interpret = interpret_mode()
@@ -77,26 +84,28 @@ def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, *,
     k, _, _, cout = w.shape
     p = (k - 1) // 2
 
-    # Zero-pad: spatial halo (SAME), Cin to sublane multiple, Cout to tile.
+    # Zero-pad: batch to block multiple, spatial halo (SAME), Cin to
+    # sublane multiple, Cout to tile.
+    bn, n_p = batch_tiling(n, bn)
     cin_p = align_up(cin, SUBLANE)
     tco, cout_p = cout_tiling(cout, co_tile)
-    xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, cin_p - cin)))
+    xp = jnp.pad(x, ((0, n_p - n), (p, p), (p, p), (0, cin_p - cin)))
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, cin_p - cin), (0, cout_p - cout)))
 
-    grid = (n, cout_p // tco)
+    grid = (n_p // bn, cout_p // tco)
     out = pl.pallas_call(
         functools.partial(_conv_kernel, K=k, H=h, W=ww),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, h + 2 * p, ww + 2 * p, cin_p),
+            pl.BlockSpec((bn, h + 2 * p, ww + 2 * p, cin_p),
                          lambda b, c: (b, 0, 0, 0)),
             pl.BlockSpec((k, k, cin_p, tco), lambda b, c: (0, 0, 0, c)),
         ],
-        out_specs=pl.BlockSpec((1, h, ww, tco), lambda b, c: (b, 0, 0, c)),
-        out_shape=jax.ShapeDtypeStruct((n, h, ww, cout_p), x.dtype),
+        out_specs=pl.BlockSpec((bn, h, ww, tco), lambda b, c: (b, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((n_p, h, ww, cout_p), x.dtype),
         interpret=interpret,
     )(xp, wp)
-    return out[..., :cout]
+    return out[:n, ..., :cout]
 
 
 # ---------------------------------------------------------------------------

@@ -36,6 +36,13 @@ DEFAULT_TM = 128                # vmm M tile
 DEFAULT_TK = 512                # vmm K (contraction) tile
 DEFAULT_TN = 128                # vmm N tile
 DEFAULT_TR = 256                # relu/pointwise row tile
+DEFAULT_BN = 1                  # conv batch block (examples per grid cell)
+#: batch-axis grid cells a FOLDED forward launch may spend.  Perturbation
+#: explainers fold their N-mask fan-out into the batch dim ([N*B, ...]); at
+#: one example per grid cell that launch would pay N*B block loads of the
+#: same weights, so the fold policy grows the batch block with the fan-out
+#: and keeps the cell count bounded instead.
+FOLD_GRID_CELLS = 4
 
 
 def align_up(x: int, m: int) -> int:
@@ -92,6 +99,29 @@ def vmm_tiling(m: int, k: int, n: int,
     tn_ = min(align_up(tn, LANE), align_up(n, LANE))
     return (tm_, tk_, tn_,
             align_up(m, tm_), align_up(k, tk_), align_up(n, tn_))
+
+
+def batch_tiling(n: int, bn: Optional[int] = None) -> Tuple[int, int]:
+    """Batch-axis tiling for batch-gridded kernels: ``(bn_, np_)``.
+
+    ``bn=None`` selects :data:`DEFAULT_BN` (one example per grid cell — the
+    VMEM-frugal serving default); an explicit ``bn`` is clamped to the batch
+    and the batch is ceil-padded to a multiple of the block.
+    """
+    bn = DEFAULT_BN if bn is None else bn
+    bn_ = max(1, min(int(bn), n))
+    return bn_, align_up(n, bn_)
+
+
+def fold_batch_tile(n: int) -> int:
+    """Conv batch block for a FOLDED forward launch (``[N*B, ...]``).
+
+    Splits the folded batch over at most :data:`FOLD_GRID_CELLS` grid cells
+    (sublane-aligned), so the per-cell launch/copy overhead is amortized
+    over ``n / FOLD_GRID_CELLS`` examples instead of paid ``n`` times.
+    Small batches degenerate to the ordinary one-example block.
+    """
+    return align_up(-(-n // FOLD_GRID_CELLS), SUBLANE)
 
 
 def row_tiling(r: int, tr: Optional[int] = None) -> Tuple[int, int]:

@@ -112,9 +112,16 @@ def run_cnn(args) -> None:
             degrade=degrade)
     tracer = Tracer() if args.trace_out else None
     profiler = obs_profile.enable() if args.profile_kernels else None
+    # perturbation fan-out knob: lime/rise sample counts ride method_opts
+    # (occlusion's fan-out is geometric — window/stride opts instead)
+    method_opts = {}
+    if args.perturb_samples is not None:
+        method_opts = {m: {"n_samples": args.perturb_samples}
+                       for m in ("lime", "rise")}
     server = ExplanationServer(CNNAdapter.from_engine(eng),
                                max_batch=args.batch,
                                max_delay_s=args.max_delay_ms / 1e3,
+                               method_opts=method_opts,
                                admission=admission, tracer=tracer)
     n = args.requests
     xs = jax.random.normal(jax.random.PRNGKey(1), (n,) + cfg.in_hw
@@ -198,6 +205,10 @@ def main():
     # method lists derive from the registry: a newly registered explainer
     # is immediately servable without touching this file.
     ap.add_argument("--method", default="saliency", choices=registry.names())
+    ap.add_argument("--perturb-samples", type=int, default=None,
+                    help="cnn workload: mask fan-out N for the stochastic "
+                         "perturbation explainers (lime/rise) — folded "
+                         "into the batch axis as [N*B, ...] forwards")
     ap.add_argument("--precision", default="f32",
                     choices=["f32", "bf16", "fxp16"],
                     help="cnn workload numeric path; fxp16 = true int16 "

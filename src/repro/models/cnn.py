@@ -326,9 +326,48 @@ def _apply_fused(params, x, cfg: CNNConfig, method: str, plan=None):
     return x
 
 
+def _apply_fold(params, x, cfg: CNNConfig, plan=None):
+    """Forward-only logits at a FOLDED batch (perturbation fan-out).
+
+    The gradient-free perturbation explainers fold their N-mask fan-out
+    into the leading batch axis and need logits ONLY — no ReLU masks, no
+    pool indices, no vjp — so this program skips the residual-emitting
+    kernels: the rectifier and 2x2 pool run as plain XLA pointwise ops
+    (the same mask-free trick the fxp16 logits path plays with deconvnet
+    rules), while the conv/FC dots stay on the Pallas kernels with the
+    fold batch tile (``tiling.fold_batch_tile``) so grid cells stay
+    bounded as N*B grows instead of paying one weight-stream per folded
+    example.  Bitwise-identical logits to the fused forward: max and dot
+    are the same ops on the same operands, only the block partitioning
+    differs.
+    """
+    from repro.kernels.conv2d.conv2d import conv2d_pallas
+    from repro.kernels.tiling import fold_batch_tile
+    from repro.kernels.vmm.vmm import vmm_pallas
+    bn = fold_batch_tile(x.shape[0])
+    for i, p in enumerate(params["conv"]):
+        x = conv2d_pallas(x, p["w"], co_tile=_plan_tiles(plan, f"conv{i}.fwd"),
+                          bn=bn) + p["b"]
+        if cfg.conv_relu:
+            x = jnp.maximum(x, 0)
+        if (i + 1) % cfg.pool_every == 0:
+            x = jnp.max(jnp.stack([x[:, 0::2, 0::2], x[:, 0::2, 1::2],
+                                   x[:, 1::2, 0::2], x[:, 1::2, 1::2]]),
+                        axis=0)
+    x = x.reshape(x.shape[0], -1)
+    n_fc = len(params["fc"])
+    for i, p in enumerate(params["fc"]):
+        tile = _plan_tiles(plan, f"fc{i}.fwd")
+        tm, tk, tn = tile if tile is not None else (None, None, None)
+        x = vmm_pallas(x, p["w"], tm=tm, tk=tk, tn=tn) + p["b"]
+        if i < n_fc - 1:
+            x = jnp.maximum(x, 0)
+    return x
+
+
 def apply(params, x, cfg: CNNConfig, *, method: str = "autodiff",
           use_pallas: bool = False, fused: Optional[bool] = None,
-          precision: str = "f32", plan=None):
+          precision: str = "f32", plan=None, fold: bool = False):
     """Forward pass: [N, H, W, Cin] -> logits [N, num_classes].
 
     ``method`` selects the attribution backward rules (static, like the
@@ -348,6 +387,12 @@ def apply(params, x, cfg: CNNConfig, *, method: str = "autodiff",
     ``plan`` is an optional ``repro.plan.TilePlan``: the fused Pallas
     blocks run the planner's per-layer block shapes instead of the
     tiling-policy defaults (the paper's per-target resource fitting).
+
+    ``fold=True`` selects the forward-only FOLDED-batch program
+    (:func:`_apply_fold`): fold-tiled Pallas dots, mask-free XLA pointwise
+    stages — the program ``Engine.perturb`` runs its ``[N*B, ...]``
+    fan-out through.  Pallas float paths only (the lax reference forward
+    and the fxp16 pair forward have no per-example grids to amortize).
     """
     if precision not in PRECISIONS:
         raise ValueError(f"precision={precision!r} not in {PRECISIONS}")
@@ -362,6 +407,8 @@ def apply(params, x, cfg: CNNConfig, *, method: str = "autodiff",
     if precision == "bf16":
         params = jax.tree.map(lambda v: v.astype(jnp.bfloat16), params)
         x = x.astype(jnp.bfloat16)
+    if fold and use_pallas:
+        return _apply_fold(params, x, cfg, plan)
     if fused is None:
         fused = use_pallas and method != "autodiff"
     if fused:

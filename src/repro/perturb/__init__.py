@@ -1,0 +1,41 @@
+"""repro.perturb — gradient-free perturbation explainers as a batched
+serving workload.
+
+The gradient family (saliency/deconvnet/guided + IG/smoothgrad composites)
+needs a backward pass; this package opens the *model-agnostic* complement:
+mask the input N ways, run ONE batched forward over the ``[N*B, ...]`` fold
+(exactly how IG folds its steps axis), and aggregate the per-mask output
+scores back into a heatmap.  No ``jax.vjp`` anywhere — the whole pipeline
+runs on ``precision="fxp16"`` where integer kernels have no tangents, and
+on any black-box ``f(x) -> logits``.
+
+Three methods, all generated on-device from a PRNG key (pure ``jnp``):
+
+  * ``occlusion`` — deterministic sliding-window masks (Zeiler-Fergus):
+    importance = logit drop when the window is occluded.
+  * ``lime`` — LIME-style superpixel Bernoulli masks on a coarse cell grid,
+    aggregated by a ridge-regularized weighted linear fit per example.
+  * ``rise`` — RISE low-resolution Bernoulli grids, bilinearly upsampled
+    with a random sub-cell shift, aggregated by score-weighted averaging.
+
+Mask patterns are stored bit-packed (:class:`MaskSet` rides
+``repro.core.masks.pack_mask`` — 8 masks cells per byte, the paper's BRAM
+packing reused for the perturbation store) and densified on demand.
+
+Serving: the methods register as ``occlusion | lime | rise`` explainers in
+:mod:`repro.serve.registry` (forward-only: ``mask_reuse=False``, so the
+residual cache is never consulted), and ``EngineSpec(method="rise",
+n_samples=256)`` threads the N-mask fold through the tile-plan audit the
+same way IG/smoothgrad folds do.
+"""
+from repro.perturb.keys import key_batch_size, split_keys
+from repro.perturb.masks import (MaskSet, lime_masks, occlusion_masks,
+                                 occlusion_positions, rise_masks)
+from repro.perturb.scores import (PERTURB_DEFAULTS, lime, n_masks, occlusion,
+                                  perturb_scores, rise)
+
+__all__ = [
+    "MaskSet", "PERTURB_DEFAULTS", "key_batch_size", "lime", "lime_masks",
+    "n_masks", "occlusion", "occlusion_masks", "occlusion_positions",
+    "perturb_scores", "rise", "rise_masks", "split_keys",
+]

@@ -1,0 +1,59 @@
+"""PRNG-key batching helpers for key-folding explainers.
+
+The serve layer folds *per-request* PRNG keys along the batch axis so
+stochastic requests co-batch instead of taking the singleton-bucket path.
+A "batched key" here is a stack of raw uint32 key data with one leading
+axis: shape ``(B,) + key.shape`` — i.e. ``(B, 2)`` for the default
+threefry impl, or a typed key array with shape ``(B,)``.
+
+``key_batch_size`` distinguishes a single key from a batched stack so one
+code path serves both the legacy single-key call and the folded form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_typed_key(key: jnp.ndarray) -> bool:
+    return jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key)
+
+
+def key_batch_size(key: jnp.ndarray) -> int | None:
+    """Return B if ``key`` is a batched stack of B keys, else ``None``.
+
+    Raw keys: shape ``(2,)`` (or whatever the impl's key shape is) is a
+    single key; one extra leading axis means batched.  Typed key arrays:
+    shape ``()`` is single, ``(B,)`` is batched.
+    """
+    if _is_typed_key(key):
+        if key.ndim == 0:
+            return None
+        if key.ndim == 1:
+            return int(key.shape[0])
+        raise ValueError(f"typed key array must be rank<=1, got {key.shape}")
+    impl_rank = 1  # raw key data is rank 1 (e.g. (2,) for threefry)
+    if key.ndim == impl_rank:
+        return None
+    if key.ndim == impl_rank + 1:
+        return int(key.shape[0])
+    raise ValueError(f"raw key data must be rank 1 or 2, got {key.shape}")
+
+
+def fold_keys(keys) -> jnp.ndarray:
+    """Stack a sequence of per-request keys into one batched key array."""
+    return jnp.stack([jnp.asarray(k) for k in keys], axis=0)
+
+
+def split_keys(key: jnp.ndarray, n: int) -> jnp.ndarray:
+    """``jax.random.split`` that also accepts a batched key.
+
+    Single key  -> shape ``(n,) + key.shape``      (plain split)
+    Batched key -> shape ``(n, B) + key.shape[1:]`` (per-example split,
+    n-th subkey of every example grouped on the leading axis so a vmap
+    over axis 0 sees one subkey per example).
+    """
+    b = key_batch_size(key)
+    if b is None:
+        return jax.random.split(key, n)
+    return jax.vmap(lambda k: jax.random.split(k, n), out_axes=1)(key)

@@ -1,0 +1,160 @@
+"""On-device perturbation-mask generation, bit-packed like BRAM residuals.
+
+All three generators are pure ``jnp`` — masks are *computed on the
+accelerator* from a PRNG key (or deterministically, for occlusion), never
+shipped from the host.  The binary pattern behind every mask family lives
+bit-packed in a :class:`MaskSet` via :func:`repro.core.masks.pack_mask`
+(8 cells per byte, the paper's §III.D packing reused as the perturbation
+mask store: a 256-mask RISE set on a 7x7 grid is 1.75 KB instead of 50 KB
+of f32), and is densified to float ``[N, H, W]`` multipliers on demand.
+
+Generators accept either a single PRNG key or a *batched* key stack
+``(B, ...)`` (see :mod:`repro.perturb.keys`) — the batched form yields a
+MaskSet with a leading ``B`` axis, one independent mask set per example,
+which is how the serve layer folds per-request keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import pack_mask, unpack_mask
+from repro.perturb.keys import key_batch_size
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class MaskSet:
+    """N binary perturbation patterns, bit-packed on a coarse cell grid.
+
+    ``packed``: uint8 ``[..., N, ceil(n_cells/8)]`` — leading dims (if any)
+    are per-example batch axes.  ``grid`` is the coarse pattern shape
+    ``(gh, gw)`` with ``n_cells = gh * gw``; ``hw`` is the dense image
+    shape the masks densify to.  ``shifts`` (RISE only) holds the random
+    sub-cell crop offset per mask, ``[..., N, 2]`` int32.
+    """
+
+    kind: str
+    packed: jnp.ndarray
+    n_cells: int
+    grid: Tuple[int, int]
+    hw: Tuple[int, int]
+    shifts: Optional[jnp.ndarray] = None
+
+    def tree_flatten(self):
+        return (self.packed, self.shifts), (self.kind, self.n_cells, self.grid, self.hw)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, shifts = children
+        kind, n_cells, grid, hw = aux
+        return cls(kind=kind, packed=packed, n_cells=n_cells, grid=grid,
+                   hw=hw, shifts=shifts)
+
+    @property
+    def n_masks(self) -> int:
+        return int(self.packed.shape[-2])
+
+    @property
+    def nbytes(self) -> int:
+        total = self.packed.size
+        if self.shifts is not None:
+            total += self.shifts.size * self.shifts.dtype.itemsize
+        return int(total)
+
+    def cells(self) -> jnp.ndarray:
+        """Unpacked boolean cell grid, ``[..., N, gh, gw]``."""
+        bits = unpack_mask(self.packed, self.n_cells)
+        return bits.reshape(bits.shape[:-1] + self.grid)
+
+    def dense(self) -> jnp.ndarray:
+        """Dense float32 multipliers in [0, 1], ``[..., N, H, W]``.
+
+        1 = keep the pixel, 0 = fully perturbed (occluded / replaced by
+        the baseline).  RISE masks are fractional at cell boundaries.
+        """
+        gh, gw = self.grid
+        h, w = self.hw
+        c = self.cells().astype(jnp.float32)
+        if self.kind == "occlusion":
+            return c
+        if self.kind == "lime":
+            return jnp.repeat(jnp.repeat(c, h // gh, axis=-2), w // gw, axis=-1)
+        if self.kind == "rise":
+            ch, cw = -(-h // gh), -(-w // gw)  # ceil cell size
+            lead = c.shape[:-2]
+            flat = c.reshape((-1, gh, gw))
+            sh = self.shifts.reshape((-1, 2))
+
+            def one(cells2d, shift):
+                up = jax.image.resize(
+                    cells2d, ((gh + 1) * ch, (gw + 1) * cw), method="bilinear")
+                return jax.lax.dynamic_slice(up, (shift[0], shift[1]), (h, w))
+
+            out = jax.vmap(one)(flat, sh)
+            return out.reshape(lead + (h, w))
+        raise ValueError(f"unknown mask kind: {self.kind!r}")
+
+
+def occlusion_positions(hw, *, window: int, stride: int) -> Tuple[int, int]:
+    """Sliding-window grid shape ``(nh, nw)`` for occlusion over ``hw``."""
+    h, w = hw
+    if window > h or window > w:
+        raise ValueError(f"window {window} exceeds input {hw}")
+    return ((h - window) // stride + 1, (w - window) // stride + 1)
+
+
+def occlusion_masks(hw, *, window: int = 4, stride: Optional[int] = None) -> MaskSet:
+    """Deterministic sliding-window masks: mask i zeroes one window."""
+    stride = window if stride is None else stride
+    h, w = hw
+    nh, nw = occlusion_positions(hw, window=window, stride=stride)
+    ys = jnp.arange(nh) * stride
+    xs = jnp.arange(nw) * stride
+    rows = jnp.arange(h)
+    cols = jnp.arange(w)
+    in_y = (rows[None, :] >= ys[:, None]) & (rows[None, :] < ys[:, None] + window)
+    in_x = (cols[None, :] >= xs[:, None]) & (cols[None, :] < xs[:, None] + window)
+    occluded = in_y[:, None, :, None] & in_x[None, :, None, :]  # [nh, nw, H, W]
+    keep = ~occluded.reshape(nh * nw, h * w)
+    return MaskSet(kind="occlusion", packed=pack_mask(keep),
+                   n_cells=h * w, grid=(h, w), hw=(h, w))
+
+
+def lime_masks(key: jnp.ndarray, n_samples: int, hw, *, cells: int = 8) -> MaskSet:
+    """LIME-style superpixel masks: Bernoulli(1/2) on a ``cells x cells`` grid.
+
+    The "superpixels" are a regular grid (the on-device analogue of a
+    segmentation); each mask keeps or drops whole cells.  ``hw`` must be
+    divisible by ``cells``.  A batched key yields per-example mask sets.
+    """
+    h, w = hw
+    if h % cells or w % cells:
+        raise ValueError(f"hw {hw} not divisible by cells={cells}")
+    if key_batch_size(key) is not None:
+        return jax.vmap(lambda k: lime_masks(k, n_samples, hw, cells=cells))(key)
+    bits = jax.random.bernoulli(key, 0.5, (n_samples, cells * cells))
+    return MaskSet(kind="lime", packed=pack_mask(bits),
+                   n_cells=cells * cells, grid=(cells, cells), hw=(h, w))
+
+
+def rise_masks(key: jnp.ndarray, n_samples: int, hw, *, grid: int = 7,
+               p: float = 0.5) -> MaskSet:
+    """RISE masks: Bernoulli(p) on a ``grid x grid`` lattice, bilinearly
+    upsampled past the image size and cropped at a random sub-cell shift
+    (Petsiuk et al. 2018).  A batched key yields per-example mask sets.
+    """
+    h, w = hw
+    if key_batch_size(key) is not None:
+        return jax.vmap(lambda k: rise_masks(k, n_samples, hw, grid=grid, p=p))(key)
+    kb, ks = jax.random.split(jnp.asarray(key))
+    bits = jax.random.bernoulli(kb, p, (n_samples, grid * grid))
+    ch, cw = -(-h // grid), -(-w // grid)
+    sy = jax.random.randint(jax.random.fold_in(ks, 0), (n_samples, 1), 0, ch)
+    sx = jax.random.randint(jax.random.fold_in(ks, 1), (n_samples, 1), 0, cw)
+    shifts = jnp.concatenate([sy, sx], axis=-1).astype(jnp.int32)
+    return MaskSet(kind="rise", packed=pack_mask(bits), n_cells=grid * grid,
+                   grid=(grid, grid), hw=(h, w), shifts=shifts)

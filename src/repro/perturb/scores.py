@@ -1,0 +1,181 @@
+"""Fold-and-score driver + heatmap aggregation for perturbation explainers.
+
+``perturb_scores`` is the whole trick: build the N masked variants of each
+input, fold them into the *leading batch axis* (``[N*B, ...]`` — exactly
+how IG folds its steps axis) and run ONE forward pass.  No backward, no
+``jax.vjp`` — so this works on the fxp16 integer kernels (where tangents
+don't exist) and on any black-box ``f``.  ``batched=False`` keeps a
+sequential ``lax.map`` path (one B-sized forward per mask) as the
+reference / memory-constrained fallback; both paths score the *same*
+masked tensor, so their heatmaps agree.
+
+Aggregators turn per-mask target scores back into input heatmaps:
+
+  * ``occlusion``: coverage-normalized score *drop* per occluded window.
+  * ``lime``: ridge-regularized weighted least squares on the cell bits —
+    the fitted coefficients are the cell importances.
+  * ``rise``: probability-weighted mask average, normalized by per-pixel
+    mask mass.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.perturb.masks import (MaskSet, lime_masks, occlusion_masks,
+                                 occlusion_positions, rise_masks)
+
+PERTURB_DEFAULTS = {
+    "occlusion": dict(window=4, stride=2),
+    "lime": dict(n_samples=256, cells=8, sigma=0.25, ridge=1e-3),
+    "rise": dict(n_samples=256, grid=7, p=0.5),
+}
+
+
+def n_masks(method: str, hw, **opts) -> int:
+    """Fan-out N for a method — the factor the plan fold audit must see."""
+    merged = {**PERTURB_DEFAULTS[method], **{k: v for k, v in opts.items()
+                                             if v is not None}}
+    if method == "occlusion":
+        nh, nw = occlusion_positions(
+            hw, window=merged["window"],
+            stride=merged["stride"] or merged["window"])
+        return nh * nw
+    return int(merged["n_samples"])
+
+
+def _logits_of(f, xb):
+    out = f(xb)
+    if isinstance(out, (tuple, list)):
+        out = out[0]  # fxp16 pair forward returns (logits, residuals)
+    return out
+
+
+def _masked_fold(x, dense, baseline):
+    """Blend x against the baseline under each mask; returns [N, B, ...]."""
+    b = x.shape[0]
+    if dense.ndim == 3:  # shared masks [N, H, W] -> per-example
+        dense = jnp.broadcast_to(dense[None], (b,) + dense.shape)
+    m = jnp.swapaxes(dense, 0, 1)  # [N, B, H, W]
+    if x.ndim == 4:
+        m = m[..., None]  # broadcast over channels
+    xf = x.astype(jnp.float32)
+    bf = (jnp.zeros_like(xf) if baseline is None
+          else jnp.broadcast_to(baseline, x.shape).astype(jnp.float32))
+    mixed = xf[None] * m + bf[None] * (1.0 - m)
+    if jnp.issubdtype(x.dtype, jnp.integer):  # fxp Q-format inputs
+        mixed = jnp.round(mixed)
+    return mixed.astype(x.dtype)
+
+
+def perturb_scores(f, x, masks, *, baseline=None, target=None,
+                   select: str = "logit", batched: bool = True):
+    """Score N masked variants of each example in one folded forward.
+
+    ``masks`` is a :class:`MaskSet` or a dense ``[N, H, W]`` /
+    ``[B, N, H, W]`` float array.  Returns ``(logits [B, C], target [B],
+    scores [N, B] float32)`` where ``scores`` is the target logit
+    (``select="logit"``) or softmax probability (``select="prob"``) of
+    each masked variant.
+    """
+    dense = masks.dense() if isinstance(masks, MaskSet) else jnp.asarray(masks)
+    b = x.shape[0]
+    logits = _logits_of(f, x)
+    if target is None:
+        tgt = jnp.argmax(logits, axis=-1)
+    else:
+        tgt = jnp.broadcast_to(jnp.asarray(target, jnp.int32), (b,))
+    masked = _masked_fold(x, dense, baseline)  # [N, B, ...]
+    n = masked.shape[0]
+    if batched:
+        out = _logits_of(f, masked.reshape((n * b,) + x.shape[1:]))
+        out = out.reshape((n, b) + out.shape[1:])
+    else:
+        out = jax.lax.map(lambda xb: _logits_of(f, xb), masked)
+    out = out.astype(jnp.float32)
+    if select == "prob":
+        out = jax.nn.softmax(out, axis=-1)
+    elif select != "logit":
+        raise ValueError(f"select must be 'logit' or 'prob', got {select!r}")
+    scores = jnp.take_along_axis(
+        out, jnp.broadcast_to(tgt[None, :, None], (n, b, 1)), axis=-1)[..., 0]
+    return logits, tgt, scores
+
+
+def _upsample_cells(c, hw):
+    gh, gw = c.shape[-2:]
+    h, w = hw
+    return jnp.repeat(jnp.repeat(c, h // gh, axis=-2), w // gw, axis=-1)
+
+
+def occlusion(f, x, *, window: int = 4, stride: Optional[int] = 2,
+              baseline=None, target=None, batched: bool = True,
+              masks: Optional[MaskSet] = None):
+    """Sliding-window occlusion: heat = coverage-normalized logit drop."""
+    hw = x.shape[1:3]
+    ms = masks if masks is not None else occlusion_masks(
+        hw, window=window, stride=stride or window)
+    logits, tgt, scores = perturb_scores(
+        f, x, ms, baseline=baseline, target=target, batched=batched)
+    base = jnp.take_along_axis(
+        logits.astype(jnp.float32), tgt[:, None], axis=-1)[:, 0]  # [B]
+    drop = base[None, :] - scores  # [N, B]
+    region = 1.0 - ms.dense()  # [N, H, W] occluded window indicator
+    heat = jnp.einsum("nb,nhw->bhw", drop, region)
+    coverage = jnp.sum(region, axis=0)  # windows covering each pixel
+    return logits, heat / jnp.maximum(coverage, 1.0)[None]
+
+
+def lime(f, x, key, *, n_samples: int = 256, cells: int = 8,
+         sigma: float = 0.25, ridge: float = 1e-3, baseline=None,
+         target=None, batched: bool = True, masks: Optional[MaskSet] = None):
+    """LIME-style fit: weighted ridge regression of target scores on the
+    cell bits; the fitted coefficient of each cell is its importance.
+    """
+    hw = x.shape[1:3]
+    b = x.shape[0]
+    ms = masks if masks is not None else lime_masks(
+        key, n_samples, hw, cells=cells)
+    logits, tgt, scores = perturb_scores(
+        f, x, ms, baseline=baseline, target=target, batched=batched)
+    z = ms.cells().astype(jnp.float32)
+    n, feat = z.shape[-3], z.shape[-2] * z.shape[-1]
+    z = z.reshape(z.shape[:-2] + (feat,))
+    zb = jnp.broadcast_to(z[None], (b, n, feat)) if z.ndim == 2 else z
+    y = scores.T  # [B, N]
+
+    def fit(zi, yi):
+        # Proximity kernel: masks keeping more cells are closer to x.
+        wi = jnp.exp(-((1.0 - jnp.mean(zi, axis=-1)) ** 2) / (sigma ** 2))
+        zw = zi * wi[:, None]
+        gram = zw.T @ zi + ridge * n * jnp.eye(feat, dtype=jnp.float32)
+        return jnp.linalg.solve(gram, zw.T @ yi)
+
+    beta = jax.vmap(fit)(zb, y)  # [B, feat]
+    gh = gw = int(round(feat ** 0.5))
+    heat = _upsample_cells(beta.reshape(b, gh, gw), hw)
+    return logits, heat
+
+
+def rise(f, x, key, *, n_samples: int = 256, grid: int = 7, p: float = 0.5,
+         baseline=None, target=None, batched: bool = True,
+         masks: Optional[MaskSet] = None):
+    """RISE: average of masks weighted by the target class probability of
+    each masked variant, normalized by per-pixel mask mass.
+    """
+    hw = x.shape[1:3]
+    ms = masks if masks is not None else rise_masks(
+        key, n_samples, hw, grid=grid, p=p)
+    logits, tgt, scores = perturb_scores(
+        f, x, ms, baseline=baseline, target=target, select="prob",
+        batched=batched)
+    dense = ms.dense()
+    if dense.ndim == 3:
+        heat = jnp.einsum("nb,nhw->bhw", scores, dense)
+        mass = jnp.sum(dense, axis=0)[None]
+    else:
+        heat = jnp.einsum("nb,bnhw->bhw", scores, dense)
+        mass = jnp.sum(dense, axis=1)
+    return logits, heat / jnp.maximum(mass, 1e-6)

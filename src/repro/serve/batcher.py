@@ -35,9 +35,12 @@ delay cap:
     occupies a seat in a padded launch (the server turns the sweepings into
     structured shed responses).
 
-Stochastic methods (per-request PRNG keys, e.g. smoothgrad) get singleton
-buckets: their noise draw is request-deterministic and must not depend on
-which neighbours happened to share the batch.
+Stochastic methods (per-request PRNG keys) co-batch when the explainer can
+FOLD per-example keys along the batch axis (``fold_keys`` — smoothgrad and
+the perturbation family): the server stacks each request's own key, so the
+draw is request-deterministic no matter which neighbours shared the batch.
+Only stochastic methods *without* key folding fall back to singleton
+buckets (a per-request ``batch_token`` in the bucket key).
 
 The clock is injectable so tests and simulations drive deadlines
 deterministically.
@@ -88,12 +91,15 @@ def bucket_key(req: Request) -> BucketKey:
     # argmax targets inside the engine, an all-explicit one passes them in.
     # Degraded (rerouted-precision) requests run different compiled programs
     # and must not coalesce with primary traffic.
-    # Stochastic methods get a per-REQUEST token (not uid: two in-flight
-    # requests for one uid carry distinct PRNG keys and must not coalesce).
-    needs_key = registry.get(req.method).needs_key
+    # Stochastic methods whose explainer folds per-example keys co-batch
+    # freely (each request rides its own key); only non-foldable ones get a
+    # per-REQUEST token (not uid: two in-flight requests for one uid carry
+    # distinct PRNG keys and must not coalesce).
+    cls = registry.get(req.method)
+    singleton = cls.needs_key and not cls.fold_keys
     return (req.kind, req.method, shape, dtype, req.topk,
             req.target is None, req.degraded,
-            _singleton_token(req) if needs_key else None)
+            _singleton_token(req) if singleton else None)
 
 
 def pad_size(n: int, max_batch: int) -> int:

@@ -21,6 +21,10 @@ Class attributes drive server capabilities:
   * ``token_capable`` — meaningful under the LM token-attribution seeding
     (``attribute_tokens`` / ``make_attribute_step``).
   * ``needs_key`` — stochastic; ``attribute`` requires a PRNG key.
+  * ``fold_keys`` — the method accepts a BATCHED stack of per-example PRNG
+    keys, so stochastic requests CO-BATCH (per-request keys folded along
+    the batch axis) instead of taking the singleton-bucket path; each
+    request's draw depends only on its own key, never on its neighbours.
 """
 from __future__ import annotations
 
@@ -74,6 +78,7 @@ class Explainer:
     mask_reuse: bool = False
     token_capable: bool = False
     needs_key: bool = False
+    fold_keys: bool = False
 
     def __init__(self, f: Callable, backward: Optional[Callable] = None,
                  *, engine=None, **opts):
@@ -163,6 +168,7 @@ class SmoothGrad(Explainer):
 
     rules = "saliency"
     needs_key = True
+    fold_keys = True            # per-example noise from a [B, ...] key stack
 
     def attribute(self, x, *, target=None, key=None):
         if key is None:
@@ -173,3 +179,52 @@ class SmoothGrad(Explainer):
             sigma=self.opts.get("sigma", 0.1),
             batched=self.opts.get("batched", True),
             backward=self.backward)
+
+
+class _Perturb(Explainer):
+    """Gradient-free perturbation methods (:mod:`repro.perturb`).
+
+    Forward-only: ``mask_reuse = False`` by construction — there is no BP
+    phase, so a gradient-replay cache hit must never serve these (the
+    server's hit path is gated on ``mask_reuse`` and is bypassed entirely).
+    Engine-bound explainers dispatch through ``Engine.perturb`` so the
+    N-mask batch fold is re-audited against the tile plan like IG folds;
+    raw-callable explainers run the free functions directly.
+    """
+
+    mask_reuse = False
+
+    def attribute(self, x, *, target=None, key=None):
+        from repro import perturb
+        if self.needs_key and key is None:
+            raise ValueError(f"{self.name} is stochastic: pass a PRNG key")
+        if self.engine is not None:
+            return self.engine.perturb(x, key, method=self.name,
+                                       target=target, **self.opts)
+        fn = getattr(perturb, self.name)
+        if self.needs_key:
+            return fn(self.f, x, key, target=target, **self.opts)
+        return fn(self.f, x, target=target, **self.opts)
+
+
+@register("occlusion")
+class Occlusion(_Perturb):
+    """opts: ``window`` (default 4), ``stride``, ``baseline``, ``batched``."""
+
+
+@register("lime")
+class Lime(_Perturb):
+    """opts: ``n_samples`` (default 256), ``cells``, ``sigma``, ``ridge``,
+    ``baseline``, ``batched``."""
+
+    needs_key = True
+    fold_keys = True            # per-example Bernoulli masks from a key stack
+
+
+@register("rise")
+class Rise(_Perturb):
+    """opts: ``n_samples`` (default 256), ``grid``, ``p``, ``baseline``,
+    ``batched``."""
+
+    needs_key = True
+    fold_keys = True            # per-example mask lattices from a key stack

@@ -33,6 +33,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.obs.clock import VirtualClock, perf as perf_counter
+from repro.serve import registry
 from repro.serve.api import EXPLAIN, PREDICT, Request, ShedError
 from repro.serve.stats import percentile
 
@@ -123,7 +124,8 @@ def synthesize(n: int, *, rate: float = 2000.0, arrivals: str = "poisson",
         events.append(TraceEvent(
             t=t, uid=uid, kind=kind, method=method, topk=topk,
             x_id=rng.randint(x_pool), deadline_s=deadline_s.get(kind),
-            key_seed=i if method == "smoothgrad" else None))
+            key_seed=(i if kind == EXPLAIN
+                      and registry.get(method).needs_key else None)))
     return events
 
 

@@ -209,7 +209,11 @@ class ExplanationServer:
 
     def _validate(self, req: Request) -> None:
         if req.kind == EXPLAIN:
-            registry.get(req.method)          # fail fast on unknown methods
+            cls = registry.get(req.method)    # fail fast on unknown methods
+            if cls.needs_key and req.key is None:
+                raise InvalidRequestError(
+                    f"request {req.uid!r}: method {req.method!r} is "
+                    f"stochastic and needs a per-request PRNG key")
         expected = getattr(self.adapter, "example_shape", None)
         if expected is not None and tuple(np.shape(req.x)) != tuple(expected):
             raise InvalidRequestError(
@@ -473,7 +477,20 @@ class ExplanationServer:
             # padding rows explain class 0 and are sliced off below
             target = jnp.asarray([r.target for r in reqs]
                                  + [0] * (xb.shape[0] - live))
-        key = reqs[0].key if explainer.needs_key else None
+        key = None
+        if explainer.needs_key:
+            if registry.get(method).fold_keys:
+                # Fold PER-REQUEST keys along the batch axis: every request
+                # draws from its own key, so co-batched stochastic results
+                # are identical to singleton serving.  Padding rows redraw
+                # under the first key and are sliced off with the batch.
+                key = jnp.stack(
+                    [jnp.asarray(r.key) for r in reqs]
+                    + [jnp.asarray(reqs[0].key)] * (xb.shape[0] - live))
+            else:
+                # non-foldable stochastic methods ride singleton buckets
+                # (batcher token), so reqs is exactly one request here
+                key = reqs[0].key
         logits, rel = explainer.attribute(xb, target=target, key=key)
         jax.block_until_ready(rel)
         self.stats.record_batch(live, xb.shape[0])

@@ -496,22 +496,33 @@ def test_slack_zero_boundary_dispatches_never_expires():
 
 def test_stochastic_tokens_survive_gc_never_collide():
     """Regression: singleton-bucket tokens were id(req) — CPython reuses
-    addresses after GC, so two DISTINCT in-flight smoothgrad requests
+    addresses after GC, so two DISTINCT in-flight stochastic requests
     could land in one bucket and share a noise draw.  Tokens are now
-    minted monotonic and stick to the request."""
+    minted monotonic and stick to the request.  (Key-folding methods like
+    smoothgrad co-batch and never mint tokens, so this exercises a
+    stochastic explainer WITHOUT key folding.)"""
     import gc
 
-    from repro.serve import bucket_key
-    keys = set()
-    for i in range(50):
-        r = req(f"s{i}", kind=EXPLAIN, method="smoothgrad")
-        k = bucket_key(r)
-        assert bucket_key(r) == k                # stable once minted
-        assert isinstance(r.batch_token, int)
-        assert k not in keys                     # unique across GC churn
-        keys.add(k)
-        del r
-        gc.collect()                             # invite id() reuse
+    from repro.serve import bucket_key, registry
+
+    @registry.register("_test_nofold_gc")
+    class NoFold(registry.Explainer):
+        needs_key = True
+        fold_keys = False
+
+    try:
+        keys = set()
+        for i in range(50):
+            r = req(f"s{i}", kind=EXPLAIN, method="_test_nofold_gc")
+            k = bucket_key(r)
+            assert bucket_key(r) == k            # stable once minted
+            assert isinstance(r.batch_token, int)
+            assert k not in keys                 # unique across GC churn
+            keys.add(k)
+            del r
+            gc.collect()                         # invite id() reuse
+    finally:
+        registry._REGISTRY.pop("_test_nofold_gc")
 
 
 def test_fill_target_scales_batches_to_the_mesh():

@@ -1,4 +1,5 @@
 """1-bit / 2-bit packing — the paper's BRAM mask store (unit + property)."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -43,3 +44,52 @@ def test_nbytes_accounting():
     # 16x smaller than bf16, 32x smaller than f32 (modulo byte rounding)
     assert masks.mask_nbytes((128,)) == 16
     assert masks.crumb_nbytes((64, 8, 8)) == 64 * 8 * 8 // 4
+
+
+# ---------------------------------------------------------------------------
+# jit-vs-eager parity: the perturbation mask store packs under jit (inside
+# MaskSet construction) — the traced program must produce the same bytes as
+# the eager one, including ragged (non-multiple-of-8 / -4) last axes where
+# the tail byte is partially filled.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 7, 8, 13, 24])
+def test_pack_mask_jit_matches_eager(n):
+    rng = np.random.default_rng(n)
+    bits = jnp.asarray(rng.random((3, n)) > 0.5)
+    eager_p = masks.pack_mask(bits)
+    jit_p = jax.jit(masks.pack_mask)(bits)
+    np.testing.assert_array_equal(np.asarray(jit_p), np.asarray(eager_p))
+    eager_u = masks.unpack_mask(eager_p, n)
+    jit_u = jax.jit(masks.unpack_mask, static_argnums=1)(jit_p, n)
+    np.testing.assert_array_equal(np.asarray(jit_u), np.asarray(eager_u))
+    np.testing.assert_array_equal(np.asarray(jit_u), np.asarray(bits))
+
+
+@pytest.mark.parametrize("n", [1, 3, 4, 9, 18])
+def test_pack_crumbs_jit_matches_eager(n):
+    rng = np.random.default_rng(n)
+    idx = jnp.asarray(rng.integers(0, 4, size=(2, n)))
+    eager_p = masks.pack_crumbs(idx)
+    jit_p = jax.jit(masks.pack_crumbs)(idx)
+    np.testing.assert_array_equal(np.asarray(jit_p), np.asarray(eager_p))
+    jit_u = jax.jit(masks.unpack_crumbs, static_argnums=1)(jit_p, n)
+    np.testing.assert_array_equal(np.asarray(jit_u), np.asarray(idx))
+
+
+@pytest.mark.slow
+@given(st.integers(0, 7), st.integers(1, 7), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_pack_mask_ragged_roundtrip_under_jit(q, r, seed):
+    """Property: ragged tails survive a jitted pack -> unpack round-trip."""
+    n = 8 * q + r                    # never a multiple of 8: tail byte ragged
+    rng = np.random.default_rng(seed)
+    bits = rng.random(n) > 0.5
+
+    @jax.jit
+    def roundtrip(b):
+        return masks.unpack_mask(masks.pack_mask(b), n)
+
+    np.testing.assert_array_equal(np.asarray(roundtrip(jnp.asarray(bits))),
+                                  bits)

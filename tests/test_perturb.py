@@ -1,0 +1,282 @@
+"""repro.perturb: on-device mask generation, the batched fold vs the
+sequential ``lax.map`` reference (bitwise), fxp16 end-to-end, spec
+validation, and the serve-layer guarantees (cache bypass, per-request
+key folding)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as engine_lib
+from repro import perturb
+from repro.models import cnn
+from repro.serve import CNNAdapter, ExplanationServer, Request
+from repro.serve.api import EXPLAIN, PREDICT
+
+CFG = cnn.CNNConfig(in_hw=(8, 8), channels=(4, 4), fc=(16,))
+HW = (8, 8)
+N = 8                               # stochastic fan-out kept small for CI
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = cnn.init(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    return params, x
+
+
+@pytest.fixture(scope="module")
+def eng(setup):
+    params, _ = setup
+    return engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.CNNModel(params, CFG), method="occlusion"))
+
+
+def make_server(adapter, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_delay_s", 0.0)
+    kw.setdefault("method_opts", {
+        "occlusion": {"window": 2, "stride": 2},
+        "lime": {"n_samples": N, "cells": 4},
+        "rise": {"n_samples": N, "grid": 3},
+    })
+    return ExplanationServer(adapter, **kw)
+
+
+# ---------------------------------------------------------------------------
+# mask generation
+# ---------------------------------------------------------------------------
+
+
+def test_occlusion_masks_geometry():
+    ms = perturb.occlusion_masks(HW, window=2, stride=2)
+    assert perturb.occlusion_positions(HW, window=2, stride=2) == (4, 4)
+    assert ms.n_masks == 16
+    dense = np.asarray(ms.dense())
+    assert dense.shape == (16, 8, 8)
+    assert set(np.unique(dense)) <= {0.0, 1.0}
+    # each mask zeroes exactly one window; stride == window tiles the image
+    assert (dense == 0).sum(axis=(1, 2)).tolist() == [4] * 16
+    assert np.array_equal(dense.min(axis=0), np.zeros(HW))
+
+
+def test_occlusion_window_larger_than_input_raises():
+    with pytest.raises(ValueError):
+        perturb.occlusion_masks(HW, window=9)
+
+
+def test_lime_masks_deterministic_and_packed():
+    key = jax.random.PRNGKey(3)
+    a = perturb.lime_masks(key, N, HW, cells=4)
+    b = perturb.lime_masks(key, N, HW, cells=4)
+    assert a.packed.dtype == jnp.uint8
+    # 16 cells bit-packed: 2 bytes per mask, not 16 floats
+    assert a.packed.shape == (N, 2)
+    np.testing.assert_array_equal(np.asarray(a.packed), np.asarray(b.packed))
+    np.testing.assert_array_equal(np.asarray(a.dense()), np.asarray(b.dense()))
+
+
+def test_lime_masks_batched_key_gives_per_example_sets():
+    keys = jax.random.split(jax.random.PRNGKey(4), 3)
+    ms = perturb.lime_masks(keys, N, HW, cells=4)
+    dense = np.asarray(ms.dense())
+    assert dense.shape == (3, N, 8, 8)
+    assert not np.array_equal(dense[0], dense[1])
+
+
+def test_lime_masks_indivisible_grid_raises():
+    with pytest.raises(ValueError):
+        perturb.lime_masks(jax.random.PRNGKey(0), N, HW, cells=3)
+
+
+def test_rise_masks_dense_range_and_determinism():
+    key = jax.random.PRNGKey(5)
+    a = perturb.rise_masks(key, N, HW, grid=3)
+    b = perturb.rise_masks(key, N, HW, grid=3)
+    c = perturb.rise_masks(jax.random.PRNGKey(6), N, HW, grid=3)
+    da = np.asarray(a.dense())
+    assert da.shape == (N, 8, 8)
+    assert da.min() >= 0.0 and da.max() <= 1.0
+    # bilinear upsampling: interior values, not a binary lattice
+    assert np.any((da > 0.0) & (da < 1.0))
+    np.testing.assert_array_equal(da, np.asarray(b.dense()))
+    assert not np.array_equal(da, np.asarray(c.dense()))
+
+
+def test_n_masks_matches_generated_sets():
+    assert perturb.n_masks("occlusion", HW, window=2, stride=2) == 16
+    assert perturb.n_masks("lime", HW, n_samples=N) == N
+    assert perturb.n_masks("rise", HW, n_samples=N) == N
+
+
+# ---------------------------------------------------------------------------
+# perturb_scores: the fold vs the sequential reference
+# ---------------------------------------------------------------------------
+
+
+def test_perturb_scores_batched_equals_sequential():
+    w = jax.random.normal(jax.random.PRNGKey(7), (8 * 8, 5))
+
+    def f(v):
+        return v.sum(-1).reshape(v.shape[0], -1) @ w
+
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 8, 8, 3))
+    ms = perturb.occlusion_masks(HW, window=2, stride=2)
+    lb, tb, sb = perturb.perturb_scores(f, x, ms, batched=True)
+    ls, ts, ss = perturb.perturb_scores(f, x, ms, batched=False)
+    assert sb.shape == (16, 2)
+    np.testing.assert_array_equal(np.asarray(sb), np.asarray(ss))
+    np.testing.assert_array_equal(np.asarray(lb), np.asarray(ls))
+    np.testing.assert_array_equal(np.asarray(tb), np.asarray(ts))
+
+
+# ---------------------------------------------------------------------------
+# Engine.perturb: bitwise fold, determinism, fxp16, fallbacks
+# ---------------------------------------------------------------------------
+
+
+def test_engine_occlusion_batched_equals_sequential(setup, eng):
+    _, x = setup
+    lb, hb = eng.perturb(x, window=2, stride=2, batched=True)
+    ls, hs = eng.perturb(x, window=2, stride=2, batched=False)
+    np.testing.assert_array_equal(np.asarray(hb), np.asarray(hs))
+    np.testing.assert_array_equal(np.asarray(lb), np.asarray(ls))
+    assert hb.shape == (2, 8, 8)
+
+
+@pytest.mark.parametrize("method", ["lime", "rise"])
+def test_engine_stochastic_batched_equals_sequential(setup, eng, method):
+    _, x = setup
+    key = jax.random.PRNGKey(11)
+    _, hb = eng.perturb(x, key, method=method, n_samples=N, batched=True)
+    _, hs = eng.perturb(x, key, method=method, n_samples=N, batched=False)
+    np.testing.assert_array_equal(np.asarray(hb), np.asarray(hs))
+
+
+def test_engine_rise_fixed_key_deterministic(setup, eng):
+    _, x = setup
+    key = jax.random.PRNGKey(12)
+    _, a = eng.perturb(x, key, method="rise", n_samples=N)
+    _, b = eng.perturb(x, key, method="rise", n_samples=N)
+    _, c = eng.perturb(x, jax.random.PRNGKey(13), method="rise", n_samples=N)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_engine_stochastic_without_key_raises(setup, eng):
+    _, x = setup
+    with pytest.raises(ValueError, match="stochastic"):
+        eng.perturb(x, method="rise", n_samples=N)
+
+
+def test_engine_fxp16_perturb_end_to_end(setup):
+    """The forward-only pipeline runs where gradients don't exist."""
+    params, x = setup
+    e16 = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.CNNModel(params, CFG), method="rise",
+        precision="fxp16", n_samples=N))
+    key = jax.random.PRNGKey(14)
+    lb, hb = e16.perturb(x, key, batched=True)
+    ls, hs = e16.perturb(x, key, batched=False)
+    np.testing.assert_array_equal(np.asarray(hb), np.asarray(hs))
+    np.testing.assert_array_equal(np.asarray(lb), np.asarray(ls))
+    assert np.all(np.isfinite(np.asarray(hb)))
+
+
+def test_engine_fnmodel_falls_back_without_fold_program(setup):
+    """FnModel.logits_fn has no fold knob — perturb still works batched."""
+    params, x = setup
+    fn = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.FnModel(
+            lambda method: lambda v: cnn.apply(params, v, CFG,
+                                               method=method)),
+        method="occlusion"))
+    _, hb = fn.perturb(x, window=2, stride=2, batched=True)
+    _, hs = fn.perturb(x, window=2, stride=2, batched=False)
+    np.testing.assert_array_equal(np.asarray(hb), np.asarray(hs))
+
+
+def test_engine_explain_rejects_perturb_spec(setup, eng):
+    _, x = setup
+    with pytest.raises(ValueError, match="forward-only"):
+        eng.explain(x)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="n_samples"):
+        engine_lib.EngineSpec(model=engine_lib.FnModel(lambda m: m),
+                              method="occlusion", n_samples=16)
+    with pytest.raises(ValueError, match="one target"):
+        engine_lib.EngineSpec(model=engine_lib.FnModel(lambda m: m),
+                              method="rise", targets=engine_lib.TopK(3))
+    with pytest.raises(ValueError, match="n_samples"):
+        engine_lib.EngineSpec(model=engine_lib.FnModel(lambda m: m),
+                              method="rise", n_samples=0)
+
+
+# ---------------------------------------------------------------------------
+# serve: cache bypass, per-request key folding, fxp16 serving
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["occlusion", "rise"])
+def test_perturb_explain_never_consults_residual_cache(setup, method):
+    """Satellite: forward-only methods bypass the residual cache entirely —
+    a warm entry for the uid is neither served nor accounted."""
+    params, x = setup
+    srv = make_server(CNNAdapter(params, CFG))
+    srv.submit(Request(uid="u0", kind=PREDICT, x=x[0]))
+    srv.drain()
+    assert srv.cache.peek("u0") is not None    # residuals are warm
+
+    req = Request(uid="u0", kind=EXPLAIN, x=x[0], method=method,
+                  key=jax.random.PRNGKey(1))
+    srv.submit(req)
+    (resp,) = srv.drain()
+    assert resp.ok and resp.method == method
+    assert resp.cache_hit is False
+    assert srv.cache.stats.hits == 0
+    assert srv.cache.stats.misses == 0         # bypass, not a counted miss
+
+    # the same uid + a mask-reuse method DOES hit — the entry stayed warm
+    srv.submit(Request(uid="u0", kind=EXPLAIN, x=x[0], method="saliency"))
+    (resp2,) = srv.drain()
+    assert resp2.ok and resp2.cache_hit is True
+    assert srv.cache.stats.hits == 1
+
+
+def test_rise_cobatched_requests_keep_their_own_keys(setup):
+    """Co-batched rise requests fold per-request keys: each answer is
+    bitwise what singleton serving with that key produces."""
+    params, x = setup
+    keys = [jax.random.PRNGKey(20 + i) for i in range(3)]
+    solo = {}
+    for i, k in enumerate(keys):
+        srv = make_server(CNNAdapter(params, CFG), max_batch=1)
+        srv.submit(Request(uid=f"s{i}", kind=EXPLAIN, x=x[i % 2],
+                           method="rise", key=k))
+        (resp,) = srv.drain()
+        solo[f"s{i}"] = np.asarray(resp.relevance)
+
+    srv = make_server(CNNAdapter(params, CFG))
+    for i, k in enumerate(keys):
+        srv.submit(Request(uid=f"s{i}", kind=EXPLAIN, x=x[i % 2],
+                           method="rise", key=k))
+    out = {r.uid: r for r in srv.drain()}
+    assert len(out) == 3
+    sizes = {r.batch_size for r in out.values()}
+    assert max(sizes) > 1                      # actually rode one fold
+    for uid, resp in out.items():
+        np.testing.assert_array_equal(np.asarray(resp.relevance), solo[uid])
+
+
+def test_serve_fxp16_rise_end_to_end(setup):
+    params, x = setup
+    srv = make_server(CNNAdapter(params, CFG, precision="fxp16"))
+    srv.submit(Request(uid="q0", kind=EXPLAIN, x=x[0], method="rise",
+                       key=jax.random.PRNGKey(30)))
+    (resp,) = srv.drain()
+    assert resp.ok
+    heat = np.asarray(resp.relevance)
+    assert heat.shape == (8, 8)
+    assert np.all(np.isfinite(heat))

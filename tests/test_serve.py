@@ -136,12 +136,32 @@ def test_bucket_key_separates_incompatible_requests():
                     target=1),
     ]:
         assert bucket_key(other) != bucket_key(a)
-    # stochastic methods never coalesce across requests
+    # key-folding stochastic methods CO-BATCH: each request rides its own
+    # PRNG key (folded along the batch axis), so sharing a launch is safe
     s1 = Request(uid="s1", kind=EXPLAIN, x=np.zeros((8, 8, 3), np.float32),
                  method="smoothgrad")
     s2 = Request(uid="s2", kind=EXPLAIN, x=np.zeros((8, 8, 3), np.float32),
                  method="smoothgrad")
-    assert bucket_key(s1) != bucket_key(s2)
+    assert bucket_key(s1) == bucket_key(s2)
+    assert s1.batch_token is None       # no singleton token was minted
+
+
+def test_non_foldable_stochastic_methods_stay_singleton():
+    """A stochastic explainer WITHOUT key folding still gets per-request
+    singleton buckets (the pre-fold dispatch could only use one key)."""
+    @registry.register("_test_nofold")
+    class NoFold(registry.Explainer):
+        needs_key = True
+        fold_keys = False
+    try:
+        s1 = Request(uid="s1", kind=EXPLAIN,
+                     x=np.zeros((8, 8, 3), np.float32), method="_test_nofold")
+        s2 = Request(uid="s2", kind=EXPLAIN,
+                     x=np.zeros((8, 8, 3), np.float32), method="_test_nofold")
+        assert bucket_key(s1) != bucket_key(s2)
+        assert isinstance(s1.batch_token, int)
+    finally:
+        registry._REGISTRY.pop("_test_nofold")
 
 
 def test_batcher_deadline_and_fill():
@@ -337,9 +357,11 @@ def test_server_rejects_bad_requests(setup):
         Request(uid="a", kind=PREDICT, x=x[0], topk=3)
 
 
-def test_smoothgrad_same_uid_requests_never_coalesce(setup):
-    """Two in-flight stochastic requests for ONE uid carry distinct PRNG
-    keys; each must be served alone with its own key."""
+def test_smoothgrad_cobatched_requests_keep_their_own_keys(setup):
+    """Regression for the first-key dispatch bug: two CO-BATCHED stochastic
+    requests with distinct PRNG keys share one launch (per-request keys
+    folded along the batch axis) yet each gets a DIFFERENT heatmap that is
+    bitwise identical to serving it alone with its own key."""
     params, adapter, x = setup
     srv = make_server(adapter)
     k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
@@ -348,7 +370,11 @@ def test_smoothgrad_same_uid_requests_never_coalesce(setup):
     srv.submit(Request(uid="u", kind=EXPLAIN, x=x[0], method="smoothgrad",
                        key=k2))
     out = srv.drain()
-    assert len(out) == 2 and {r.batch_size for r in out} == {1}
+    assert len(out) == 2 and {r.batch_size for r in out} == {2}
+    # same input, different keys -> different draws, different heatmaps
+    assert not np.array_equal(np.asarray(out[0].relevance),
+                              np.asarray(out[1].relevance))
+    # ...and each is per-key deterministic: identical to singleton serving
     f = adapter.model_fn("saliency")
     for resp, key in zip(out, [k1, k2]):
         _, sg = attribution.smoothgrad(f, x[0:1], key)
