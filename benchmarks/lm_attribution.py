@@ -1,0 +1,72 @@
+"""Token-level LM attribution cost — the :mod:`repro.lm` workload in numbers.
+
+Three gated rows on the smoke mamba stack:
+
+  * ``lm/decode_per_token_us``   — step-wise generation (prefill + O(1)
+    decode steps), amortized per generated token;
+  * ``lm/explain_per_token_us``  — per-generated-token contrastive
+    attribution (one full-sequence FP + difference-seeded BP per token)
+    under the ``edge-small`` ssm_scan plan;
+  * ``lm/xai_overhead_ratio``    — explain/decode per-token ratio: what one
+    token's explanation costs relative to generating it.  Gated by
+    ``benchmarks.report.LM_OVERHEAD_CEILING`` in ``report.py --check`` —
+    the tripwire for the planned scan path silently falling off a cliff.
+
+The ``*_us`` rows additionally ride the standard latency-regression gate.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+import repro.configs as configs
+from repro.models import transformer as tf
+
+
+def _timed_us(fn, iters: int = 3) -> float:
+    out = fn()                                   # warm: jit compiles here
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    from benchmarks.report import LM_OVERHEAD_CEILING
+    from repro import lm as lm_lib
+    from repro.plan import plan_lm
+
+    cfg = configs.get_smoke("falcon-mamba-7b")
+    params = tf.init(jax.random.PRNGKey(0), cfg)
+    b, s0, t_new = 2, 24, 8
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (b, s0), 0,
+                                 cfg.vocab)
+    plan = plan_lm(cfg, device="edge-small")
+    rows = []
+
+    dec_us = _timed_us(
+        lambda: lm_lib.decode(params, cfg, prompts, max_new=t_new).tokens)
+    dec_per_tok = dec_us / t_new
+    rows.append(("lm/decode_per_token_us", dec_per_tok,
+                 f"b{b}_s{s0}_T{t_new}_incl_prefill"))
+
+    result = lm_lib.decode(params, cfg, prompts, max_new=t_new)
+    exp_us = _timed_us(
+        lambda: lm_lib.explain_generated(params, cfg, result,
+                                         mode="contrastive", plan=plan))
+    exp_per_tok = exp_us / t_new
+    rows.append(("lm/explain_per_token_us", exp_per_tok,
+                 "contrastive_planned_edge-small"))
+
+    ratio = exp_per_tok / max(dec_per_tok, 1e-9)
+    rows.append(("lm/xai_overhead_ratio", ratio,
+                 f"explain/decode_ceiling={LM_OVERHEAD_CEILING:.0f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, derived in run():
+        print(f"{name},{val:.1f},{derived}")

@@ -11,11 +11,14 @@ compares the two newest ``benchmarks/results/BENCH_*.json`` snapshots
 any ``*_shed_rate`` row of the load-replay suite rose past the relative
 threshold plus a 1%-absolute floor, any ``*_throughput`` speedup row
 fell below ``SHARDED_THROUGHPUT_FLOOR`` (1.5x — the mesh-sharded serving
-claim) or dropped more than the threshold, or any ``*_speedup`` row fell
+claim) or dropped more than the threshold, any ``*_speedup`` row fell
 below ``PERTURB_SPEEDUP_FLOOR`` (3x — the folded-perturbation claim) or
-dropped more than the threshold — the bench trajectory's tripwire for
-planned-vs-default tile drift, admission-policy drift, sharded-serving
-capacity drift, AND batched-perturbation drift.
+dropped more than the threshold, or any ``*_overhead_ratio`` row rose
+past ``LM_OVERHEAD_CEILING`` (the per-token LM attribution cost relative
+to decoding that token; SMALLER is better) or climbed more than the
+threshold — the bench trajectory's tripwire for planned-vs-default tile
+drift, admission-policy drift, sharded-serving capacity drift,
+batched-perturbation drift, AND token-attribution overhead drift.
 
     PYTHONPATH=src python -m benchmarks.report --trend [--filter SUBSTR]
 prints every metric's trajectory across ALL snapshots (first->last ratio
@@ -173,6 +176,27 @@ def _speedup_rows(bench: dict) -> dict:
     return out
 
 
+#: absolute ceiling for ``*_overhead_ratio`` rows: explaining one generated
+#: token (full-sequence FP + difference-seeded BP under the planned ssm_scan)
+#: must cost no more than this many times generating it (the ``repro.lm``
+#: per-token attribution claim; measured ~6x on the smoke mamba stack).
+LM_OVERHEAD_CEILING = 15.0
+
+
+def _overhead_rows(bench: dict) -> dict:
+    """{row_name: ratio} for every ``*_overhead_ratio`` row (explain-vs-
+    decode cost ratios; SMALLER is better — gated by a ceiling, not a
+    floor)."""
+    out = {}
+    for rows in bench.get("suites", {}).values():
+        for name, val, _derived in rows:
+            if name.endswith("_overhead_ratio") \
+                    and isinstance(val, (int, float)) \
+                    and math.isfinite(val) and val > 0:
+                out[name] = float(val)
+    return out
+
+
 def check(results_dir: str = "benchmarks/results",
           threshold: float = 0.15) -> int:
     """Compare the two newest BENCH_*.json; nonzero on >threshold latency
@@ -244,6 +268,22 @@ def check(results_dir: str = "benchmarks/results",
                 or abs(new_sp[name] - old_sp[name]) > 0.05:
             print(f"  {name:44s} {prev}{new_sp[name]:.2f}x "
                   f"(floor {floor:.2f}x){flag}")
+        if flag:
+            regressions.append(name)
+    # overhead ratios gate the INVERTED two ways: never above the absolute
+    # ceiling (the repro.lm per-token attribution claim), and never up more
+    # than the relative threshold vs the previous snapshot.
+    old_ov, new_ov = _overhead_rows(old_bench), _overhead_rows(new_bench)
+    for name in sorted(new_ov):
+        ceiling = LM_OVERHEAD_CEILING
+        if name in old_ov:
+            ceiling = min(ceiling, old_ov[name] * (1 + threshold))
+        flag = " REGRESSION" if new_ov[name] > ceiling else ""
+        prev = f"{old_ov[name]:.2f}x -> " if name in old_ov else ""
+        if flag or name not in old_ov \
+                or abs(new_ov[name] - old_ov[name]) > 0.05:
+            print(f"  {name:44s} {prev}{new_ov[name]:.2f}x "
+                  f"(ceiling {ceiling:.2f}x){flag}")
         if flag:
             regressions.append(name)
     if regressions:

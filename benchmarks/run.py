@@ -6,6 +6,7 @@
 #   fp_bp_overhead       — paper Table IV (FP vs FP+BP latency, 50-72%)
 #   kernels              — paper §III compute blocks (conv/VMM/ReLU/pool)
 #   attribution_serving  — 'real-time XAI' at LM scale (decode vs explain)
+#   lm_attribution       — repro.lm: per-generated-token attribution cost
 #   serving_queue        — repro.serve queue: p50/p99, cache hits, occupancy
 #   load_replay          — O(100k)-request SLO replay: p99/shed-rate gates
 #   perturbation         — folded perturb forward vs lax.map; rise fan-out
@@ -29,13 +30,15 @@ def _row_val(val):
 
 def main() -> None:
     from benchmarks import (attribution_serving, compression, fp_bp_overhead,
-                            kernels, load_replay, memory_overhead,
-                            perturbation, roofline, serving_queue)
+                            kernels, lm_attribution, load_replay,
+                            memory_overhead, perturbation, roofline,
+                            serving_queue)
     suites = [
         ("memory_overhead", memory_overhead.run),
         ("fp_bp_overhead", fp_bp_overhead.run),
         ("kernels", kernels.run),
         ("attribution_serving", attribution_serving.run),
+        ("lm_attribution", lm_attribution.run),
         ("serving_queue", serving_queue.run),
         ("load_replay", load_replay.run_bench),
         ("perturbation", perturbation.run),

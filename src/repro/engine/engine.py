@@ -47,11 +47,15 @@ class Engine:
         self._mesh = None
         self._n_shards = 1
         if hasattr(model, "token_step"):
-            # LM token-attribution engine: one jitted FP+BP step program.
-            self._token_step = jax.jit(model.token_step(spec.method))
+            # LM token-attribution engine: one jitted FP+BP step program per
+            # score mode (the default "ixg" eagerly, others lazily), all
+            # running the resolved SSM scan plan.
+            self._plan = spec.resolve_plan()
+            self._token_step = jax.jit(
+                model.token_step(spec.method, plan=self._plan))
+            self._token_steps: Dict[str, Any] = {"ixg": self._token_step}
             self._backend: Optional[BackwardEngine] = None
             self._model_fn = None
-            self._plan = None
             return
         self._token_step = None
         self._fused_explain: Dict[Tuple[bool, Optional[int]], Any] = {}
@@ -393,15 +397,26 @@ class Engine:
 
     # -- LM token attribution ------------------------------------------------
 
-    def explain_tokens(self, batch):
+    def explain_tokens(self, batch, *, mode: str = "ixg"):
         """LM engines: ``batch -> (last-position logits [B, V], scores
         [B, S])`` — per-prompt-position relevance of the next-token
-        prediction (the paper's heatmap over tokens)."""
+        prediction (the paper's heatmap over tokens).
+
+        ``mode`` picks the per-token score reduction (``ixg`` input x
+        gradient, ``grad_norm`` saliency norm, ``contrastive``
+        argmax-vs-runner-up); each mode is one jitted step program,
+        compiled on first use and sharing the engine's resolved SSM scan
+        plan."""
         if self._token_step is None:
             raise ValueError(
                 f"{type(self.spec.model).__name__} engines explain arrays; "
                 f"explain_tokens needs an LMModel spec")
-        return self._token_step(batch)
+        step = self._token_steps.get(mode)
+        if step is None:
+            step = jax.jit(self.spec.model.token_step(
+                self.spec.method, plan=self._plan, mode=mode))
+            self._token_steps[mode] = step
+        return step(batch)
 
     # -- internals -----------------------------------------------------------
 

@@ -108,6 +108,47 @@ def attribute_tokens(f: Callable, embeds: jnp.ndarray, *, position=-1,
     return logits, rel, scores
 
 
+def attribute_tokens_contrastive(f: Callable, embeds: jnp.ndarray, *,
+                                 position=-1, target_a=None, target_b=None,
+                                 backward=None):
+    """Token-level "why A rather than B?" — one BP with an e_A - e_B seed.
+
+    ``f(embeds) -> logits [B, S, V]``.  Defaults: ``target_a`` is the argmax
+    token at ``position`` and ``target_b`` the runner-up — the serving
+    default for per-generated-token contrast (sampled token vs the
+    next-most-likely one).  When ``target_a`` is given (a sampled, possibly
+    non-argmax token), ``target_b`` defaults to the top-2 candidate that is
+    NOT ``target_a``.  Returns (logits, relevance [B, S, D], per-token
+    scores [B, S]) with the same input-x-gradient reduction as
+    :func:`attribute_tokens`; by seed-linearity of the BP the scores equal
+    the difference of two single-target calls.
+
+    ``backward`` selects the manual engine (see :func:`attribute`).
+    """
+    if backward is not None:
+        logits, residuals = f(embeds)
+    else:
+        logits, vjp_fn = jax.vjp(f, embeds)
+    at = logits[:, position, :]
+    _, idx2 = jax.lax.top_k(at.astype(jnp.float32), 2)
+    if target_a is None:
+        target_a = idx2[:, 0]
+    target_a = jnp.asarray(target_a)
+    if target_b is None:
+        target_b = jnp.where(target_a == idx2[:, 0], idx2[:, 1], idx2[:, 0])
+    seed_at = (jax.nn.one_hot(target_a, logits.shape[-1], dtype=logits.dtype)
+               - jax.nn.one_hot(target_b, logits.shape[-1],
+                                dtype=logits.dtype))
+    seed = jnp.zeros_like(logits).at[:, position, :].set(seed_at)
+    if backward is not None:
+        rel = backward(residuals, seed[None])[0]
+    else:
+        (rel,) = vjp_fn(seed)
+    scores = jnp.sum(rel.astype(jnp.float32) * embeds.astype(jnp.float32),
+                     axis=-1)
+    return logits, rel, scores
+
+
 def attribute_classes(f: Callable, x, targets, *, backward=None):
     """Relevance maps for SEVERAL classes from ONE forward pass.
 

@@ -194,11 +194,25 @@ class LMModel(_ParamsIdentity):
     def has_pair(self) -> bool:
         return False            # vjp-only: no manual residual pair for LMs
 
-    def token_step(self, method: str) -> Callable:
-        """``(batch) -> (last-position logits [B, V], scores [B, S])``."""
+    def token_step(self, method: str, *, plan=None,
+                   mode: str = "ixg") -> Callable:
+        """``(batch) -> (last-position logits [B, V], scores [B, S])``.
+
+        ``method`` must be a gradient rule set (perturbation methods are
+        forward-only over pixel grids — there is no token BP to run).
+        ``plan`` threads a ``plan_lm`` TilePlan's ``(d_tile, chunk)`` knobs
+        into the SSM Pallas scan launches; ``mode`` picks the per-token
+        score reduction (``ixg | grad_norm | contrastive`` — see
+        :func:`repro.launch.steps.make_attribute_step`).
+        """
+        if method not in RULE_SETS:
+            raise ValueError(
+                f"token attribution needs a gradient rule set {RULE_SETS}; "
+                f"method={method!r} has no token BP")
         from repro.launch import steps as steps_lib
         step = steps_lib.make_attribute_step(
-            self.cfg, method, triangle_skip=self.triangle_skip)
+            self.cfg, method, triangle_skip=self.triangle_skip,
+            plan=plan, mode=mode)
         params = self.params
 
         def run(batch):
@@ -356,8 +370,10 @@ class EngineSpec:
         """The ``TilePlan`` the built engine's kernels will run, or None.
 
         An explicit ``plan`` wins; otherwise a ``device`` name triggers the
-        resource-aware planner over the model's kernel shapes (CNN handles
-        only — LM/Fn models have no planned Pallas stack yet).  Seed
+        resource-aware planner over the model's kernel shapes — ``plan_cnn``
+        for CNN handles, ``plan_lm`` (the SSM scan's ``(d_tile, chunk)``
+        knobs) for LM handles with mamba/hybrid segments; Fn models and
+        dense LM stacks have no planned Pallas kernels.  Seed
         fan-out comes from ``targets`` (TopK rides the seeds axis through
         every fused backward, so it scales the planned footprints).
 
@@ -372,8 +388,21 @@ class EngineSpec:
         """
         if self.plan is not None:
             return self.plan
-        if self.device is None or not hasattr(self.model, "cfg") \
-                or not getattr(self.model, "has_pair", False):
+        if self.device is None or not hasattr(self.model, "cfg"):
+            return None
+        if hasattr(self.model, "token_step"):
+            # LM handle: plan the SSM scan chunking (dense stacks have no
+            # planned Pallas kernel — None keeps the default launches).
+            cfg = self.model.cfg
+            if not any(k in ("mamba", "hybrid")
+                       for k, _, _ in cfg.layer_plan()):
+                return None
+            from repro.plan import LM_PLAN_SEQ, TuningCache, plan_lm
+            return plan_lm(cfg, device=self.device, precision=self.precision,
+                           batch=self.batch or 1, seq=LM_PLAN_SEQ,
+                           autotune=self.autotune,
+                           cache=TuningCache() if self.autotune else None)
+        if not getattr(self.model, "has_pair", False):
             return None
         from repro.plan import TuningCache, plan_cnn
         seeds = self.targets.k if isinstance(self.targets, TopK) else 1

@@ -4,29 +4,49 @@ Forward runs the Pallas state-stationary kernel; the backward falls back to
 autodiff over the jnp reference recurrence (attribution and training through
 SSM blocks differentiate the pure-JAX chunked scan in mamba.py; this kernel
 is the serving/prefill hot-path).
+
+``d_tile``/``chunk`` are the planner's knobs (``repro.plan.ScanTile``): how
+many channels ride one grid cell and how many timesteps one sequential chunk
+covers.  They split the grid, never the math — each (d, n) element's
+per-timestep trajectory is computed in the same op order regardless of the
+split, so planned and default launches are bitwise-identical.  The knobs are
+launch parameters, not traced values, so each distinct pair gets its own
+memoized ``custom_vjp`` wrapper (the bare positional call
+``selective_scan(dt, x, B, C, a, h0)`` keeps the kernel defaults).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 
 from repro.kernels.ssm_scan import ref
 from repro.kernels.ssm_scan.ssm_scan import selective_scan_pallas
 
+_DEFAULT_D_TILE = 256
+_DEFAULT_CHUNK = 64
 
-@jax.custom_vjp
-def selective_scan(dt, x, bmat, cmat, a, h0):
+
+@functools.lru_cache(maxsize=None)
+def _knobbed(d_tile: int, chunk: int):
+    @jax.custom_vjp
+    def scan(dt, x, bmat, cmat, a, h0):
+        return selective_scan_pallas(dt, x, bmat, cmat, a, h0,
+                                     d_tile=d_tile, chunk=chunk)
+
+    def _fwd(dt, x, bmat, cmat, a, h0):
+        return scan(dt, x, bmat, cmat, a, h0), (dt, x, bmat, cmat, a, h0)
+
+    def _bwd(res, g):
+        _, vjp = jax.vjp(lambda *args: ref.selective_scan(*args), *res)
+        return vjp(g)
+
+    scan.defvjp(_fwd, _bwd)
+    return scan
+
+
+def selective_scan(dt, x, bmat, cmat, a, h0, *, d_tile=None, chunk=None):
     """(dt, x [B,S,D], B/C [B,S,N], A [D,N], h0 [B,D,N]) -> (y, h_last)."""
-    return selective_scan_pallas(dt, x, bmat, cmat, a, h0)
-
-
-def _fwd(dt, x, bmat, cmat, a, h0):
-    out = selective_scan(dt, x, bmat, cmat, a, h0)
-    return out, (dt, x, bmat, cmat, a, h0)
-
-
-def _bwd(res, g):
-    _, vjp = jax.vjp(lambda *args: ref.selective_scan(*args), *res)
-    return vjp(g)
-
-
-selective_scan.defvjp(_fwd, _bwd)
+    return _knobbed(int(d_tile) if d_tile is not None else _DEFAULT_D_TILE,
+                    int(chunk) if chunk is not None else _DEFAULT_CHUNK)(
+        dt, x, bmat, cmat, a, h0)

@@ -4,8 +4,14 @@ The paper's end goal — "real-time XAI on the edge" — as a service: requests
 can ask not just for the next tokens (or class) but for WHY, served from the
 same weights with the same sharding.  Two workloads:
 
-  * ``--workload lm``  — generate + per-prompt-token relevance for an LM
-    arch; method choices come from the registry's token-capable explainers.
+  * ``--workload lm``  — token-level LM attribution as a served workload
+    (:mod:`repro.lm`): step-wise decode with per-generated-token contrastive
+    attribution, then a mixed predict/explain stream through the
+    ``ExplanationServer`` on an ``LMAdapter`` — sequence-length-bucketed
+    batching, the same admission/deadline knobs as the CNN path, and the
+    ``ssm_scan`` chunking plan resolved from ``--device-profile`` before
+    anything compiles.  Method choices come from the registry's
+    token-capable explainers.
   * ``--workload cnn`` — a mixed predict/explain stream through the
     ``ExplanationServer`` (micro-batching + residual-mask cache): every
     explain that follows a predict for the same request id skips the
@@ -60,21 +66,105 @@ def explain(cfg, params, prompt_tokens, *, method: str = "saliency"):
 
 
 def run_lm(args) -> None:
+    from repro import lm as lm_lib
+
     cfg = configs.get_smoke(args.arch)
     params = tf.init(jax.random.PRNGKey(0), cfg)
+    # Bare rule-set names (saliency/deconvnet/guided) predate the served
+    # token explainers; they map to token_ixg — the historical ixg score
+    # reduction — so old invocations keep working through the server path.
+    method = (args.method if args.method.startswith("token_")
+              else "token_ixg")
+    if method != args.method:
+        print(f"[serve/lm] --method {args.method} -> {method} "
+              f"(LM serving dispatches the registry token explainers)")
+    # configure-once, same as the CNN path: the spec resolves the ssm_scan
+    # chunking plan for the device profile before anything compiles.
+    adapter = lm_lib.LMAdapter(params, cfg, precision=args.precision,
+                               device=args.device_profile,
+                               autotune=args.autotune)
+    eng = adapter.engine
+    if eng.plan is not None:
+        print(f"[serve/lm] planned ssm_scan tiles for device profile "
+              f"{args.device_profile!r}:")
+        for line in eng.plan.summary().splitlines()[1:]:
+            print(f"  {line.strip()}")
+
+    # step-wise generation + per-generated-token contrastive attribution
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
-
     t0 = time.time()
-    toks = generate(cfg, params, prompts, max_new=args.max_new)
-    print(f"[serve/lm] generated {toks.shape} in {time.time() - t0:.2f}s")
-
+    result = lm_lib.decode(params, cfg, prompts, max_new=args.max_new)
+    print(f"[serve/lm] decoded {tuple(result.generated.shape)} in "
+          f"{time.time() - t0:.2f}s")
     t0 = time.time()
-    _, scores = explain(cfg, params, prompts, method=args.method)
-    print(f"[serve/lm] attribution ({args.method}) in {time.time() - t0:.2f}s")
-    top = np.argsort(-np.abs(np.asarray(scores)), axis=1)[:, :5]
-    for i in range(args.batch):
-        print(f"  request {i}: most relevant prompt positions {top[i].tolist()}")
+    per_tok = lm_lib.explain_generated(params, cfg, result, plan=eng.plan)
+    print(f"[serve/lm] contrastive per-generated-token attribution "
+          f"{tuple(per_tok.shape)} in {time.time() - t0:.2f}s")
+
+    admission = None
+    if args.capacity is not None or args.deadline_ms is not None:
+        admission = AdmissionConfig(
+            capacity=args.capacity if args.capacity is not None else 1024,
+            default_deadline_s=(args.deadline_ms / 1e3
+                                if args.deadline_ms is not None else None))
+    tracer = Tracer() if args.trace_out else None
+    server = ExplanationServer(adapter, max_batch=args.batch,
+                               max_delay_s=args.max_delay_ms / 1e3,
+                               admission=admission, tracer=tracer)
+    # mixed predict/explain traffic over ragged prompt lengths: pow2
+    # padding buckets equal-length requests into shared launches (the
+    # batcher's shape-keyed buckets ARE the sequence buckets)
+    rng = np.random.RandomState(2)
+    n = args.requests
+    reqs = []
+    for i in range(n):
+        s = int(rng.randint(max(2, args.prompt_len // 2),
+                            args.prompt_len + 1))
+        toks = np.asarray(lm_lib.pad_tokens(
+            rng.randint(0, cfg.vocab, size=(s,)).astype(np.int32)))
+        reqs.append(Request(uid=f"q{i}", kind="predict", x=toks))
+        reqs.append(Request(uid=f"q{i}", kind="explain", x=toks,
+                            method=method))
+    buckets = sorted({req.x.shape[-1] for req in reqs})
+    t0 = time.time()
+    responses = []
+    sheds = 0
+    for req in reqs:                  # serve()'s dict collapses uids; keep all
+        try:
+            server.submit(req)
+        except ShedError:             # admission refusal: typed, never a stall
+            sheds += 1
+            continue
+        responses.extend(server.poll())
+    responses.extend(server.drain())
+    dt = time.time() - t0
+    errors = sum(1 for r in responses if not r.ok)
+    print(f"[serve/lm] {len(responses)} responses in {dt:.2f}s "
+          f"({len(responses) / dt:.1f} req/s); sequence buckets {buckets}; "
+          f"{errors} errors")
+    if admission is not None:
+        snap = server.stats.snapshot()
+        print(f"[serve/lm] admission: {sheds} shed at submit "
+              f"(by reason {snap['sheds']}), "
+              f"peak queue {snap['peak_queue_depth']}")
+    for resp in responses:
+        if resp.kind == "explain" and resp.ok:
+            top = np.argsort(-np.abs(np.asarray(resp.relevance)))[:5]
+            print(f"  {resp.uid}: most relevant prompt positions "
+                  f"{top.tolist()}")
+            break
+    for name, snap in server.stats.snapshot()["methods"].items():
+        print(f"  {name:28s} n={snap['count']:3d} p50={snap['p50_us']:.0f}us "
+              f"p99={snap['p99_us']:.0f}us hit_rate={snap['hit_rate']:.2f}")
+    if tracer is not None:
+        tracer.finish()
+        tracer.save(args.trace_out)
+        print(f"[serve/lm] trace: {len(tracer.spans)} spans -> "
+              f"{args.trace_out} (load in https://ui.perfetto.dev)")
+    if args.metrics:
+        print("[serve/lm] unified metrics snapshot:")
+        print(dumps_strict(obs_snapshot(), indent=2))
 
 
 def run_cnn(args) -> None:
@@ -215,7 +305,8 @@ def main():
                          "fixed-point kernels (paper §IV)")
     from repro.plan import profile_names
     ap.add_argument("--device-profile", default=None,
-                    help="cnn workload: plan kernel tiles for this "
+                    help="plan kernel tiles (cnn: conv/vmm; lm: ssm_scan "
+                         "chunking) for this "
                          "repro.plan device profile before compiling "
                          f"(one of {profile_names()}, e.g. edge-small = "
                          "2MB on-chip budget; or 'mesh:<profile>:<n>' for "
@@ -244,6 +335,9 @@ def main():
             raise SystemExit(
                 f"--workload lm supports token-capable methods "
                 f"{registry.token_methods()}; got {args.method!r}")
+        if args.precision == "fxp16":
+            raise SystemExit("--workload lm has no int16 fixed-point path "
+                             "(token attribution needs float gradients)")
         run_lm(args)
     else:
         run_cnn(args)

@@ -18,6 +18,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import attribution
 from repro.dist import params as dist_params
+from repro.engine import methods as engine_methods
 from repro.dist.sharding import physical_spec
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
@@ -147,13 +148,56 @@ def make_decode_step(cfg: ModelConfig):
     return decode_step
 
 
+#: Per-token score reductions ``make_attribute_step`` can compile.
+TOKEN_MODES = ("ixg", "grad_norm", "contrastive")
+
+
+def ssm_scan_tiles(cfg: ModelConfig, plan=None):
+    """Per-SEGMENT ``{si: (d_tile, chunk)}`` launch knobs for the SSM scan.
+
+    LM attribution always routes SSM segments through the Pallas scan
+    kernel; this maps a ``repro.plan.TilePlan``'s ``ssm<si>.scan`` entries
+    (see ``repro.plan.lm_kernel_shapes``) onto the launch knobs.  Segments
+    without a plan entry — and the whole stack when ``plan`` is None — get
+    the UNPLANNED launch: the whole channel dim in one grid cell
+    (``d_tile=cfg.d_inner``) at the model's native ``ssm_chunk``.  Grid
+    splits are bitwise-neutral for the scan, so planned and unplanned
+    launches compute identical bits.  Returns None for stacks with no SSM
+    segments (dense/moe: nothing to tile).
+    """
+    tiles = {}
+    for si, (kind, _, _) in enumerate(cfg.layer_plan()):
+        if kind not in ("mamba", "hybrid"):
+            continue
+        t = plan.get(f"ssm{si}.scan") if plan is not None else None
+        tiles[si] = ((t.d_tile, t.chunk) if t is not None
+                     else (cfg.d_inner, cfg.ssm_chunk))
+    return tiles or None
+
+
 def make_attribute_step(cfg: ModelConfig, method: str = "saliency", *,
-                        triangle_skip: bool = True):
+                        triangle_skip: bool = True, plan=None,
+                        mode: str = "ixg"):
     """The paper's technique as a serving feature: FP + input-grad BP.
 
-    Returns per-position relevance scores [B, S] for the argmax logit at the
-    final position (VLM: the first n_patches scores are the image heatmap).
+    Returns per-position relevance scores [B, S] for the final-position
+    prediction (VLM: the first n_patches scores are the image heatmap).
+    ``mode`` picks the per-token reduction:
+
+      * ``"ixg"`` — input x gradient (signed), the default heatmap;
+      * ``"grad_norm"`` — L2 norm of the embedding gradient (pure saliency);
+      * ``"contrastive"`` — argmax-vs-runner-up difference seed
+        (:func:`repro.engine.methods.attribute_tokens_contrastive`).
+
+    ``plan`` (a ``repro.plan.TilePlan`` from ``plan_lm``) threads planned
+    ``(d_tile, chunk)`` launch knobs into the SSM Pallas scan of every
+    mamba/hybrid segment; None keeps the unplanned whole-D launch (same
+    bits — the scan's grid splits are bitwise-neutral).
     """
+    if mode not in TOKEN_MODES:
+        raise ValueError(f"mode={mode!r} not in {TOKEN_MODES}")
+    scan_tiles = ssm_scan_tiles(cfg, plan)
+
     def attribute_step(params, batch):
         h = tf.embed_inputs(params, cfg, batch)
         enc_frames = batch.get("frames")
@@ -161,9 +205,16 @@ def make_attribute_step(cfg: ModelConfig, method: str = "saliency", *,
         def f(e):
             return tf.forward_from_embeddings(
                 params, cfg, e, method=method, enc_frames=enc_frames,
-                remat=False, triangle_skip=triangle_skip)[0]
+                remat=False, triangle_skip=triangle_skip,
+                scan_tiles=scan_tiles)[0]
 
-        logits, rel, scores = attribution.attribute_tokens(f, h)
+        if mode == "contrastive":
+            logits, rel, scores = engine_methods.attribute_tokens_contrastive(
+                f, h)
+        else:
+            logits, rel, scores = attribution.attribute_tokens(f, h)
+            if mode == "grad_norm":
+                scores = jnp.linalg.norm(rel.astype(jnp.float32), axis=-1)
         return logits[:, -1, :], scores
 
     return attribute_step

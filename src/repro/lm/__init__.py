@@ -1,0 +1,35 @@
+"""repro.lm — token-level LM attribution as a production workload.
+
+The paper's FP+BP attribution, productized for language models end-to-end:
+
+  * :mod:`repro.lm.decode` — step-wise generation (greedy + temperature)
+    over the transformer/mamba stacks, recording per-step runner-up tokens
+    so every generated token can be explained contrastively ("why this
+    token rather than the runner-up?") with ONE jitted traced-position
+    attribution program;
+  * :mod:`repro.lm.adapter` — :class:`LMAdapter`, the serve-protocol
+    adapter: LM requests flow through admission -> batcher -> engine
+    exactly like CNN requests, bucketed by pow2 sequence length;
+  * :mod:`repro.lm.plan` — the ``plan_lm`` surface threading the planner's
+    ``ssm_scan`` chunk-length knob into the kernel launches so attribution
+    fits ``edge-*`` VMEM budgets.
+
+Registry methods: ``token_saliency`` / ``token_ixg`` / ``token_contrastive``
+(:mod:`repro.serve.registry`).  Benchmarks: ``benchmarks/lm_attribution.py``
+(``lm/decode_per_token_us``, ``lm/explain_per_token_us``,
+``lm/xai_overhead_ratio``).
+"""
+from repro.lm.adapter import (MIN_BUCKET, PAD_ID, LMAdapter, bucket_len,
+                              pad_tokens)
+from repro.lm.decode import (TOKEN_MODES, DecodeResult, decode,
+                             explain_generated, make_token_explain)
+from repro.lm.plan import (LM_PLAN_SEQ, InfeasiblePlanError, ScanTile,
+                           lm_kernel_shapes, lm_plan_footprints, plan_lm,
+                           ssm_scan_tiles)
+
+__all__ = [
+    "DecodeResult", "InfeasiblePlanError", "LMAdapter", "LM_PLAN_SEQ",
+    "MIN_BUCKET", "PAD_ID", "ScanTile", "TOKEN_MODES", "bucket_len",
+    "decode", "explain_generated", "lm_kernel_shapes", "lm_plan_footprints",
+    "make_token_explain", "pad_tokens", "plan_lm", "ssm_scan_tiles",
+]

@@ -1,0 +1,200 @@
+"""Step-wise LM generation with per-generated-token attribution.
+
+The serving loop the paper's "XAI as a product feature" implies for LMs:
+generate token-by-token (prefill + O(1) decode steps over the cached
+stacks), remember per step WHAT was sampled and what the runner-up was,
+then explain every generated token with one FP + input-gradient BP over
+the final sequence.
+
+Two structural facts keep this cheap:
+
+  * the stacks are causal, so the attribution seed at position ``p`` only
+    sends gradient to positions ``<= p`` — ONE jitted attribution program
+    over the full final sequence, with TRACED ``(position, target_a,
+    target_b)``, serves every per-token explanation (T sequential calls of
+    one compiled program, never T compilations);
+  * the per-token contrastive mode ("why this token rather than the
+    runner-up?") rides the existing seed axis — a single ``e_A - e_B``
+    difference seed, one BP pass (see
+    :func:`repro.engine.methods.attribute_tokens_contrastive`).
+
+``plan=`` threads a ``plan_lm`` TilePlan's ``(d_tile, chunk)`` knobs into
+the SSM Pallas scan of the attribution program, exactly like the engine's
+``explain_tokens`` path.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import methods as engine_methods
+from repro.launch import steps as steps_lib
+from repro.models import transformer as tf
+
+TOKEN_MODES = steps_lib.TOKEN_MODES
+
+
+@dataclass(frozen=True)
+class DecodeResult:
+    """One finished generation: the full sequence plus what attribution
+    needs to explain each generated token."""
+
+    tokens: jnp.ndarray        # [B, prompt_len + T] int32, prompt included
+    runners_up: jnp.ndarray    # [B, T] int32: per-step second-best token
+    prompt_len: int
+
+    @property
+    def generated(self) -> jnp.ndarray:
+        """The sampled continuation [B, T]."""
+        return self.tokens[:, self.prompt_len:]
+
+
+def _pick(logits, temperature, key, greedy: bool):
+    """Sample (or argmax) the next token; always return the runner-up too.
+
+    ``logits``: [B, V].  The runner-up is the highest-probability token that
+    is NOT the sampled one (for greedy decoding: the second-best logit) —
+    the ``target_b`` of the per-token contrastive explanation.
+    """
+    lg = logits.astype(jnp.float32)
+    _, idx2 = jax.lax.top_k(lg, 2)
+    if greedy:
+        nxt = idx2[:, 0]
+    else:
+        nxt = jax.random.categorical(key, lg / temperature, axis=-1)
+    runner = jnp.where(nxt == idx2[:, 0], idx2[:, 1], idx2[:, 0])
+    return nxt.astype(jnp.int32), runner.astype(jnp.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_programs(cfg, greedy: bool, triangle_skip: bool):
+    """The two jitted serving programs: prefill and one decode step.
+
+    Memoized on the static knobs (cfg is a frozen dataclass) so repeated
+    ``decode`` calls reuse the compiled programs; temperature and PRNG key
+    are traced operands (unused — and dead-code-eliminated — when greedy).
+    """
+
+    def prefill_step(params, tokens, cache, temperature, key):
+        logits, cache = tf.prefill(params, cfg, {"tokens": tokens}, cache,
+                                   triangle_skip=triangle_skip)
+        nxt, runner = _pick(logits[:, -1, :], temperature, key, greedy)
+        return nxt, runner, cache
+
+    def decode_step(params, cache, tokens, pos, temperature, key):
+        logits, cache = tf.decode_step(params, cfg, tokens, cache, pos)
+        nxt, runner = _pick(logits[:, -1, :], temperature, key, greedy)
+        return nxt, runner, cache
+
+    return jax.jit(prefill_step), jax.jit(decode_step)
+
+
+def decode(params, cfg, prompt_tokens, *, max_new: int,
+           temperature: float = 0.0, key=None,
+           triangle_skip: bool = True) -> DecodeResult:
+    """Generate ``max_new`` tokens step-wise; returns a :class:`DecodeResult`.
+
+    ``temperature <= 0`` (or ``key=None``) decodes greedily; otherwise each
+    step samples ``categorical(logits / temperature)`` from its own split of
+    ``key``.  Each step also records the runner-up token, so the result can
+    be explained contrastively per generated token without re-running the
+    forward.
+    """
+    if max_new < 1:
+        raise ValueError(f"max_new must be >= 1, got {max_new}")
+    prompt_tokens = jnp.asarray(prompt_tokens, jnp.int32)
+    b, s0 = prompt_tokens.shape
+    greedy = temperature <= 0.0 or key is None
+    prefill_fn, step_fn = _decode_programs(cfg, greedy, triangle_skip)
+    temp = jnp.asarray(temperature if not greedy else 1.0, jnp.float32)
+    keys = (jax.random.split(key, max_new) if not greedy
+            else [jax.random.PRNGKey(0)] * max_new)   # dummy, DCE'd
+
+    cache = tf.init_cache(cfg, b, s0 + max_new + 8)
+    nxt, runner, cache = prefill_fn(params, prompt_tokens, cache, temp,
+                                    keys[0])
+    toks, runners = [nxt], [runner]
+    for t in range(1, max_new):
+        nxt, runner, cache = step_fn(params, cache, nxt[:, None],
+                                     jnp.asarray(s0 + t - 1, jnp.int32),
+                                     temp, keys[t])
+        toks.append(nxt)
+        runners.append(runner)
+    return DecodeResult(
+        tokens=jnp.concatenate([prompt_tokens, jnp.stack(toks, axis=1)],
+                               axis=1),
+        runners_up=jnp.stack(runners, axis=1),
+        prompt_len=s0)
+
+
+@functools.lru_cache(maxsize=None)
+def _token_explain_program(cfg, method: str, mode: str, triangle_skip: bool,
+                           tiles_key):
+    tiles = dict(tiles_key) if tiles_key else None
+
+    def explain(params, tokens, position, target_a, target_b):
+        h = tf.embed_inputs(params, cfg, {"tokens": tokens})
+
+        def f(e):
+            return tf.forward_from_embeddings(
+                params, cfg, e, method=method, remat=False,
+                triangle_skip=triangle_skip, scan_tiles=tiles)[0]
+
+        if mode == "contrastive":
+            _, _, scores = engine_methods.attribute_tokens_contrastive(
+                f, h, position=position, target_a=target_a,
+                target_b=target_b)
+        else:
+            _, rel, scores = engine_methods.attribute_tokens(
+                f, h, position=position, target=target_a)
+            if mode == "grad_norm":
+                scores = jnp.linalg.norm(rel.astype(jnp.float32), axis=-1)
+        return scores
+
+    return jax.jit(explain)
+
+
+def make_token_explain(cfg, method: str = "saliency", *,
+                       mode: str = "contrastive", plan=None,
+                       triangle_skip: bool = True):
+    """ONE jitted per-token attribution program for ``cfg``.
+
+    ``(params, tokens [B, S], position, target_a, target_b) -> scores
+    [B, S]`` with ``position``/targets TRACED — causality makes this single
+    program correct for every generated position (the seed at ``position``
+    reaches only earlier embeddings), so T per-token explanations are T
+    executions, not T compilations.  ``target_b`` is ignored outside
+    ``mode="contrastive"``.
+    """
+    if mode not in TOKEN_MODES:
+        raise ValueError(f"mode={mode!r} not in {TOKEN_MODES}")
+    tiles = steps_lib.ssm_scan_tiles(cfg, plan)
+    tiles_key = tuple(sorted(tiles.items())) if tiles else None
+    return _token_explain_program(cfg, method, mode, triangle_skip,
+                                  tiles_key)
+
+
+def explain_generated(params, cfg, result: DecodeResult, *,
+                      method: str = "saliency", mode: str = "contrastive",
+                      plan=None, triangle_skip: bool = True) -> jnp.ndarray:
+    """Per-generated-token attribution over a finished decode.
+
+    For each generated token ``t`` the explained seed sits at the position
+    whose logits produced it (``prompt_len - 1 + t``); in the default
+    contrastive mode ``target_a`` is the sampled token and ``target_b`` its
+    recorded runner-up.  Returns scores ``[B, T, S]`` (S = full sequence
+    length; positions after the seed are exactly zero by causality).
+    """
+    step = make_token_explain(cfg, method, mode=mode, plan=plan,
+                              triangle_skip=triangle_skip)
+    s0 = result.prompt_len
+    n_gen = result.tokens.shape[1] - s0
+    outs = []
+    for t in range(n_gen):
+        outs.append(step(params, result.tokens,
+                         jnp.asarray(s0 - 1 + t, jnp.int32),
+                         result.tokens[:, s0 + t], result.runners_up[:, t]))
+    return jnp.stack(outs, axis=1)

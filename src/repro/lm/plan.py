@@ -1,0 +1,21 @@
+"""LM-side planning surface: the SSM scan chunking knob.
+
+Thin re-export module so LM consumers (`repro.lm.decode`, the adapter, the
+benchmarks) have one import for the planning pieces they use:
+
+  * :func:`repro.plan.plan_lm` — pick an ``ssm_scan`` ``(d_tile, chunk)``
+    per mamba/hybrid segment that fits the device profile's VMEM budget
+    (``InfeasiblePlanError`` when nothing does), mirroring ``plan_cnn``;
+  * :func:`repro.plan.lm_plan_footprints` — the audited footprints of a
+    plan (or of the UNPLANNED whole-D launch, ``plan=None``);
+  * :func:`repro.launch.steps.ssm_scan_tiles` — a plan's entries as the
+    per-segment launch knobs the model stack consumes.
+"""
+from repro.launch.steps import ssm_scan_tiles
+from repro.plan import (LM_PLAN_SEQ, InfeasiblePlanError, ScanTile,
+                        lm_kernel_shapes, lm_plan_footprints, plan_lm)
+
+__all__ = [
+    "InfeasiblePlanError", "LM_PLAN_SEQ", "ScanTile", "lm_kernel_shapes",
+    "lm_plan_footprints", "plan_lm", "ssm_scan_tiles",
+]

@@ -78,14 +78,18 @@ def _chunk_scan(abar, bx, h0):
 
 def mamba_core(p, x, cfg, method="autodiff",
                state: Optional[dict] = None, pos=None,
-               use_pallas: bool = False):
+               use_pallas: bool = False, scan_tile=None):
     """x: [B, S, d] -> (out [B, S, d], new_state|None).
 
     state = {"h": [B, di, N] f32, "conv": [B, k-1, di]} for decode.
     ``use_pallas`` routes the full-sequence scan through the
     state-stationary Pallas kernel (kernels/ssm_scan) — the TPU serving
     hot path; its backward falls back to the sequential reference, so the
-    training path keeps the chunked XLA scan.
+    training path keeps the chunked XLA scan.  ``scan_tile`` is a planned
+    ``(d_tile, chunk)`` pair for that kernel's launch grid (implies the
+    Pallas path; grid splits are bitwise-neutral for the scan, so a planned
+    launch computes the same bits as the default one); ``use_pallas=True``
+    alone keeps the kernel's default knobs.
     """
     b, s, d = x.shape
     di, n = cfg.d_inner, cfg.ssm_state
@@ -115,10 +119,12 @@ def mamba_core(p, x, cfg, method="autodiff",
         h_last = h_new
         y = jnp.einsum("bdn,bn->bd", h_new,
                        cmat[:, 0].astype(jnp.float32))[:, None].astype(x.dtype)
-    elif use_pallas:
+    elif use_pallas or scan_tile is not None:
         from repro.kernels.ssm_scan import ops as scan_ops
+        d_tile, chunk = scan_tile if scan_tile is not None else (None, None)
         y, h_last = scan_ops.selective_scan(
-            dt.astype(jnp.float32), xc, bmat, cmat, a, h_init)
+            dt.astype(jnp.float32), xc, bmat, cmat, a, h_init,
+            d_tile=d_tile, chunk=chunk)
         y = y.astype(x.dtype)
     else:
         # Chunked selective scan with the discretization (abar, bx) AND the

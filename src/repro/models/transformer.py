@@ -108,7 +108,7 @@ def _cross_attend(p, x, cfg, cache, enc_out, method):
 
 def _block(p, x, cfg, kind: str, *, rope_cs, window: int, method: str,
            cache=None, pos=None, enc_out=None, causal=True,
-           triangle_skip=True):
+           triangle_skip=True, scan_tile=None):
     """One layer. Returns (x, new_cache_slice, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = layers.apply_norm(p["norm1"], x, cfg.norm)
@@ -116,7 +116,8 @@ def _block(p, x, cfg, kind: str, *, rope_cs, window: int, method: str,
 
     if kind == "mamba":
         out, new_state = mamba.mamba_core(p["mixer"], h, cfg, method,
-                                          state=cache, pos=pos)
+                                          state=cache, pos=pos,
+                                          scan_tile=scan_tile)
         return x + out, new_state, aux
 
     if kind == "hybrid":
@@ -128,7 +129,8 @@ def _block(p, x, cfg, kind: str, *, rope_cs, window: int, method: str,
         if attn_cache is not None:
             a, attn_cache = a
         sout, ssm_state = mamba.mamba_core(p["ssm"], h, cfg, method,
-                                           state=ssm_state, pos=pos)
+                                           state=ssm_state, pos=pos,
+                                           scan_tile=scan_tile)
         # hymba: mean of per-branch-normalized outputs
         mix = 0.5 * (layers.apply_norm(p["norm_attn"], a, cfg.norm)
                      + layers.apply_norm(p["norm_ssm"], sout, cfg.norm))
@@ -181,15 +183,23 @@ def _remat(fn, cfg):
 
 
 def _run_segments(params, cfg, x, *, rope_cs, method, caches=None, pos=None,
-                  enc_out=None, causal=True, remat=True, triangle_skip=True):
-    """Scan each homogeneous segment; returns (x, new_caches, aux_total)."""
+                  enc_out=None, causal=True, remat=True, triangle_skip=True,
+                  scan_tiles=None):
+    """Scan each homogeneous segment; returns (x, new_caches, aux_total).
+
+    ``scan_tiles`` is an optional per-SEGMENT dict ``{si: (d_tile, chunk)}``
+    of planned SSM launch knobs (``lax.scan`` stacks the layers within a
+    segment, so the knob granularity is the segment, not the layer).
+    """
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = [] if caches is not None else None
     for si, (kind, count, window) in enumerate(cfg.layer_plan()):
         seg_p = params["segments"][si]
         seg_c = caches[si] if caches is not None else None
+        seg_tile = scan_tiles.get(si) if scan_tiles else None
 
-        def body(carry, xs, kind=kind, window=window, seg_has_cache=seg_c is not None):
+        def body(carry, xs, kind=kind, window=window,
+                 seg_has_cache=seg_c is not None, seg_tile=seg_tile):
             xx, aux_acc = carry
             if seg_has_cache:
                 lp, lc = xs
@@ -198,7 +208,8 @@ def _run_segments(params, cfg, x, *, rope_cs, method, caches=None, pos=None,
             xx, nc, aux = _block(lp, xx, cfg, kind, rope_cs=rope_cs,
                                  window=window, method=method, cache=lc,
                                  pos=pos, enc_out=enc_out, causal=causal,
-                                 triangle_skip=triangle_skip)
+                                 triangle_skip=triangle_skip,
+                                 scan_tile=seg_tile)
             return (xx, aux_acc + aux), nc
 
         fn = _remat(body, cfg) if remat else body
@@ -256,8 +267,12 @@ def encode(params, cfg, frames, method="autodiff"):
 
 def forward_from_embeddings(params, cfg: ModelConfig, h, *, method="autodiff",
                             enc_frames=None, remat=True, causal=True,
-                            triangle_skip=True):
-    """Backbone from embeddings -> (logits, aux). The attribution entry."""
+                            triangle_skip=True, scan_tiles=None):
+    """Backbone from embeddings -> (logits, aux). The attribution entry.
+
+    ``scan_tiles`` routes SSM segments through the planned Pallas scan
+    (``{segment_index: (d_tile, chunk)}``); None keeps the XLA chunked scan.
+    """
     h = constrain(h.astype(cfg.jdtype), "batch", None, None)
     s = h.shape[1]
     rope_cs = layers.rope_tables(jnp.arange(s), cfg.hd, cfg.rope_theta)
@@ -266,7 +281,8 @@ def forward_from_embeddings(params, cfg: ModelConfig, h, *, method="autodiff",
         enc_out = encode(params, cfg, enc_frames, method)
     x, _, aux = _run_segments(params, cfg, h, rope_cs=rope_cs, method=method,
                               enc_out=enc_out, causal=causal, remat=remat,
-                              triangle_skip=triangle_skip)
+                              triangle_skip=triangle_skip,
+                              scan_tiles=scan_tiles)
     x = layers.apply_norm(params["final_norm"], x, cfg.norm)
     logits = layers.lm_head(params["embed"], x, cfg)
     return logits, aux

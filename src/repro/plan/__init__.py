@@ -33,21 +33,26 @@ in :mod:`repro.kernels` consumes the planned block shapes::
 from repro.plan.cache import TuningCache, cache_key, default_cache_path
 from repro.plan.model import (Footprint, conv2d_bwd_footprint,
                               conv2d_fwd_footprint, pool_footprint,
-                              vmm_bwd_footprint, vmm_fwd_footprint)
-from repro.plan.planner import (ConvTile, InfeasiblePlanError, TilePlan,
-                                VmmBwdTile, VmmTile, cnn_kernel_shapes,
-                                cnn_plan_footprints, plan_cnn, plan_conv2d,
-                                plan_vmm, shard_batch_seeds)
+                              ssm_scan_footprint, vmm_bwd_footprint,
+                              vmm_fwd_footprint)
+from repro.plan.planner import (LM_PLAN_SEQ, ConvTile, InfeasiblePlanError,
+                                ScanTile, TilePlan, VmmBwdTile, VmmTile,
+                                cnn_kernel_shapes, cnn_plan_footprints,
+                                lm_kernel_shapes, lm_plan_footprints,
+                                plan_cnn, plan_conv2d, plan_lm, plan_vmm,
+                                shard_batch_seeds)
 from repro.plan.profiles import (PROFILES, DeviceProfile, MeshProfile,
                                  detect, get_profile, mesh_profile,
                                  profile_names)
 
 __all__ = [
     "ConvTile", "DeviceProfile", "Footprint", "InfeasiblePlanError",
-    "MeshProfile", "PROFILES", "TilePlan", "TuningCache", "VmmBwdTile",
-    "VmmTile", "cache_key", "cnn_kernel_shapes", "cnn_plan_footprints",
-    "conv2d_bwd_footprint", "conv2d_fwd_footprint", "default_cache_path",
-    "detect", "get_profile", "mesh_profile", "plan_cnn", "plan_conv2d",
-    "plan_vmm", "pool_footprint", "profile_names", "shard_batch_seeds",
-    "vmm_bwd_footprint", "vmm_fwd_footprint",
+    "LM_PLAN_SEQ", "MeshProfile", "PROFILES", "ScanTile", "TilePlan",
+    "TuningCache", "VmmBwdTile", "VmmTile", "cache_key",
+    "cnn_kernel_shapes", "cnn_plan_footprints", "conv2d_bwd_footprint",
+    "conv2d_fwd_footprint", "default_cache_path", "detect", "get_profile",
+    "lm_kernel_shapes", "lm_plan_footprints", "mesh_profile", "plan_cnn",
+    "plan_conv2d", "plan_lm", "plan_vmm", "pool_footprint", "profile_names",
+    "shard_batch_seeds", "ssm_scan_footprint", "vmm_bwd_footprint",
+    "vmm_fwd_footprint",
 ]

@@ -67,7 +67,8 @@ class TuningCache:
     @staticmethod
     def valid_entry(entry: Any) -> bool:
         """Schema check for one cache entry: a dict whose ``tile`` is a
-        short list of positive ints (ConvTile=1, VmmBwdTile=2, VmmTile=3).
+        short list of positive ints (ConvTile=1, VmmBwdTile/ScanTile=2,
+        VmmTile=3).
         Anything else — a scribbled value, a truncated write, a foreign
         tool's record — is treated as absent, never decoded."""
         if not isinstance(entry, dict):

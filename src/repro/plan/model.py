@@ -207,3 +207,48 @@ def pool_footprint(n: int, h: int, w: int, c: int,
         hbm_bytes=n * (x_blk + y_blk + idx_blk),
         flops=0,
         mxu_util=1.0)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan family (selective-scan recurrence; repro.kernels.ssm_scan)
+# ---------------------------------------------------------------------------
+
+
+def ssm_scan_footprint(b: int, s: int, d: int, n: int,
+                       d_tile: int = None, chunk: int = None,
+                       precision: str = "f32") -> Footprint:
+    """One (batch, d-tile, chunk) grid cell of :func:`selective_scan_pallas`.
+
+    The scan is a VPU recurrence (no MXU dots), so like
+    :func:`pool_footprint` it reports ``flops=0`` / full ``mxu_util`` and is
+    ranked purely by memory traffic — smaller chunks reload the per-channel
+    A matrix and the carried state more often, so the planner prefers the
+    largest (chunk, d_tile) pair that fits the budget.
+
+    Block accounting mirrors the kernel's BlockSpecs exactly: dt is cast to
+    f32 at the call site (4 B regardless of ``precision``), x/y ride the
+    operand dtype, B/C/A/h blocks and the h scratch are f32.  ``d_tile=None``
+    models the UNPLANNED launch (the whole ``d`` axis in one cell — what the
+    attribution step runs without a plan); ``chunk=None`` defaults the chunk
+    length to the full sequence.
+    """
+    elt = _elt(precision)
+    dt_t = min(d_tile if d_tile is not None else d, d)
+    ck = min(chunk if chunk is not None else s, s)
+    n_chunks = -(-s // ck)
+    dt_blk = ck * dt_t * 4                  # dt cast to f32 at the call site
+    x_blk = ck * dt_t * elt
+    bc_blk = 2 * ck * n * 4                 # B and C blocks, f32
+    a_blk = dt_t * n * 4
+    h0_blk = dt_t * n * 4
+    scr = dt_t * n * 4                      # carried-state VMEM scratch
+    y_blk = ck * dt_t * elt
+    hl_blk = dt_t * n * 4
+    cells = b * (d // dt_t if d % dt_t == 0 else -(-d // dt_t)) * n_chunks
+    loads = dt_blk + x_blk + bc_blk + a_blk + h0_blk
+    return Footprint(
+        vmem_bytes=(dt_blk + x_blk + bc_blk + a_blk + h0_blk + scr
+                    + y_blk + hl_blk),
+        hbm_bytes=cells * loads + b * n_chunks * ck * d * elt + b * d * n * 4,
+        flops=0,
+        mxu_util=1.0)

@@ -71,6 +71,18 @@ class VmmBwdTile:
 
 
 @dataclass(frozen=True)
+class ScanTile:
+    """(d_tile, chunk) pair of the selective-scan kernel: how many channels
+    ride one grid cell and how many timesteps one sequential chunk covers.
+    Grid splits are bitwise-neutral for the scan (each (d, n) element's
+    per-timestep trajectory is computed in the same op order regardless of
+    the split), so the knob trades VMEM for HBM reloads, never numerics."""
+
+    d_tile: int
+    chunk: int
+
+
+@dataclass(frozen=True)
 class TilePlan:
     """Frozen mapping ``layer-kernel key -> tile`` for one device target.
 
@@ -107,10 +119,13 @@ def _encode_tile(tile) -> List[int]:
         return [tile.co_tile]
     if isinstance(tile, VmmTile):
         return [tile.tm, tile.tk, tile.tn]
+    if isinstance(tile, ScanTile):
+        return [tile.d_tile, tile.chunk]
     return [tile.tk, tile.tn]
 
 
-_TILE_ARITY = {"conv2d_fwd": 1, "conv2d_bwd": 1, "vmm_fwd": 3, "vmm_bwd": 2}
+_TILE_ARITY = {"conv2d_fwd": 1, "conv2d_bwd": 1, "vmm_fwd": 3, "vmm_bwd": 2,
+               "ssm_scan": 2}
 
 
 def _decode_tile(family: str, blob) -> Any:
@@ -125,6 +140,8 @@ def _decode_tile(family: str, blob) -> Any:
         return ConvTile(*vals)
     if family == "vmm_fwd":
         return VmmTile(*vals)
+    if family == "ssm_scan":
+        return ScanTile(*vals)
     return VmmBwdTile(*vals)
 
 
@@ -206,6 +223,18 @@ def measure_kernel(family: str, kw: Dict[str, Any], tile,
         fn = jax.jit(functools.partial(op, relu_mask=mask, gate=gated,
                                        tk=tile.tk, tn=tile.tn))
         return _measure_us(lambda: fn(g, w))
+    if family == "ssm_scan":
+        from repro.kernels.ssm_scan.ssm_scan import selective_scan_pallas
+        b, s, d, n = kw["b"], kw["s"], kw["d"], kw["n"]
+        dt_ = jnp.zeros((b, s, d), jnp.float32)   # call site casts dt to f32
+        x = jnp.zeros((b, s, d), dt)
+        bm = jnp.zeros((b, s, n), jnp.float32)
+        cm = jnp.zeros((b, s, n), jnp.float32)
+        a = jnp.zeros((d, n), jnp.float32)
+        h0 = jnp.zeros((b, d, n), jnp.float32)
+        fn = jax.jit(functools.partial(selective_scan_pallas,
+                                       d_tile=tile.d_tile, chunk=tile.chunk))
+        return _measure_us(lambda: fn(dt_, x, bm, cm, a, h0))
     raise ValueError(f"unknown kernel family {family!r}")
 
 
@@ -241,6 +270,12 @@ def _footprint(family: str, kw: Dict[str, Any], tile, precision: str,
     if family == "pool":
         return cost.pool_footprint(kw["n"], kw["h"], kw["w"], kw["c"],
                                    precision=precision)
+    if family == "ssm_scan":
+        return cost.ssm_scan_footprint(
+            kw["b"], kw["s"], kw["d"], kw["n"],
+            tile.d_tile if tile is not None else None,
+            tile.chunk if tile is not None else kw["chunk_default"],
+            precision=precision)
     raise ValueError(f"unknown kernel family {family!r}")
 
 
@@ -258,6 +293,13 @@ def _candidates(family: str, kw: Dict[str, Any]) -> List[Any]:
         tks = pow2_span(LANE, align_up(kw["k"], LANE))
         tns = pow2_span(LANE, align_up(kw["n"], LANE))
         return [VmmBwdTile(tk, tn) for tk in tks for tn in tns]
+    if family == "ssm_scan":
+        # d_tile must DIVIDE the channel axis (the kernel asserts it);
+        # chunk lengths are free pow2s — the kernel pads the tail chunk.
+        d = kw["d"]
+        dts = [t for t in pow2_span(SUBLANE, d) if d % t == 0]
+        cks = pow2_span(SUBLANE, align_up(kw["s"], SUBLANE))
+        return [ScanTile(dt, ck) for dt in dts for ck in cks]
     raise ValueError(f"no tile candidates for family {family!r}")
 
 
@@ -266,6 +308,8 @@ def _tile_volume(tile) -> int:
         return tile.co_tile
     if isinstance(tile, VmmTile):
         return tile.tm * tile.tk * tile.tn
+    if isinstance(tile, ScanTile):
+        return tile.d_tile * tile.chunk
     return tile.tk * tile.tn
 
 
@@ -435,6 +479,95 @@ def cnn_plan_footprints(cfg, plan: Optional[TilePlan], *,
         batch, seeds = shard_batch_seeds(batch, seeds, profile.n_shards)
     out = {}
     for key, family, kw in cnn_kernel_shapes(cfg, batch, seeds):
+        tile = plan.get(key) if plan is not None else None
+        out[key] = _footprint(family, kw, tile, precision, profile.mxu)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# whole-model planning (the LM attribution stack)
+# ---------------------------------------------------------------------------
+
+#: sequence length the engine plans LM kernels at.  The scan's per-cell
+#: VMEM is sequence-independent once ``chunk <= s`` (the kernel clamps
+#: ``ck = min(chunk, s)``), so one planning length serves every bucket.
+LM_PLAN_SEQ = 128
+
+
+def lm_kernel_shapes(cfg, batch: int = 1, seq: int = LM_PLAN_SEQ):
+    """Every planned kernel launch of the LM attribution stack, in segment
+    order: ``(key, family, shape-kwargs)`` triples.
+
+    Today that is one ``ssm_scan`` launch per mamba/hybrid segment of
+    ``cfg.layer_plan()`` (the chunk-length knob is the first LM knob — the
+    attention/FFN matmuls stay on XLA and are follow-on work).
+    ``chunk_default`` records the config's unplanned chunk length so the
+    tile=None footprint models the launch the step runs without a plan.
+    """
+    out = []
+    for si, (kind, _count, _window) in enumerate(cfg.layer_plan()):
+        if kind in ("mamba", "hybrid"):
+            out.append((f"ssm{si}.scan", "ssm_scan",
+                        dict(b=batch, s=seq, d=cfg.d_inner, n=cfg.ssm_state,
+                             chunk_default=cfg.ssm_chunk)))
+    return out
+
+
+def plan_lm(cfg, device=None, precision: str = "f32", *, batch: int = 1,
+            seq: int = LM_PLAN_SEQ, autotune: bool = False,
+            cache: Optional[TuningCache] = None) -> TilePlan:
+    """Plan the LM attribution stack's Pallas launches for ``device``,
+    mirroring :func:`plan_cnn`: enumerate aligned (d_tile, chunk)
+    candidates per ssm segment, reject over-budget ones, rank by the cost
+    model, optionally refine by measurement, raise
+    :class:`InfeasiblePlanError` when nothing fits.
+
+    No ``fxp16``: the LM stack is a float (f32/bf16) path — token
+    attribution runs through ``jax.vjp``, not the int16 manual backward.
+    """
+    if precision not in ("f32", "bf16"):
+        raise ValueError(f"plan_lm supports precision f32|bf16, "
+                         f"got {precision!r}")
+    profile = get_profile(device)
+    if isinstance(profile, MeshProfile):
+        batch, _ = shard_batch_seeds(batch, 1, profile.n_shards)
+    dtype = PLAN_DTYPES[precision]
+    entries = []
+    for key, family, kw in lm_kernel_shapes(cfg, batch, seq):
+        ck = None
+        if cache is not None:
+            sig = [int(v) for v in kw.values()]
+            ck = cache_key(family, sig, dtype, precision, profile.name)
+            hit = cache.lookup(ck, require_measured=autotune)
+            if hit is not None:
+                try:
+                    entries.append((key, _decode_tile(family, hit["tile"])))
+                    continue
+                except (KeyError, TypeError, ValueError):
+                    pass        # wrong-family blob: replan + store over it
+        tile, measured = _plan_family(family, kw, profile, precision,
+                                      autotune)
+        if cache is not None:
+            cache.store(ck, {"family": family, "tile": _encode_tile(tile),
+                             "measured_us": measured})
+        entries.append((key, tile))
+    return TilePlan(device=profile.name, precision=precision,
+                    entries=tuple(entries))
+
+
+def lm_plan_footprints(cfg, plan: Optional[TilePlan], *,
+                       precision: str = "f32", batch: int = 1,
+                       seq: int = LM_PLAN_SEQ, profile=None
+                       ) -> Dict[str, cost.Footprint]:
+    """Analytic footprint of every LM kernel launch under ``plan`` (None
+    entries model the unplanned whole-D launch) — the budget audit the
+    acceptance tests check, mirroring :func:`cnn_plan_footprints`."""
+    profile = get_profile(profile if profile is not None
+                          else (plan.device if plan else None))
+    if isinstance(profile, MeshProfile):
+        batch, _ = shard_batch_seeds(batch, 1, profile.n_shards)
+    out = {}
+    for key, family, kw in lm_kernel_shapes(cfg, batch, seq):
         tile = plan.get(key) if plan is not None else None
         out[key] = _footprint(family, kw, tile, precision, profile.mxu)
     return out

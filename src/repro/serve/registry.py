@@ -181,6 +181,62 @@ class SmoothGrad(Explainer):
             backward=self.backward)
 
 
+class _TokenEngine(Explainer):
+    """Token-level LM explainers (:mod:`repro.lm`): sequences in, per-token
+    scores out.
+
+    Engine-bound only: ``attribute`` dispatches through
+    ``Engine.explain_tokens`` (the jitted FP + input-gradient BP token
+    step, running the engine's planned SSM scan) — there is no raw-callable
+    form, because the token seeding lives inside the compiled step.
+
+    ``mask_reuse = False`` by construction: the token stack exposes no
+    replayable residual pair (decode-loop KV/residual reuse is the roadmap
+    stretch), so a cache hit must never serve these.  The explained target
+    is always the model's own next-token prediction (argmax — and for the
+    contrastive mode, argmax vs runner-up); explicit per-request targets
+    are rejected rather than silently ignored.
+    """
+
+    rules = "saliency"
+    mask_reuse = False
+    token_capable = True
+    mode = "ixg"
+
+    def attribute(self, x, *, target=None, key=None):
+        if self.engine is None:
+            raise ValueError(
+                f"{self.name} rides an LM engine; construct via "
+                f"from_engine (the repro.lm.LMAdapter server path)")
+        if target is not None:
+            raise ValueError(
+                f"{self.name} explains the model's own next-token "
+                f"prediction; explicit targets are not supported")
+        return self.engine.explain_tokens({"tokens": x}, mode=self.mode)
+
+
+@register("token_saliency")
+class TokenSaliency(_TokenEngine):
+    """L2 norm of the embedding gradient per position (pure saliency)."""
+
+    mode = "grad_norm"
+
+
+@register("token_ixg")
+class TokenIxG(_TokenEngine):
+    """Input x gradient per position (signed; the default LM heatmap)."""
+
+    mode = "ixg"
+
+
+@register("token_contrastive")
+class TokenContrastive(_TokenEngine):
+    """Why the predicted token rather than the runner-up — one
+    difference-seeded BP (``e_argmax - e_runner_up``)."""
+
+    mode = "contrastive"
+
+
 class _Perturb(Explainer):
     """Gradient-free perturbation methods (:mod:`repro.perturb`).
 

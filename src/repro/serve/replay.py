@@ -38,8 +38,9 @@ from repro.serve.api import EXPLAIN, PREDICT, Request, ShedError
 from repro.serve.stats import percentile
 
 __all__ = [
-    "DEFAULT_MIX", "TraceEvent", "synthesize", "VirtualClock", "CostModel",
-    "SimAdapter", "TimedAdapter", "ReplayReport", "replay",
+    "DEFAULT_MIX", "LM_EXPLAIN", "LM_SEQ_LENS", "TraceEvent", "synthesize",
+    "VirtualClock", "CostModel", "SimAdapter", "TimedAdapter", "ReplayReport",
+    "replay",
 ]
 
 # default (kind, method, topk) mix: weights need not sum to 1
@@ -53,6 +54,19 @@ DEFAULT_MIX: Dict[Tuple[str, str, Optional[int]], float] = {
     (EXPLAIN, "smoothgrad", None): 0.03,
 }
 
+#: Trace-level request kind for token-level LM attribution.  The server
+#: only knows PREDICT | EXPLAIN; an ``lm_explain`` mix entry synthesizes an
+#: EXPLAIN event whose payload is a TOKEN SEQUENCE — ``seq_len`` drawn from
+#: a pow2 bucket distribution instead of a fixed image shape — routed to
+#: the LM server of a mixed CNN+LM replay (see :func:`replay`'s
+#: ``lm_server``).
+LM_EXPLAIN = "lm_explain"
+
+#: Default pow2 sequence-length buckets for ``lm_explain`` traffic —
+#: matches :func:`repro.lm.bucket_len`'s grid so every synthetic length is
+#: already a batcher bucket.
+LM_SEQ_LENS: Tuple[int, ...] = (8, 16, 32)
+
 
 @dataclass(frozen=True)
 class TraceEvent:
@@ -65,6 +79,7 @@ class TraceEvent:
     x_id: int = 0                   # index into the replay's example pool
     deadline_s: Optional[float] = None
     key_seed: Optional[int] = None  # PRNG seed for stochastic methods
+    seq_len: Optional[int] = None   # token-sequence length (LM traffic)
 
 
 def synthesize(n: int, *, rate: float = 2000.0, arrivals: str = "poisson",
@@ -74,7 +89,8 @@ def synthesize(n: int, *, rate: float = 2000.0, arrivals: str = "poisson",
                follow_predict_frac: float = 0.5,
                burst_factor: float = 8.0, burst_len_s: float = 0.05,
                idle_len_s: float = 0.2,
-               x_pool: int = 64) -> List[TraceEvent]:
+               x_pool: int = 64,
+               lm_seq_lens: Tuple[int, ...] = LM_SEQ_LENS) -> List[TraceEvent]:
     """Deterministic trace of ``n`` arrivals at mean ``rate`` req/s.
 
     ``arrivals="poisson"`` draws exponential inter-arrival gaps;
@@ -84,6 +100,15 @@ def synthesize(n: int, *, rate: float = 2000.0, arrivals: str = "poisson",
     ``follow_predict_frac`` of explain events reuse the uid of an earlier
     predict (residual-cache hit traffic); ``deadline_s`` maps kind ->
     latency budget (default: none).  Same seed, same trace.
+
+    Mix entries may use the :data:`LM_EXPLAIN` kind (token-level LM
+    attribution, e.g. ``(LM_EXPLAIN, "token_saliency", None)``): those
+    synthesize EXPLAIN events with ``seq_len`` drawn uniformly from the
+    ``lm_seq_lens`` pow2 buckets — a sequence-length distribution instead
+    of an image shape.  LM explains never alias predict uids (token
+    explainers are mask_reuse=False: there is no residual to hit) and take
+    their deadline from ``deadline_s["lm_explain"]``, falling back to the
+    plain explain envelope.
     """
     if arrivals not in ("poisson", "bursty"):
         raise ValueError(f"arrivals must be poisson|bursty, got {arrivals!r}")
@@ -113,9 +138,17 @@ def synthesize(n: int, *, rate: float = 2000.0, arrivals: str = "poisson",
                 1.0 / (burst_rate if phase < burst_len_s else idle_rate))
         kind, method, topk = classes[rng.choice(len(classes), p=weights)]
         uid = f"r{i}"
+        seq_len = None
+        if kind == LM_EXPLAIN:
+            kind = EXPLAIN
+            seq_len = int(lm_seq_lens[rng.randint(len(lm_seq_lens))])
+            dl = deadline_s.get(LM_EXPLAIN, deadline_s.get(EXPLAIN))
+        else:
+            dl = deadline_s.get(kind)
         if kind == PREDICT:
             predict_uids.append(uid)
-        elif predict_uids and rng.rand() < follow_predict_frac:
+        elif (seq_len is None and predict_uids
+                and rng.rand() < follow_predict_frac):
             # explain-after-predict traffic has temporal locality: draw
             # from the most recent predicts so the residual cache (an LRU)
             # sees realistic hit pressure rather than uniform history.
@@ -123,9 +156,10 @@ def synthesize(n: int, *, rate: float = 2000.0, arrivals: str = "poisson",
             uid = predict_uids[rng.randint(lo, len(predict_uids))]
         events.append(TraceEvent(
             t=t, uid=uid, kind=kind, method=method, topk=topk,
-            x_id=rng.randint(x_pool), deadline_s=deadline_s.get(kind),
+            x_id=rng.randint(x_pool), deadline_s=dl,
             key_seed=(i if kind == EXPLAIN
-                      and registry.get(method).needs_key else None)))
+                      and registry.get(method).needs_key else None),
+            seq_len=seq_len))
     return events
 
 
@@ -314,6 +348,38 @@ class TimedAdapter:
     def manual_backward(self, rules: str):
         return self.inner.manual_backward(rules)
 
+    def __getattr__(self, name):
+        # TOKEN adapters (repro.lm.LMAdapter) only: expose engine_for so
+        # the server's registry token explainers ride a clock-advancing
+        # engine wrapper.  Image adapters deliberately keep engine_for
+        # hidden — composites must ride the timed model_fn closure above,
+        # and exposing engine_for would reroute them around the timing.
+        if (name == "engine_for" and self.input_kind == "tokens"
+                and hasattr(self.inner, "engine_for")):
+            def engine_for(rules: str) -> "_TimedLMEngine":
+                return _TimedLMEngine(self.inner.engine_for(rules),
+                                      self.clock)
+            return engine_for
+        raise AttributeError(name)
+
+
+class _TimedLMEngine:
+    """Engine facade for :class:`TimedAdapter` over an LM engine: the
+    token-explain program's measured wall time advances the virtual clock
+    (same contract as the image paths' timed closures)."""
+
+    def __init__(self, eng, clock: VirtualClock):
+        self._eng = eng
+        self.clock = clock
+        self.model_fn = eng.model_fn                # None for LM engines
+        self.composite_backward = eng.composite_backward
+
+    def explain_tokens(self, batch, *, mode: str = "ixg"):
+        t0 = perf_counter()
+        out = self._eng.explain_tokens(batch, mode=mode)
+        self.clock.advance(perf_counter() - t0)
+        return out
+
 
 @dataclass
 class ReplayReport:
@@ -370,8 +436,8 @@ class ReplayReport:
 def replay(server, trace: List[TraceEvent], *,
            example_shape: Tuple[int, ...] = (8, 8, 1),
            x_pool: int = 64, seed: int = 0,
-           make_x: Optional[Callable[[TraceEvent], np.ndarray]] = None
-           ) -> ReplayReport:
+           make_x: Optional[Callable[[TraceEvent], np.ndarray]] = None,
+           lm_server=None, lm_vocab: int = 256) -> ReplayReport:
     """Drive ``server`` (whose clock must be a :class:`VirtualClock`)
     through ``trace``; returns the folded :class:`ReplayReport`.
 
@@ -380,14 +446,40 @@ def replay(server, trace: List[TraceEvent], *,
     ``arrive_t`` with the TRUE arrival, submits, and polls.  Submit-time
     sheds are counted, never raised out.  Payloads come from a seeded pool
     of ``x_pool`` distinct examples unless ``make_x`` overrides.
+
+    Mixed CNN+LM traffic: events with ``seq_len`` set (synthesized from
+    :data:`LM_EXPLAIN` mix entries) carry seeded int32 token payloads —
+    one pool of ``x_pool`` sequences PER length bucket, ids below
+    ``lm_vocab`` — and are routed to ``lm_server`` (an
+    :class:`~repro.serve.server.ExplanationServer` on an LM adapter,
+    typically :class:`TimedAdapter`-wrapped, sharing THIS replay's clock).
+    Without an ``lm_server`` they fall through to ``server`` — a
+    single-server LM replay when every event is LM, an error otherwise
+    (the report's error count, not a crash: the server fault-isolates).
+    Cache/occupancy fields always come from the primary ``server``; LM
+    explains contribute latency percentiles and the shared queue-depth
+    peak.
     """
     clock = server.clock
     if not isinstance(clock, VirtualClock):
         raise TypeError("replay needs a server built on a VirtualClock")
+    if lm_server is not None and lm_server.clock is not clock:
+        raise ValueError("lm_server must share the primary server's clock "
+                         "(one virtual timeline)")
     import jax
 
     rng = np.random.RandomState(seed)
     pool = rng.randn(x_pool, *example_shape).astype(np.float32)
+    tok_pools: Dict[int, np.ndarray] = {}
+
+    def _tokens(ev: TraceEvent) -> np.ndarray:
+        s = int(ev.seq_len)
+        if s not in tok_pools:
+            r = np.random.RandomState(seed + 7919 * s)
+            tok_pools[s] = r.randint(
+                0, lm_vocab, size=(x_pool, s)).astype(np.int32)
+        return tok_pools[s][ev.x_id % x_pool]
+
     rep = ReplayReport()
     deadlines: Dict[str, float] = {}
     t_start = clock()
@@ -408,18 +500,26 @@ def replay(server, trace: List[TraceEvent], *,
             if dl is not None and resp.latency_s > dl:
                 rep.deadline_misses += 1
 
+    servers = [server] if lm_server is None else [server, lm_server]
     for ev in trace:
         clock.t = max(clock.t, ev.t)
         rep.offered += 1
+        if make_x is not None:
+            x = make_x(ev)
+        elif ev.seq_len is not None:
+            x = _tokens(ev)
+        else:
+            x = pool[ev.x_id % x_pool]
+        target = (lm_server if ev.seq_len is not None and lm_server is not None
+                  else server)
         req = Request(
-            uid=ev.uid, kind=ev.kind, x=pool[ev.x_id % x_pool]
-            if make_x is None else make_x(ev),
+            uid=ev.uid, kind=ev.kind, x=x,
             method=ev.method, topk=ev.topk, deadline_s=ev.deadline_s,
             key=(jax.random.PRNGKey(ev.key_seed)
                  if ev.key_seed is not None else None))
         req.arrive_t = ev.t
         try:
-            server.submit(req)
+            target.submit(req)
             if ev.deadline_s is not None:
                 deadlines[ev.uid] = ev.deadline_s
         except ShedError as e:
@@ -427,10 +527,12 @@ def replay(server, trace: List[TraceEvent], *,
             rep.sheds_by_reason[e.reason] = (
                 rep.sheds_by_reason.get(e.reason, 0) + 1)
             continue
-        for resp in server.poll():
+        for srv in servers:
+            for resp in srv.poll():
+                account(resp)
+    for srv in servers:
+        for resp in srv.drain():
             account(resp)
-    for resp in server.drain():
-        account(resp)
 
     snap = server.stats.snapshot()
     cache = server.cache.stats
@@ -439,5 +541,9 @@ def replay(server, trace: List[TraceEvent], *,
     rep.mean_occupancy = snap["mean_occupancy"]
     rep.peak_queue_depth = snap["peak_queue_depth"]
     rep.degrades = snap["degrades"]
+    if lm_server is not None:
+        rep.peak_queue_depth = max(
+            rep.peak_queue_depth,
+            lm_server.stats.snapshot()["peak_queue_depth"])
     rep.makespan_s = clock() - t_start
     return rep

@@ -1,0 +1,272 @@
+"""repro.lm subsystem: step-wise decode, per-generated-token attribution,
+the LMAdapter serve path (sequence-length bucketing), and mixed CNN+LM
+load replay."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro import engine as engine_lib
+from repro import lm as lm_lib
+from repro.models import transformer as tf
+from repro.serve import ExplanationServer, Request, registry
+from repro.serve.api import EXPLAIN, PREDICT
+
+CFG = configs.get_smoke("falcon-mamba-7b")
+TOKEN_METHODS = ("token_saliency", "token_ixg", "token_contrastive")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return tf.init(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    return jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, CFG.vocab)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def test_decode_greedy_shapes_and_determinism(params, prompts):
+    r = lm_lib.decode(params, CFG, prompts, max_new=5)
+    assert r.tokens.shape == (2, 17) and r.tokens.dtype == jnp.int32
+    assert r.runners_up.shape == (2, 5)
+    assert r.generated.shape == (2, 5)
+    assert r.prompt_len == 12
+    np.testing.assert_array_equal(np.asarray(r.tokens[:, :12]),
+                                  np.asarray(prompts))
+    # the runner-up is by construction a DIFFERENT token than the sampled one
+    assert np.all(np.asarray(r.generated) != np.asarray(r.runners_up))
+    r2 = lm_lib.decode(params, CFG, prompts, max_new=5)
+    np.testing.assert_array_equal(np.asarray(r2.tokens),
+                                  np.asarray(r.tokens))
+
+
+def test_decode_temperature_sampling(params, prompts):
+    r = lm_lib.decode(params, CFG, prompts, max_new=4, temperature=0.8,
+                      key=jax.random.PRNGKey(3))
+    assert r.tokens.shape == (2, 16) and r.runners_up.shape == (2, 4)
+    assert np.all(np.asarray(r.generated) != np.asarray(r.runners_up))
+    # same key, same draw; different key may differ
+    r2 = lm_lib.decode(params, CFG, prompts, max_new=4, temperature=0.8,
+                       key=jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(r2.tokens),
+                                  np.asarray(r.tokens))
+    with pytest.raises(ValueError):
+        lm_lib.decode(params, CFG, prompts, max_new=0)
+
+
+# ---------------------------------------------------------------------------
+# per-generated-token attribution
+# ---------------------------------------------------------------------------
+
+
+def test_explain_generated_shapes_and_causality(params, prompts):
+    r = lm_lib.decode(params, CFG, prompts, max_new=3)
+    scores = lm_lib.explain_generated(params, CFG, r)
+    s0, s_full = r.prompt_len, r.tokens.shape[1]
+    assert scores.shape == (2, 3, s_full)
+    # the seed for generated token t sits at position s0-1+t; causality
+    # makes everything strictly after it EXACTLY zero
+    sc = np.asarray(scores)
+    for t in range(3):
+        tail = sc[:, t, s0 + t:]
+        np.testing.assert_array_equal(tail, np.zeros_like(tail))
+        assert np.any(sc[:, t, :s0 + t] != 0.0)
+
+
+def test_contrastive_equals_ixg_difference(params, prompts):
+    """Gradients are linear in the seed: the one-pass difference-seeded
+    contrastive score equals ixg(target_a) - ixg(target_b)."""
+    ixg = lm_lib.make_token_explain(CFG, mode="ixg")
+    con = lm_lib.make_token_explain(CFG, mode="contrastive")
+    pos = jnp.asarray(prompts.shape[1] - 1, jnp.int32)
+    ta = jnp.full((2,), 3, jnp.int32)
+    tb = jnp.full((2,), 7, jnp.int32)
+    s_a = ixg(params, prompts, pos, ta, tb)
+    s_b = ixg(params, prompts, pos, tb, ta)
+    s_c = con(params, prompts, pos, ta, tb)
+    np.testing.assert_allclose(np.asarray(s_c),
+                               np.asarray(s_a) - np.asarray(s_b),
+                               atol=1e-4)
+
+
+def test_make_token_explain_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="mode"):
+        lm_lib.make_token_explain(CFG, mode="shapley")
+
+
+# ---------------------------------------------------------------------------
+# sequence-length buckets
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_len_pow2_grid():
+    assert lm_lib.bucket_len(5) == 8
+    assert lm_lib.bucket_len(8) == 8
+    assert lm_lib.bucket_len(9) == 16
+    assert lm_lib.bucket_len(100) == 128
+    assert lm_lib.bucket_len(1) == lm_lib.MIN_BUCKET
+
+
+def test_pad_tokens_left_pads_to_bucket():
+    t = np.arange(1, 6, dtype=np.int32)              # length 5 -> bucket 8
+    p = lm_lib.pad_tokens(t)
+    assert p.shape == (8,)
+    np.testing.assert_array_equal(np.asarray(p[:3]),
+                                  np.full(3, lm_lib.PAD_ID))
+    np.testing.assert_array_equal(np.asarray(p[3:]), t)
+    b = lm_lib.pad_tokens(np.stack([t, t]), 16)       # [B, S] + explicit len
+    assert b.shape == (2, 16)
+    with pytest.raises(ValueError, match="pad"):
+        lm_lib.pad_tokens(t, 4)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+def test_explain_tokens_needs_lm_spec():
+    eng = engine_lib.build(engine_lib.EngineSpec(
+        model=engine_lib.FnModel(
+            lambda m: lambda x: x.reshape(x.shape[0], -1))))
+    with pytest.raises(ValueError, match="LMModel"):
+        eng.explain_tokens({"tokens": np.zeros((1, 8), np.int32)})
+
+
+def test_lm_spec_rejects_perturb_method(params):
+    with pytest.raises(ValueError, match="token BP"):
+        engine_lib.build(engine_lib.EngineSpec(
+            model=engine_lib.LMModel(params, CFG), method="occlusion"))
+
+
+def test_planned_engine_bitwise_equals_default(params, prompts):
+    """test_plan_fidelity's contract on the LM path: the edge-small scan
+    chunking changes launch shape, never values — jit vs jit, bitwise."""
+    model = engine_lib.LMModel(params, CFG)
+    planned = engine_lib.build(engine_lib.EngineSpec(
+        model=model, device="edge-small"))
+    default = engine_lib.build(engine_lib.EngineSpec(model=model))
+    assert planned.plan is not None and len(planned.plan) > 0
+    assert default.plan is None
+    for mode in ("ixg", "grad_norm", "contrastive"):
+        lg_p, sc_p = planned.explain_tokens({"tokens": prompts}, mode=mode)
+        lg_d, sc_d = default.explain_tokens({"tokens": prompts}, mode=mode)
+        np.testing.assert_array_equal(np.asarray(lg_p), np.asarray(lg_d))
+        np.testing.assert_array_equal(np.asarray(sc_p), np.asarray(sc_d))
+
+
+def test_registry_token_explainer_contract(params, prompts):
+    adapter = lm_lib.LMAdapter(params, CFG)
+    eng = adapter.engine_for("saliency")
+    expl = registry.get("token_ixg").from_engine(eng)
+    lg_r, sc_r = expl.attribute(prompts)
+    lg_e, sc_e = eng.explain_tokens({"tokens": prompts}, mode="ixg")
+    np.testing.assert_array_equal(np.asarray(sc_r), np.asarray(sc_e))
+    np.testing.assert_array_equal(np.asarray(lg_r), np.asarray(lg_e))
+    # the explained target is always the model's own prediction
+    with pytest.raises(ValueError, match="target"):
+        expl.attribute(prompts, target=1)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def test_server_round_trip_all_token_methods(params):
+    adapter = lm_lib.LMAdapter(params, CFG)
+    assert adapter.example_shape is None
+    srv = ExplanationServer(adapter, max_batch=4, max_delay_s=0.0)
+    rng = np.random.RandomState(0)
+    reqs = []
+    for li, length in enumerate((8, 16)):
+        for mi, method in enumerate(TOKEN_METHODS):
+            toks = rng.randint(0, CFG.vocab, size=length).astype(np.int32)
+            reqs.append(Request(uid=f"q{li}{mi}", kind=EXPLAIN, x=toks,
+                                method=method))
+    reqs.append(Request(uid="p0", kind=PREDICT,
+                        x=rng.randint(0, CFG.vocab, size=8).astype(np.int32)))
+    out = srv.serve(reqs)
+    assert len(out) == 7
+    for li, length in enumerate((8, 16)):
+        for mi, _ in enumerate(TOKEN_METHODS):
+            r = out[f"q{li}{mi}"]
+            assert r.ok, r.error
+            assert not r.cache_hit
+            assert r.logits.shape == (CFG.vocab,)
+            assert r.relevance.shape == (length,)
+            assert np.all(np.isfinite(np.asarray(r.relevance)))
+    p = out["p0"]
+    assert p.ok and p.logits.shape == (CFG.vocab,)
+
+
+def test_server_rejects_topk_on_token_methods(params):
+    srv = ExplanationServer(lm_lib.LMAdapter(params, CFG), max_batch=2,
+                            max_delay_s=0.0)
+    toks = np.zeros(8, np.int32)
+    with pytest.raises(ValueError, match="topk"):
+        srv.submit(Request(uid="a", kind=EXPLAIN, x=toks,
+                           method="token_saliency", topk=3))
+
+
+def test_explain_cached_refuses(params):
+    with pytest.raises(ValueError, match="residual"):
+        lm_lib.LMAdapter(params, CFG).explain_cached("saliency", None, None)
+
+
+# ---------------------------------------------------------------------------
+# mixed CNN+LM load replay
+# ---------------------------------------------------------------------------
+
+
+def test_replay_mixed_cnn_lm_traffic(params):
+    from repro.serve.replay import (LM_EXPLAIN, SimAdapter, TimedAdapter,
+                                    VirtualClock, replay, synthesize)
+    mix = {
+        (PREDICT, "", None): 0.4,
+        (EXPLAIN, "saliency", None): 0.3,
+        (LM_EXPLAIN, "token_saliency", None): 0.2,
+        (LM_EXPLAIN, "token_contrastive", None): 0.1,
+    }
+    tr = synthesize(60, rate=50.0, seed=5, mix=mix, x_pool=8,
+                    lm_seq_lens=(8, 16))
+    lm_events = [e for e in tr if e.seq_len is not None]
+    assert lm_events, "mix must yield LM traffic"
+    # LM entries surface as plain EXPLAIN events with a bucketed seq_len
+    assert all(e.kind == EXPLAIN and e.seq_len in (8, 16)
+               for e in lm_events)
+    assert {e.seq_len for e in lm_events} == {8, 16}
+    assert synthesize(60, rate=50.0, seed=5, mix=mix, x_pool=8,
+                      lm_seq_lens=(8, 16)) == tr
+
+    clock = VirtualClock()
+    cnn_srv = ExplanationServer(SimAdapter(clock), clock=clock,
+                                max_batch=4, max_delay_s=0.0)
+    lm_srv = ExplanationServer(
+        TimedAdapter(lm_lib.LMAdapter(params, CFG), clock), clock=clock,
+        max_batch=2, max_delay_s=0.0)
+    rep = replay(cnn_srv, tr, x_pool=8, lm_server=lm_srv,
+                 lm_vocab=CFG.vocab)
+    assert rep.errors == 0
+    assert rep.offered == 60
+    # no deadlines in this trace: nothing sheds, everything completes
+    assert rep.completed == 60 and rep.shed_submit == rep.shed_queue == 0
+
+
+def test_replay_rejects_mismatched_lm_clock():
+    from repro.serve.replay import (SimAdapter, VirtualClock, replay,
+                                    synthesize)
+    c1, c2 = VirtualClock(), VirtualClock()
+    s1 = ExplanationServer(SimAdapter(c1), clock=c1, max_batch=2,
+                           max_delay_s=0.0)
+    s2 = ExplanationServer(SimAdapter(c2), clock=c2, max_batch=2,
+                           max_delay_s=0.0)
+    with pytest.raises(ValueError, match="clock"):
+        replay(s1, synthesize(4, rate=10.0, seed=0), lm_server=s2)

@@ -11,11 +11,13 @@ import time
 
 import pytest
 
+import repro.configs as configs
 from repro.kernels.tiling import LANE, SUBLANE, align_up
 from repro.models import cnn
 from repro.plan import (InfeasiblePlanError, TuningCache,
                         cnn_plan_footprints, conv2d_fwd_footprint,
-                        get_profile, plan_cnn, plan_vmm, profile_names,
+                        get_profile, lm_plan_footprints, plan_cnn, plan_lm,
+                        plan_vmm, profile_names, ssm_scan_footprint,
                         vmm_fwd_footprint)
 from repro.plan import planner as planner_mod
 from tests._hypothesis_compat import given, settings, st
@@ -326,6 +328,91 @@ def test_cnn_plan_always_legal(hw, ch, fc, classes, seeds, device,
         # pool/patch term) exceeds the budget at every candidate
         return
     _assert_plan_legal(cfg, plan, profile, precision, seeds=seeds)
+
+
+# ---------------------------------------------------------------------------
+# LM planning: the ssm_scan chunk-length knob
+# ---------------------------------------------------------------------------
+
+
+def test_ssm_scan_footprint_shrinks_with_tiles():
+    """Chunking bounds VMEM: the whole-D whole-chunk launch holds the full
+    per-(d, chunk) working set; (d_tile, chunk) splits shrink it."""
+    whole = ssm_scan_footprint(1, 128, 8192, 16, chunk=128)
+    tiled = ssm_scan_footprint(1, 128, 8192, 16, d_tile=1024, chunk=128)
+    assert tiled.vmem_bytes < whole.vmem_bytes
+    shorter = ssm_scan_footprint(1, 128, 8192, 16, d_tile=1024, chunk=64)
+    assert shorter.vmem_bytes < tiled.vmem_bytes
+
+
+def test_lm_unplanned_full_arch_infeasible_on_edge_small_plan_fits():
+    """The PR's acceptance property: the full mamba arch's UNPLANNED scan
+    footprint (whole-D, config chunk) blows the edge-small budget; plan_lm
+    picks an (d_tile, chunk) that fits it."""
+    full = configs.get("falcon-mamba-7b")
+    profile = get_profile("edge-small")
+    unplanned = lm_plan_footprints(full, None, profile=profile)
+    assert len(unplanned) > 0
+    assert not all(fp.fits(profile) for fp in unplanned.values())
+
+    plan = plan_lm(full, device="edge-small")
+    assert plan.device == "edge-small" and len(plan) == len(unplanned)
+    planned = lm_plan_footprints(full, plan, profile=profile)
+    assert all(fp.fits(profile) for fp in planned.values())
+    for key, tile in plan.entries:
+        assert tile.d_tile % SUBLANE == 0 and tile.chunk % SUBLANE == 0
+        assert full.d_inner % tile.d_tile == 0
+
+
+def test_plan_lm_dense_arch_has_no_scan_kernels():
+    dense = configs.get_smoke("qwen2-1.5b")
+    assert len(plan_lm(dense, device="edge-small")) == 0
+
+
+def test_plan_lm_infeasible_state_raises():
+    from repro.models.config import ModelConfig
+    monster = ModelConfig(name="t", family="ssm", n_layers=1, d_model=64,
+                          n_heads=2, n_kv=2, d_ff=0, vocab=64,
+                          ssm_state=40000, ssm_chunk=16, dtype="float32")
+    with pytest.raises(InfeasiblePlanError):
+        plan_lm(monster, device="edge-small")
+
+
+def test_plan_lm_rejects_fxp16():
+    cfg = configs.get_smoke("falcon-mamba-7b")
+    with pytest.raises(ValueError, match="f32|bf16"):
+        plan_lm(cfg, device="edge-small", precision="fxp16")
+
+
+def test_plan_lm_cache_roundtrip(tmp_path):
+    cfg = configs.get_smoke("falcon-mamba-7b")
+    cache = TuningCache(str(tmp_path / "tiles.json"))
+    plan1 = plan_lm(cfg, device="edge-small", cache=cache)
+    assert len(plan1) > 0
+    assert cache.hits == 0 and cache.misses == len(plan1)
+    warm = TuningCache(cache.path)                 # fresh process view
+    plan2 = plan_lm(cfg, device="edge-small", cache=warm)
+    assert warm.misses == 0 and warm.hits == len(plan1)
+    assert plan2 == plan1
+
+
+def test_plan_lm_autotune_measures_scan_candidates(tmp_path, monkeypatch):
+    calls = []
+
+    def fake_measure(family, kw, tile, precision):
+        calls.append(family)
+        return 1.0
+
+    monkeypatch.setattr(planner_mod, "measure_kernel", fake_measure)
+    cfg = configs.get_smoke("falcon-mamba-7b")
+    cache = TuningCache(str(tmp_path / "tiles.json"))
+    plan1 = plan_lm(cfg, device="edge-small", autotune=True, cache=cache)
+    assert calls and set(calls) == {"ssm_scan"}
+    calls.clear()
+    warm = TuningCache(cache.path)
+    plan2 = plan_lm(cfg, device="edge-small", autotune=True, cache=warm)
+    assert not calls, "cache hits must not re-measure"
+    assert plan2 == plan1
 
 
 # ---------------------------------------------------------------------------

@@ -37,12 +37,14 @@ def make_server(adapter, **kw):
 def test_registry_lists_every_method():
     names = registry.names()
     for m in ("saliency", "deconvnet", "guided", "input_x_gradient",
-              "integrated_gradients", "smoothgrad"):
+              "integrated_gradients", "smoothgrad", "token_saliency",
+              "token_ixg", "token_contrastive"):
         assert m in names
     assert set(registry.mask_reuse_methods()) == {
         "saliency", "deconvnet", "guided"}
     assert set(registry.token_methods()) == {
-        "saliency", "deconvnet", "guided"}
+        "saliency", "deconvnet", "guided",
+        "token_saliency", "token_ixg", "token_contrastive"}
     with pytest.raises(KeyError):
         registry.get("no_such_method")
 
